@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: wall-clock timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (the harness
+contract) and, where the paper gives a published anchor, a
+``# paper: ...`` comparison line.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (jit-compiled callables)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.2f},{derived}")

@@ -1,0 +1,32 @@
+"""Paper Fig 11 — layer-wise latency/energy breakdown, L3FLASH vs L1MRAM,
+with the three execution regimes (balanced / compute / weight-memory)."""
+
+import collections
+
+from repro.core.perf_model import mnv2_scenario_table
+
+from benchmarks.common import row
+
+
+def main() -> None:
+    print("# Fig 11: per-layer regimes; derived = compute/weight/act ms + regime")
+    tab = mnv2_scenario_table()
+    for sc in ("l3flash", "l1mram"):
+        _, _, timings = tab[sc]
+        regimes = collections.Counter(t.regime for t in timings)
+        row(f"fig11.{sc}.regimes", 0.0, str(dict(regimes)))
+        for t in timings[:6] + timings[-6:]:
+            row(f"fig11.{sc}.{t.name}", t.latency_s * 1e6,
+                f"cmp={t.compute_s*1e3:.3f}ms w={t.weight_s*1e3:.3f}ms "
+                f"act={t.act_s*1e3:.3f}ms {t.regime}")
+    # the paper's 6.5x energy saving on the 6th bottleneck block
+    fl = {t.name: t for t in tab["l3flash"][2]}
+    l1 = {t.name: t for t in tab["l1mram"][2]}
+    name = "b13.pw_proj"   # a deep low-reuse projection layer
+    ratio = fl[name].energy_j / l1[name].energy_j
+    row("fig11.deep_layer_energy_ratio", 0.0,
+        f"{name}: x{ratio:.1f} (paper: up to 6.5x on deep bottlenecks)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Fig 8 — N-EUREKA throughput & energy efficiency per operator.
+
+Two parts:
+  (a) the calibrated silicon model across operators x weight bits x
+      operating points (anchors: 698 GOp/s dense3x3 8b, 1947 GOp/s 2b,
+      8.84 TOp/J peak, 2.68 TOp/J 8b);
+  (b) wall-clock of OUR Pallas kernels in interpret mode on the paper's
+      peak-utilization job shapes (functional check, not TPU perf).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.memsys import LOW_POWER, NOMINAL, neureka_gops
+from repro.kernels import ops
+
+from benchmarks.common import row, time_fn
+
+
+def model_part() -> None:
+    for op_kind in ("dense3x3", "pw1x1", "dw3x3"):
+        for bits in (2, 4, 8):
+            for pt in (NOMINAL, LOW_POWER):
+                gops = neureka_gops(op_kind, bits, pt)
+                # efficiency anchored at the two published points
+                eff = 8.84e12 if (bits == 2 and pt is LOW_POWER) else \
+                    2.68e12 * (8 + 1.353) / (bits + 1.353) * \
+                    (0.65 / pt.voltage) ** -2 * \
+                    (1.0 if pt is LOW_POWER else 0.82)
+                row(f"fig8.{op_kind}.{bits}b.{pt.name}", 0.0,
+                    f"{gops/1e9:.0f}GOp/s {eff/1e12:.2f}TOp/J")
+    row("fig8.anchor.dense3x3_8b", 0.0,
+        f"{neureka_gops('dense3x3', 8)/1e9:.0f}GOp/s (paper 698, ideal 738)")
+    row("fig8.anchor.dense3x3_2b", 0.0,
+        f"{neureka_gops('dense3x3', 2)/1e9:.0f}GOp/s (paper 1947)")
+
+
+def kernel_part() -> None:
+    """Paper's peak-utilization jobs through the real Pallas kernels."""
+    rng = np.random.default_rng(0)
+    # dense 3x3: 6x6 spatial, 252 in ch, 32 out ch (paper III-A)
+    x = jnp.asarray(rng.integers(0, 255, (6, 6, 252)), jnp.uint8)
+    w = jnp.asarray(rng.normal(size=(32, 3, 3, 252)), jnp.float32)
+    for bits in (2, 8):
+        packed, scale = ops.prep_conv3x3(w, bits)
+        mult = jnp.full((32,), 1e-3, jnp.float32)
+        bias = jnp.zeros((32,), jnp.int32)
+        fn = jax.jit(lambda x_, p_, m_, b_, bits=bits: ops.neureka_conv2d(
+            x_, p_, m_, b_, op="dense3x3", bits=bits, cin=252, mode="xla"))
+        us = time_fn(fn, x, packed, mult, bias)
+        macs = 6 * 6 * 9 * 252 * 32
+        row(f"fig8.kernel.dense3x3.{bits}b", us,
+            f"{2*macs/us/1e3:.2f}GOp/s-host (xla path)")
+    # pointwise: 6x6, 224 -> 32
+    x = jnp.asarray(rng.integers(0, 255, (6, 6, 224)), jnp.uint8)
+    w = jnp.asarray(rng.normal(size=(32, 224)), jnp.float32)
+    packed, scale = ops.prep_linear(w, 8)
+    fn = jax.jit(lambda x_, p_: ops.neureka_conv2d(
+        x_, p_, jnp.full((32,), 1e-3, jnp.float32), jnp.zeros((32,), jnp.int32),
+        op="pw1x1", bits=8, cin=224, mode="xla"))
+    us = time_fn(fn, x, packed)
+    row("fig8.kernel.pw1x1.8b", us,
+        f"{2*6*6*224*32/us/1e3:.2f}GOp/s-host")
+
+
+def main() -> None:
+    print("# Fig 8: N-EUREKA ops; model anchors + Pallas kernel functional timing")
+    model_part()
+    kernel_part()
+
+
+if __name__ == "__main__":
+    main()

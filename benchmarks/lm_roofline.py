@@ -1,0 +1,41 @@
+"""LM roofline table — reads the multi-pod dry-run artifacts
+(dryrun_results/*.json) and emits the per-(arch x shape x mesh) roofline:
+three terms, dominant bound, MODEL_FLOPS ratio.  This is the data source
+for EXPERIMENTS.md §Roofline."""
+
+import json
+from pathlib import Path
+
+from benchmarks.common import row
+
+RESULTS = Path(__file__).resolve().parent.parent / "dryrun_results"
+
+
+def main() -> None:
+    print("# LM roofline (from dry-run): terms in seconds per step, per-chip")
+    if not RESULTS.exists():
+        row("lm_roofline.missing", 0.0, "run repro.launch.dryrun first")
+        return
+    recs = []
+    for f in sorted(RESULTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        recs.append((f.stem, r))
+    for name, r in recs:
+        rf = r["roofline"]
+        tot = r.get("cost", {}).get("total_flops") or rf.get("total_flops")
+        uf = (r["model_flops"] / tot) if tot else 0.0
+        row(f"roofline.{name}", rf["step_time_s"] * 1e6,
+            f"bound={rf['bound']} cmp={rf['compute_s']:.2e}s "
+            f"mem={rf['memory_s']:.2e}s coll={rf['collective_s']:.2e}s "
+            f"useful={uf:.2f}")
+    bounds = {}
+    for name, r in recs:
+        b = r["roofline"]["bound"]
+        bounds[b] = bounds.get(b, 0) + 1
+    row("roofline.summary", 0.0, f"cells={len(recs)} bounds={bounds}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig10]
+
+Emits ``name,us_per_call,derived`` CSV rows per the harness contract.
+"""
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (fig7_cluster_matmul, fig8_neureka, fig10_scenarios,
+                        fig11_layerwise, lm_roofline, table1_freq_sweep,
+                        table2_dsp_kernels, table3_soa)
+
+MODULES = [
+    ("table1", table1_freq_sweep),
+    ("table2", table2_dsp_kernels),
+    ("fig7", fig7_cluster_matmul),
+    ("fig8", fig8_neureka),
+    ("fig10", fig10_scenarios),
+    ("fig11", fig11_layerwise),
+    ("table3", table3_soa),
+    ("lm_roofline", lm_roofline),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failed = []
+    for name, mod in MODULES:
+        if args.only and args.only != name:
+            continue
+        print(f"\n### {name} ({mod.__name__})")
+        try:
+            mod.main()
+        except Exception as e:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"\nFAILED benchmarks: {failed}")
+        sys.exit(1)
+    print("\nall benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

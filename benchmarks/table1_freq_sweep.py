@@ -1,0 +1,24 @@
+"""Paper Table I — cluster/MRAM frequency & power vs supply voltage.
+
+Emits the model's four published operating points + the derived
+power-reduction claim (2.2x from 0.8 V to 0.65 V)."""
+
+from repro.core.memsys import TABLE_I
+
+from benchmarks.common import row
+
+
+def main() -> None:
+    print("# Table I: V, cluster MHz, cluster mW (incl MRAM), MRAM MHz, MRAM mW")
+    for op in TABLE_I:
+        row(f"table1.{op.name}", 0.0,
+            f"V={op.voltage} fclk={op.cluster_hz/1e6:.0f}MHz "
+            f"P={op.cluster_power_w*1e3:.0f}mW "
+            f"fmram={op.mram_hz/1e6:.0f}MHz Pmram={op.mram_power_w*1e3:.0f}mW")
+    ratio = TABLE_I[-1].cluster_power_w / TABLE_I[0].cluster_power_w
+    row("table1.power_reduction", 0.0,
+        f"0.8V/0.65V power ratio={ratio:.2f} (paper: 2.2x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Paper Table II — DSP kernels on the RISC-V cluster cores.
+
+The heterogeneous-cluster claim is that DSP work runs beside the neural
+engine; we implement every Table II kernel in JAX (the framework's "DSP
+engine" path), measure wall-clock on this host, and report the paper's
+silicon numbers as the model anchor."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+
+PAPER = {  # kernel: (fp32 GFLOP/s, fp16 GFLOP/s) on Siracusa @360MHz
+    "matmul": (1.08, 2.12), "kmeans": (1.05, 1.68), "svm": (0.37, 0.41),
+    "fir": (0.8, 1.43), "fft": (0.21, 0.33),
+}
+
+
+@functools.partial(jax.jit, static_argnums=())
+def matmul(a, b):
+    return a @ b
+
+
+@jax.jit
+def kmeans_assign(x, cents):
+    d = jnp.sum((x[:, None, :] - cents[None]) ** 2, axis=-1)
+    return jnp.argmin(d, axis=-1)
+
+
+@jax.jit
+def svm_linear(x, w, b):
+    return jnp.sign(x @ w + b)
+
+
+@jax.jit
+def fir(x, taps):
+    return jnp.convolve(x, taps, mode="valid")
+
+
+@jax.jit
+def fft(x):
+    return jnp.fft.fft(x)
+
+
+@jax.jit
+def distortion(img, k1=0.1, k2=0.01):
+    h, w, _ = img.shape
+    yy, xx = jnp.meshgrid(jnp.linspace(-1, 1, h), jnp.linspace(-1, 1, w),
+                          indexing="ij")
+    r2 = xx ** 2 + yy ** 2
+    f = 1 + k1 * r2 + k2 * r2 ** 2
+    xs = jnp.clip(((xx * f + 1) / 2 * (w - 1)).astype(jnp.int32), 0, w - 1)
+    ys = jnp.clip(((yy * f + 1) / 2 * (h - 1)).astype(jnp.int32), 0, h - 1)
+    return img[ys, xs]
+
+
+def main() -> None:
+    print("# Table II: DSP kernels; derived = host GFLOP/s | paper silicon anchors")
+    rng = np.random.default_rng(0)
+    for dt, tag in ((jnp.float32, "fp32"), (jnp.bfloat16, "fp16")):
+        a = jnp.asarray(rng.normal(size=(64, 64)), dt)
+        us = time_fn(matmul, a, a)
+        fl = 2 * 64 ** 3
+        row(f"table2.matmul.{tag}", us,
+            f"host={fl/us/1e3:.2f}GFLOP/s paper={PAPER['matmul'][tag=='fp16']}")
+        x = jnp.asarray(rng.normal(size=(256, 8)), dt)
+        c = jnp.asarray(rng.normal(size=(8, 8)), dt)
+        us = time_fn(kmeans_assign, x, c)
+        fl = 256 * 8 * 8 * 3
+        row(f"table2.kmeans.{tag}", us,
+            f"host={fl/us/1e3:.2f}GFLOP/s paper={PAPER['kmeans'][tag=='fp16']}")
+        xv = jnp.asarray(rng.normal(size=(256,)), dt)
+        w = jnp.asarray(rng.normal(size=(256,)), dt)
+        us = time_fn(svm_linear, xv[None], w, jnp.asarray(0.0, dt))
+        row(f"table2.svm.{tag}", us,
+            f"host={2*256/us/1e3:.3f}GFLOP/s paper={PAPER['svm'][tag=='fp16']}")
+        sig = jnp.asarray(rng.normal(size=(4096,)), dt)
+        taps = jnp.asarray(rng.normal(size=(9,)), dt)
+        us = time_fn(fir, sig, taps)
+        row(f"table2.fir.{tag}", us,
+            f"host={2*9*4088/us/1e3:.2f}GFLOP/s paper={PAPER['fir'][tag=='fp16']}")
+    sig = jnp.asarray(rng.normal(size=(4096,)), jnp.float32)
+    us = time_fn(fft, sig)
+    fl = 5 * 4096 * 12  # ~5N log2 N
+    row("table2.fft.fp32", us,
+        f"host={fl/us/1e3:.2f}GFLOP/s paper={PAPER['fft'][0]}")
+    img = jnp.asarray(rng.integers(0, 255, (128, 128, 3)), jnp.uint8)
+    us = time_fn(distortion, img)
+    row("table2.distortion.int", us,
+        f"host={128*128/us/1e3:.3f}Gpix/s paper=0.26Gpix/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Quickstart: the At-MRAM pipeline end-to-end in two minutes on CPU.
+
+1. train a tiny LM (reduced qwen3 family config),
+2. freeze it into the packed At-MRAM WeightStore (2/4/8-bit),
+3. serve batched requests through the fused dequant path,
+4. show the density gain + scenario comparison that is the paper's point.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import SyntheticLMDataset
+from repro.launch.steps import make_train_step
+from repro.models import transformer as tfm
+from repro.optim import adamw
+from repro.parallel.sharding import freeze_for_serving
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    cfg = get_config("qwen3-0.6b").smoke()
+    print(f"config: {cfg.name} (reduced) — {cfg.n_layers}L d{cfg.d_model}")
+
+    # 1. train
+    opt = adamw()
+    step = jax.jit(make_train_step(cfg, opt, lr=1e-3))
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    ds = SyntheticLMDataset(cfg.vocab_size, 64, 8, seed=0)
+    for i in range(30):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
+        params, opt_state, m = step(params, opt_state, batch)
+        if i % 10 == 0:
+            print(f"  step {i:3d} loss {float(m['loss']):.4f}")
+    print(f"  final loss {float(m['loss']):.4f}")
+
+    # 2. freeze into the packed store ("MRAM programming")
+    for bits in (8, 4):
+        packed = freeze_for_serving(params, bits=bits)
+        dense_b = sum(l.size * l.dtype.itemsize
+                      for l in jax.tree_util.tree_leaves(params))
+        packed_b = sum(l.size * l.dtype.itemsize
+                       for l in jax.tree_util.tree_leaves(packed))
+        print(f"  W{bits}: {dense_b/1e6:.2f} MB dense -> {packed_b/1e6:.2f} MB "
+              f"packed ({dense_b/packed_b:.1f}x density, the MRAM advantage)")
+
+    # 3. serve through the fused At-MRAM path
+    packed = freeze_for_serving(params, bits=8)
+    eng = ServingEngine(cfg, packed, batch_slots=4, max_len=128,
+                        engine=dict(scenario="l1mram", mode="xla", bits=8))
+    rng = np.random.default_rng(0)
+    for uid in range(6):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                           max_new_tokens=8))
+    done = eng.run_until_done()
+    print(f"  served {len(done)} requests "
+          f"({sum(len(r.generated) for r in done)} tokens)")
+
+    # 4. all four NVM scenarios give identical numerics, different bytes
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 16)), jnp.int32)
+    outs = {}
+    for sc in ("l1mram", "l2mram", "l3mram"):
+        outs[sc] = tfm.forward(packed, tokens, cfg,
+                               engine=dict(scenario=sc, mode="xla", bits=8))
+    drift = max(float(jnp.max(jnp.abs(outs[s] - outs["l1mram"])))
+                for s in outs)
+    print(f"  scenario numerics drift: {drift:.2e} (identical math, "
+          f"different weight paths — Fig 9 of the paper)")
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

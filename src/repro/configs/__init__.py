@@ -1,0 +1,25 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+MobileNet-V2 workload).  ``get_config(name)`` / ``ARCHS`` are the public API
+(the --arch flag of the launchers resolves here)."""
+
+from repro.configs import shapes
+from repro.configs.qwen3_0_6b import CONFIG as _qwen3
+from repro.configs.qwen2_5_3b import CONFIG as _qwen25
+from repro.configs.olmo_1b import CONFIG as _olmo
+from repro.configs.gemma_7b import CONFIG as _gemma
+from repro.configs.whisper_tiny import CONFIG as _whisper
+from repro.configs.qwen2_moe_a2_7b import CONFIG as _qwen2moe
+from repro.configs.arctic_480b import CONFIG as _arctic
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.falcon_mamba_7b import CONFIG as _falcon
+from repro.configs.llava_next_34b import CONFIG as _llava
+
+ARCHS = {c.name: c for c in (
+    _qwen3, _qwen25, _olmo, _gemma, _whisper, _qwen2moe, _arctic, _hymba,
+    _falcon, _llava)}
+
+
+def get_config(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]

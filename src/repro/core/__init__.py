@@ -1,0 +1,9 @@
+# The paper's primary contribution — the At-MRAM neural engine substrate:
+# NEMO quantization, sub-byte packing, the packed WeightStore (MRAM
+# analogue), virtual weight paging, the four NVM integration scenarios,
+# and the calibrated Siracusa memory-system model.
+from repro.core import (engine, memsys, packing, paging, perf_model,
+                        quantize, scenarios, weight_store)
+
+__all__ = ["engine", "memsys", "packing", "paging", "perf_model",
+           "quantize", "scenarios", "weight_store"]

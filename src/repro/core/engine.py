@@ -1,0 +1,57 @@
+"""NeuralEngine — the heterogeneous-cluster dispatch (paper §II-A).
+
+Siracusa pairs N-EUREKA (quantized conv engine) with 8 RISC-V DSP cores in
+one cluster sharing L1.  The framework analogue: every compute site declares
+an *engine*:
+
+  "neureka" — quantized path: packed weights (WeightStore), fused dequant
+              kernels, scenario-selectable weight placement.
+  "dsp"     — float path: plain XLA ops (norms, softmax, rotary, SSM scans,
+              anything the quantized engine doesn't cover).
+
+Both paths read/write the same activation arrays with no layout conversion
+(zero-copy collaboration).  EngineConfig is threaded through the model zoo;
+the dry-run uses mode="xla" so GSPMD sees plain HLO, tests use
+mode="interpret" to execute the real Pallas kernel bodies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scenarios
+from repro.core.weight_store import PackedParam
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    engine: str = "dsp"           # "neureka" | "dsp"
+    scenario: str = "l1mram"      # weight placement for the neureka path
+    mode: str = "xla"             # kernel mode: pallas | interpret | xla
+    weight_bits: int = 8          # default packing precision
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
+
+
+DSP = EngineConfig(engine="dsp")
+NEUREKA = EngineConfig(engine="neureka")
+
+
+def linear(x: jax.Array, w, cfg: EngineConfig, *, out_dtype=None) -> jax.Array:
+    """y = x @ W^T.  ``w`` is a PackedParam (neureka) or a dense (N, K) array
+    (dsp).  Dense weights passed to a neureka engine raise — the packed
+    store is the only weight source the accelerator reads (MRAM semantics).
+    """
+    if isinstance(w, PackedParam):
+        return scenarios.linear_apply(x, w, scenario=cfg.scenario,
+                                      mode=cfg.mode, out_dtype=out_dtype)
+    if cfg.engine == "neureka":
+        raise TypeError("neureka engine requires packed weights "
+                        "(freeze the params into a WeightStore first)")
+    out = jnp.matmul(x, w.T)
+    return out.astype(out_dtype) if out_dtype is not None else out

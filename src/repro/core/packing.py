@@ -1,0 +1,120 @@
+"""Sub-byte weight packing — the MRAM density model.
+
+Siracusa's MRAM stores DNN weights at 2-8 bit precision, packed into 256-bit
+rows that the weight streamer reads one per (MRAM) cycle.  On TPU the same
+idea is "packed sub-byte weights in HBM": int2/int4 levels are packed 4x/2x
+per int8 byte so that HBM traffic (the memory roofline term) scales with the
+weight bit-width — the TPU-native equivalent of bit-serial cycle scaling.
+
+Layout: little-endian within a byte; packing runs along the *last* axis
+(the reduction axis for matmuls), which is the axis the streaming kernels
+consume contiguously — exactly like the MRAM's "long streams of adjacent
+addresses" (paper §II-C4).  The packed axis is padded to a multiple of the
+packing factor.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SUPPORTED_BITS = (2, 4, 8)
+
+# One MRAM row in Siracusa = 256 bits; used by the memsys model to count
+# row reads, and by the kernels to keep block shapes row-aligned.
+MRAM_ROW_BITS = 256
+
+
+def packing_factor(bits: int) -> int:
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"packing supports bits in {SUPPORTED_BITS}, got {bits}")
+    return 8 // bits
+
+
+def packed_last_dim(n: int, bits: int) -> int:
+    f = packing_factor(bits)
+    return (n + f - 1) // f
+
+
+def _to_unsigned(levels: jax.Array, bits: int) -> jax.Array:
+    """Map signed levels [-2^(b-1), 2^(b-1)-1] -> unsigned field [0, 2^b-1]."""
+    return (levels.astype(jnp.int32) + (1 << (bits - 1))).astype(jnp.uint8)
+
+
+def _to_signed(field: jax.Array, bits: int) -> jax.Array:
+    return (field.astype(jnp.int32) - (1 << (bits - 1))).astype(jnp.int8)
+
+
+def pack(levels: jax.Array, bits: int) -> jax.Array:
+    """Pack signed integer levels (int8 storage) into a uint8 carrier.
+
+    levels: (..., K) int8 with values in the signed `bits` range.
+    returns: (..., ceil(K / (8//bits))) uint8.
+    """
+    f = packing_factor(bits)
+    if f == 1:
+        # 8-bit: reinterpret sign bit into unsigned carrier for uniformity.
+        return _to_unsigned(levels, 8)
+    *lead, k = levels.shape
+    pad = (-k) % f
+    if pad:
+        levels = jnp.pad(levels, [(0, 0)] * len(lead) + [(0, pad)])
+    u = _to_unsigned(levels, bits).reshape(*lead, (k + pad) // f, f)
+    shifts = (jnp.arange(f, dtype=jnp.uint8) * bits).astype(jnp.uint8)
+    packed = jnp.sum(
+        (u.astype(jnp.uint32) << shifts.astype(jnp.uint32)), axis=-1
+    ).astype(jnp.uint8)
+    return packed
+
+
+def unpack(packed: jax.Array, bits: int, orig_k: int) -> jax.Array:
+    """Inverse of :func:`pack` — returns int8 signed levels of length orig_k."""
+    f = packing_factor(bits)
+    if f == 1:
+        return _to_signed(packed, 8)[..., :orig_k]
+    shifts = (jnp.arange(f, dtype=jnp.uint32) * bits).astype(jnp.uint32)
+    mask = jnp.uint32((1 << bits) - 1)
+    fields = (packed[..., None].astype(jnp.uint32) >> shifts) & mask
+    levels = _to_signed(fields, bits)
+    *lead, kp, _ = levels.shape
+    return levels.reshape(*lead, kp * f)[..., :orig_k]
+
+
+def packed_nbytes(shape: Tuple[int, ...], bits: int) -> int:
+    """Bytes occupied by a packed tensor of the given *unpacked* shape."""
+    *lead, k = shape
+    n = int(np.prod(lead)) if lead else 1
+    return n * packed_last_dim(k, bits)
+
+
+def mram_rows(shape: Tuple[int, ...], bits: int) -> int:
+    """Number of 256-bit MRAM rows the tensor occupies (memsys accounting)."""
+    return -(-packed_nbytes(shape, bits) * 8 // MRAM_ROW_BITS)
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane layout (the bit-serial view).  N-EUREKA fetches weights one bit
+# plane at a time in the 3x3 modes; the memsys cycle model charges
+# `bits` planes per weight block.  We provide the plane decomposition both
+# as documentation of the mechanism and as an alternative kernel layout.
+# ---------------------------------------------------------------------------
+
+def to_bitplanes(levels: jax.Array, bits: int) -> jax.Array:
+    """Decompose signed levels into `bits` binary planes (offset-binary).
+
+    Returns uint8 array (bits, ...) with plane b = bit b of the unsigned
+    offset-binary encoding;  levels = sum_b plane_b * 2^b - 2^(bits-1).
+    """
+    u = _to_unsigned(levels, bits).astype(jnp.uint8)
+    planes = [(u >> b) & 1 for b in range(bits)]
+    return jnp.stack(planes, axis=0)
+
+
+def from_bitplanes(planes: jax.Array, bits: int) -> jax.Array:
+    weights = (2 ** jnp.arange(bits, dtype=jnp.int32)).reshape(
+        (bits,) + (1,) * (planes.ndim - 1))
+    u = jnp.sum(planes.astype(jnp.int32) * weights, axis=0)
+    return (u - (1 << (bits - 1))).astype(jnp.int8)

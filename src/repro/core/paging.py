@@ -1,0 +1,181 @@
+"""Software-assisted virtual weight paging (paper §II-B2).
+
+For networks whose packed weights exceed the resident budget (on Siracusa:
+4 MiB MRAM + 4 MiB tile SRAM = two live pages), the neural memory subsystem
+becomes a page cache over background memory.  A tiny page handler compares
+each access's page index against the live-page registers; on a miss the FC
+programs the IO-DMA to swap the page.  Because DNN weight access order is
+*deterministic*, pages can be swapped **proactively**, hiding swap latency
+behind compute.
+
+TPU-native realization: layer-granular weight pages live in host memory
+("off-chip flash"); a double-buffered prefetcher moves page k+1 host->HBM
+while page k's layers execute.  The same schedule object also drives the
+analytical stall model used by the memsys benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.weight_store import WeightStore, PackedParam, SIRACUSA_MRAM_BYTES
+
+
+@dataclasses.dataclass(frozen=True)
+class Page:
+    index: int
+    param_names: Tuple[str, ...]
+    nbytes: int
+
+
+def build_pages(store: WeightStore, page_bytes: int = SIRACUSA_MRAM_BYTES,
+                order: Optional[Sequence[str]] = None) -> List[Page]:
+    """Greedy first-fit pagination preserving access (layer) order.
+
+    Keeping pages contiguous in access order is what makes proactive
+    prefetch a *static* schedule — the paper's "typically deterministic
+    weight access pattern".
+    """
+    names = list(order) if order is not None else list(store.params.keys())
+    pages: List[Page] = []
+    cur: List[str] = []
+    cur_bytes = 0
+    for name in names:
+        nb = store.params[name].nbytes_packed
+        if nb > page_bytes:
+            raise ValueError(
+                f"param {name} ({nb} B packed) exceeds page size {page_bytes} B; "
+                f"increase page size or split the parameter")
+        if cur and cur_bytes + nb > page_bytes:
+            pages.append(Page(len(pages), tuple(cur), cur_bytes))
+            cur, cur_bytes = [], 0
+        cur.append(name)
+        cur_bytes += nb
+    if cur:
+        pages.append(Page(len(pages), tuple(cur), cur_bytes))
+    return pages
+
+
+@dataclasses.dataclass
+class PageScheduleEntry:
+    page: int
+    prefetch_next: Optional[int]     # page to start swapping in while this runs
+    evicts: Optional[int]            # page slot being overwritten
+
+
+@dataclasses.dataclass
+class StallModel:
+    """Analytical stall accounting for a paged execution.
+
+    swap_time(page)   = page.nbytes / swap_bandwidth
+    compute_time(page) given by the caller per page;  a swap started at the
+    beginning of page k's compute hides min(compute_k, swap_{k+1}).
+    """
+    swap_bandwidth_bytes_per_s: float
+
+    def run(self, pages: Sequence[Page],
+            compute_time_s: Sequence[float]) -> Dict[str, float]:
+        assert len(pages) == len(compute_time_s)
+        total_compute = float(sum(compute_time_s))
+        stall = 0.0
+        # first page: cold miss, full swap cost
+        stall += pages[0].nbytes / self.swap_bandwidth_bytes_per_s
+        for k in range(1, len(pages)):
+            swap = pages[k].nbytes / self.swap_bandwidth_bytes_per_s
+            hidden = min(swap, compute_time_s[k - 1])
+            stall += swap - hidden
+        return dict(total_compute_s=total_compute, stall_s=stall,
+                    total_s=total_compute + stall,
+                    stall_fraction=stall / max(total_compute + stall, 1e-12))
+
+
+def make_schedule(n_pages: int, resident_slots: int = 2) -> List[PageScheduleEntry]:
+    """Static proactive-prefetch schedule over a linear page access order."""
+    entries: List[PageScheduleEntry] = []
+    for k in range(n_pages):
+        nxt = k + 1 if k + 1 < n_pages else None
+        # with S slots, prefetching page k+1 evicts page k+1-S
+        ev = (k + 1 - resident_slots) if (nxt is not None and k + 1 - resident_slots >= 0) else None
+        entries.append(PageScheduleEntry(page=k, prefetch_next=nxt, evicts=ev))
+    return entries
+
+
+def validate_schedule(entries: Sequence[PageScheduleEntry],
+                      resident_slots: int = 2) -> None:
+    """Invariants (property-tested): every page resident before use, the
+    in-use page is never evicted, residency never exceeds the slot count."""
+    resident: List[int] = []
+    for e in entries:
+        if e.page not in resident:
+            resident.append(e.page)      # demand fetch (cold miss)
+        if e.evicts is not None:
+            if e.evicts == e.page:
+                raise AssertionError("schedule evicts the in-use page")
+            if e.evicts in resident:
+                resident.remove(e.evicts)
+        if e.prefetch_next is not None and e.prefetch_next not in resident:
+            resident.append(e.prefetch_next)
+        if len(resident) > resident_slots:
+            raise AssertionError(
+                f"residency {resident} exceeds {resident_slots} slots")
+
+
+class HostPagedStore:
+    """Runtime paged weight streaming: host RAM = background flash, device
+    HBM = the two live pages.  Double-buffered with a worker thread — the
+    software analogue of the FC+IO-DMA proactive swap."""
+
+    def __init__(self, store: WeightStore, page_bytes: int,
+                 device: Optional[jax.Device] = None):
+        self.store = store
+        self.pages = build_pages(store, page_bytes)
+        self.device = device or jax.devices()[0]
+        # evacuate packed params to host numpy (off-chip flash image)
+        self._host: Dict[str, Tuple[np.ndarray, np.ndarray, PackedParam]] = {}
+        for name, p in store.params.items():
+            self._host[name] = (np.asarray(p.packed), np.asarray(p.scale), p)
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self.swap_count = 0
+        self.miss_count = 0
+        self._live: Dict[int, Dict[str, PackedParam]] = {}
+
+    def _fetch_page(self, idx: int) -> Dict[str, PackedParam]:
+        out = {}
+        for name in self.pages[idx].param_names:
+            hp, hs, proto = self._host[name]
+            out[name] = PackedParam(
+                packed=jax.device_put(hp, self.device),
+                scale=jax.device_put(hs, self.device),
+                bits=proto.bits, orig_shape=proto.orig_shape)
+        self.swap_count += 1
+        return out
+
+    def stream(self, resident_slots: int = 2) -> Iterable[Tuple[Page, Dict[str, PackedParam]]]:
+        """Yield (page, device params) in order with proactive prefetch."""
+        sched = make_schedule(len(self.pages), resident_slots)
+        inflight: Dict[int, Future] = {}
+        for e in sched:
+            if e.page in self._live:
+                page_params = self._live[e.page]
+            elif e.page in inflight:
+                page_params = inflight.pop(e.page).result()
+                self._live[e.page] = page_params
+            else:
+                self.miss_count += 1          # demand miss (cold start)
+                page_params = self._fetch_page(e.page)
+                self._live[e.page] = page_params
+            if e.prefetch_next is not None and e.prefetch_next not in self._live:
+                inflight[e.prefetch_next] = self._pool.submit(
+                    self._fetch_page, e.prefetch_next)
+            if e.evicts is not None:
+                self._live.pop(e.evicts, None)
+            yield self.pages[e.page], page_params
+
+    def close(self):
+        self._pool.shutdown(wait=False)

@@ -1,0 +1,75 @@
+"""Network walks for the scenario study (paper §IV, Figs 10-11).
+
+Provides the MobileNet-V2-1.0-224 job list exactly as it maps onto
+N-EUREKA's three operators, and the end-to-end latency/energy walk for the
+four NVM integration scenarios.  Calibration targets (paper):
+
+    L3FLASH : 12.6 ms / 3.8 mJ   (off-chip share of energy ~ 55 %)
+    L3MRAM  : ~0.8x latency of L3FLASH, ~0.5x energy
+    L2MRAM  : 1.2x faster than L3MRAM, energy ~ L3MRAM
+    L1MRAM  :  7.3 ms / 1.4 mJ   (1.7x / 3x vs L3FLASH)
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+from repro.core.memsys import (LayerShape, LayerTiming, NOMINAL, LOW_POWER,
+                               OperatingPoint, network_walk, SCENARIOS)
+
+# MobileNet-V2 inverted-residual stack: (expansion t, cout, repeats n, stride s)
+_MNV2_BLOCKS = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+]
+
+
+def mobilenet_v2_jobs(weight_bits: int = 8, img: int = 224) -> List[LayerShape]:
+    """MobileNet-V2-1.0 as a sequence of N-EUREKA jobs (HWC, 8-bit act)."""
+    jobs: List[LayerShape] = []
+    h = w = img // 2
+    jobs.append(LayerShape("conv0", "dense3x3", img, img, 3, 32, stride=2,
+                           weight_bits=weight_bits))
+    cin = 32
+    bi = 0
+    for t, c, n, s in _MNV2_BLOCKS:
+        for r in range(n):
+            stride = s if r == 0 else 1
+            hid = cin * t
+            tag = f"b{bi}"
+            if t != 1:
+                jobs.append(LayerShape(f"{tag}.pw_exp", "pw1x1", h, w, cin,
+                                       hid, weight_bits=weight_bits))
+            jobs.append(LayerShape(f"{tag}.dw", "dw3x3", h, w, hid, hid,
+                                   stride=stride, weight_bits=weight_bits))
+            if stride == 2:
+                h, w = -(-h // 2), -(-w // 2)
+            jobs.append(LayerShape(f"{tag}.pw_proj", "pw1x1", h, w, hid, c,
+                                   weight_bits=weight_bits))
+            cin = c
+            bi += 1
+    jobs.append(LayerShape("conv_last", "pw1x1", h, w, cin, 1280,
+                           weight_bits=weight_bits))
+    jobs.append(LayerShape("fc", "pw1x1", 1, 1, 1280, 1000,
+                           weight_bits=weight_bits))
+    return jobs
+
+
+def mnv2_scenario_table(op: OperatingPoint = NOMINAL,
+                        weight_bits: int = 8) -> dict:
+    """{scenario: (latency_s, energy_j, [LayerTiming])} — reproduces Fig 10."""
+    jobs = mobilenet_v2_jobs(weight_bits)
+    return {s: network_walk(jobs, s, op) for s in SCENARIOS}
+
+
+def mnv2_total_macs() -> int:
+    return sum(j.macs for j in mobilenet_v2_jobs())
+
+
+def mnv2_weight_bytes(weight_bits: int = 8) -> int:
+    return sum(j.weight_bytes for j in mobilenet_v2_jobs(weight_bits))

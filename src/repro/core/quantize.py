@@ -1,0 +1,186 @@
+"""NEMO-style integer quantization (Conti, arXiv:2004.05930).
+
+Siracusa's N-EUREKA requantizes with a per-output-channel affine projection
+in the *integer* domain:
+
+    y_q = clip( (acc_32b * scale + bias) >> shift , 0, 255 )   (8-bit output)
+
+Weights are quantized symmetric per-output-channel to ``bits`` ∈ [2, 8];
+activations are quantized asymmetric uint8 (the engine consumes 8-bit
+activations).  This module provides:
+
+  * weight quantization  (float -> int levels + per-channel scale)
+  * activation quantization (float -> uint8 + scale/zero-point)
+  * the integer requant projection used by the kernels, and its parameters
+    folded from (w_scale, in_scale, out_scale, float bias)
+  * fake-quant (straight-through) versions for QAT
+
+All functions are pure-jnp and jit-safe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Number of fractional bits used when folding float rescale factors into the
+# integer (mult, shift) pair.  24 bits keeps requant error < 2^-16 relative.
+REQUANT_SHIFT_BITS = 24
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """A symmetric per-channel quantized weight tensor.
+
+    ``values`` holds signed integer *levels* stored in int8 (even when
+    bits < 8 — packing to sub-byte storage is `repro.core.packing`'s job).
+    ``scale`` has one entry per output channel (axis 0 after normalization).
+    """
+
+    values: jax.Array          # int8 levels, same shape as the fp tensor
+    scale: jax.Array           # (out_channels,) float32
+    bits: int
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    def dequantize(self) -> jax.Array:
+        scale = self.scale.reshape((-1,) + (1,) * (self.values.ndim - 1))
+        return self.values.astype(jnp.float32) * scale
+
+
+def weight_qrange(bits: int) -> Tuple[int, int]:
+    """Symmetric signed range for a given bit-width (e.g. 4 -> [-8, 7])."""
+    if not 2 <= bits <= 8:
+        raise ValueError(f"weight bits must be in [2, 8], got {bits}")
+    return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+
+
+def quantize_weights(w: jax.Array, bits: int, channel_axis: int = 0) -> QuantizedTensor:
+    """Symmetric per-channel weight quantization to ``bits`` levels.
+
+    The channel axis is moved to the front so downstream code can always
+    treat axis 0 as the per-channel (= per-requant-parameter) axis.
+    """
+    qmin, qmax = weight_qrange(bits)
+    w = jnp.moveaxis(w, channel_axis, 0)
+    flat = w.reshape(w.shape[0], -1)
+    absmax = jnp.max(jnp.abs(flat), axis=1)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(flat / scale[:, None]), qmin, qmax).astype(jnp.int8)
+    return QuantizedTensor(values=q.reshape(w.shape), scale=scale, bits=bits)
+
+
+def quantize_activations(x: jax.Array, scale: jax.Array | float,
+                         zero_point: jax.Array | int = 0) -> jax.Array:
+    """Asymmetric uint8 activation quantization with a given scale/zp."""
+    q = jnp.round(x / scale) + zero_point
+    return jnp.clip(q, 0, 255).astype(jnp.uint8)
+
+
+def calibrate_activation_scale(x: jax.Array, percentile: float = 100.0) -> Tuple[float, int]:
+    """Pick (scale, zero_point) so that the observed range maps onto [0,255]."""
+    lo = jnp.percentile(x, 100.0 - percentile)
+    hi = jnp.percentile(x, percentile)
+    lo = jnp.minimum(lo, 0.0)
+    hi = jnp.maximum(hi, lo + 1e-8)
+    scale = (hi - lo) / 255.0
+    zp = jnp.clip(jnp.round(-lo / scale), 0, 255).astype(jnp.int32)
+    return scale, zp
+
+
+@dataclasses.dataclass(frozen=True)
+class RequantParams:
+    """Integer-domain requantization parameters (per output channel).
+
+    y_uint8 = clip(((acc_int32 * mult) >> shift) + bias, 0, 255)
+
+    ``mult`` is an int32 fixed-point multiplier, ``shift`` a global right
+    shift (REQUANT_SHIFT_BITS), ``bias`` an int32 per-channel offset that
+    already folds the float bias and the output zero-point.
+    """
+
+    mult: jax.Array    # (C,) int32
+    bias: jax.Array    # (C,) int32
+    shift: int
+
+
+def fold_requant(w_scale: jax.Array, in_scale: jax.Array | float,
+                 out_scale: jax.Array | float, bias_fp: jax.Array | None,
+                 out_zero_point: int = 0) -> RequantParams:
+    """Fold float scales into the NEMO integer (mult, shift, bias) triple.
+
+    acc * (w_scale*in_scale/out_scale) + bias_fp/out_scale + zp
+    """
+    rescale = w_scale * in_scale / out_scale                     # (C,)
+    mult = jnp.round(rescale * (1 << REQUANT_SHIFT_BITS)).astype(jnp.int32)
+    if bias_fp is None:
+        bias_fp = jnp.zeros_like(w_scale)
+    bias = jnp.round(bias_fp / out_scale).astype(jnp.int32) + out_zero_point
+    return RequantParams(mult=mult, bias=bias, shift=REQUANT_SHIFT_BITS)
+
+
+def requantize(acc: jax.Array, rq: RequantParams) -> jax.Array:
+    """Apply the requant projection: int32 accumulators -> uint8.
+
+    Matches N-EUREKA's NORMQUANT unit (per-channel int multiplier, right
+    shift with round-half-up, per-channel bias, clip to [0, 255]).  The
+    48-bit intermediate of the silicon is emulated in float32 — exact to
+    within 1 LSB of the full-integer result for |acc| < 2^24, which the
+    int32 conv accumulators of the supported job shapes satisfy (TPUs have
+    no int64 datapath; tests/test_quantize_packing.py bounds the error
+    against a true-int64 oracle).
+    """
+    rescale = rq.mult.astype(jnp.float32) / jnp.float32(1 << rq.shift)
+    y = jnp.floor(acc.astype(jnp.float32) * rescale + 0.5)
+    y = y + rq.bias.astype(jnp.float32)
+    return jnp.clip(y, 0, 255).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Fake-quant (QAT) — straight-through estimators so training can see the
+# quantization grid the serving path will use.
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+def fake_quant_weights(w: jax.Array, bits: int, channel_axis: int = 0) -> jax.Array:
+    """Differentiable (STE) symmetric per-channel weight fake-quantization."""
+    qmin, qmax = weight_qrange(bits)
+    wm = jnp.moveaxis(w, channel_axis, 0)
+    flat = wm.reshape(wm.shape[0], -1)
+    absmax = jnp.max(jnp.abs(flat), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    q = jnp.clip(_ste_round(flat / scale), qmin, qmax) * scale
+    return jnp.moveaxis(q.reshape(wm.shape), 0, channel_axis)
+
+
+def int8_matmul_reference(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """int8 x int8 -> int32 matmul in integer arithmetic (oracle helper)."""
+    return jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+
+
+def dequant_matmul_reference(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    """Float activations x quantized weights, computed at full precision."""
+    w = qt.dequantize()          # (out, in)
+    return jnp.matmul(x, w.T)

@@ -1,0 +1,69 @@
+"""Executable NVM-integration scenarios (paper §IV Fig 9) for the LM stack.
+
+`repro.core.memsys` models the *SoC*'s four integration points analytically;
+this module gives each scenario an **executable weight path** in the JAX
+framework so the same comparison can be made on the TPU target:
+
+  l1mram  — At-Memory (Siracusa): packed weights stream straight into the
+            fused dequant-matmul kernel; no full-width materialization.
+  l2mram  — shared background memory: weights are unpacked/dequantized by a
+            *separate* op into a full-width buffer that then feeds a plain
+            matmul (one extra full-width HBM round-trip).
+  l3mram  — background L3: like l2mram plus an optimization barrier, forcing
+            the dequantized copy to be materialized (no fusion), i.e. the
+            store-and-forward L3->L2 staging hop.
+  l3flash — weights are not resident at all: the serving loop re-stages each
+            page from host memory ("off-chip flash") every inference via
+            `repro.core.paging.HostPagedStore`.  Inside jit it degrades to
+            l3mram semantics (host transfers can't be expressed in-graph).
+
+All four produce identical numerics (tested); they differ in bytes moved,
+which the roofline/bench harness measures — mirroring the paper's method.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.weight_store import PackedParam
+from repro.kernels import ops as kops
+
+SCENARIOS = ("l3flash", "l3mram", "l2mram", "l1mram")
+
+
+def linear_apply(x: jax.Array, p: PackedParam, *, scenario: str = "l1mram",
+                 mode: str = "xla", out_dtype=None) -> jax.Array:
+    """y = x @ W^T with W stored packed; path selected by scenario.
+
+    x: (..., K) float; p.orig_shape = (N, K).  Returns (..., N).
+    """
+    out_dtype = out_dtype or x.dtype
+    if scenario == "l1mram":
+        out = kops.quant_matmul(x, p.packed, p.scale, bits=p.bits,
+                                k_orig=p.orig_shape[-1], mode=mode)
+    elif scenario in ("l2mram", "l3mram", "l3flash"):
+        w = p.dequantize(jnp.float32)               # full-width buffer
+        if scenario in ("l3mram", "l3flash"):
+            # force materialization (store-and-forward staging hop)
+            w = jax.lax.optimization_barrier(w)
+        out = jnp.matmul(x.astype(jnp.float32), w.T)
+    else:
+        raise ValueError(f"unknown scenario {scenario!r}")
+    return out.astype(out_dtype)
+
+
+def weight_path_bytes(p: PackedParam, scenario: str) -> int:
+    """HBM bytes the weight crosses per use under each scenario (for the
+    analytical comparison; the roofline measures the real compiled value)."""
+    packed = p.nbytes_packed
+    full = int(jnp.prod(jnp.asarray(p.orig_shape))) * 4
+    if scenario == "l1mram":
+        return packed                      # read packed once
+    if scenario == "l2mram":
+        return packed + full               # read packed + write full (fusable read)
+    if scenario in ("l3mram", "l3flash"):
+        return packed + 2 * full           # read packed + write full + read full
+    raise ValueError(scenario)

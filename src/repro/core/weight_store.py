@@ -1,0 +1,162 @@
+"""Packed read-only weight store — the MRAM analogue.
+
+Siracusa dedicates a 4 MiB non-volatile MRAM to DNN weights: written once at
+deployment, then *read-only* at runtime, streamed to the accelerator over a
+dedicated port.  The TPU-native analogue implemented here:
+
+  * ``freeze`` converts a float param pytree into a store of packed sub-byte
+    quantized tensors (+ per-channel scales).  This happens once, offline —
+    the "MRAM programming" step.
+  * At runtime the store is an immutable pytree of device arrays; the fused
+    dequant-matmul kernels stream the packed bytes HBM->VMEM and expand them
+    at the compute unit (see kernels/qmatmul.py).
+  * ``capacity accounting`` mirrors the 4 MiB budget: a store reports its
+    packed footprint, and `repro.core.paging` splits stores larger than the
+    configured resident budget into pages streamed from "background memory"
+    (host / off-accelerator), reproducing §II-B2's virtual paging.
+
+The store is a flat dict keyed by parameter path; leaves are
+``PackedParam`` pytrees so the whole store can be passed through jit/pjit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Iterable, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing, quantize
+
+# The paper's MRAM capacity; default resident budget for paging decisions.
+SIRACUSA_MRAM_BYTES = 4 * 1024 * 1024
+SIRACUSA_TILE_SRAM_BYTES = 4 * 1024 * 1024
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PackedParam:
+    """One packed weight matrix + its dequant metadata (a jit-safe pytree)."""
+
+    packed: jax.Array                 # (..., K_packed) uint8 carrier
+    scale: jax.Array                  # (out_channels,) float32
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    orig_shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def nbytes_packed(self) -> int:
+        return int(np.prod(self.packed.shape))
+
+    @property
+    def nbytes_dense_bf16(self) -> int:
+        return int(np.prod(self.orig_shape)) * 2
+
+    def unpack_levels(self) -> jax.Array:
+        """Materialize int8 levels (reference / non-fused paths)."""
+        return packing.unpack(self.packed, self.bits, self.orig_shape[-1])
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        lv = self.unpack_levels().astype(dtype)
+        scale = self.scale.astype(dtype).reshape(
+            (-1,) + (1,) * (len(self.orig_shape) - 1))
+        return lv * scale
+
+
+def pack_param(w: jax.Array, bits: int, channel_axis: int = 0) -> PackedParam:
+    qt = quantize.quantize_weights(w, bits, channel_axis=channel_axis)
+    return PackedParam(
+        packed=packing.pack(qt.values, bits),
+        scale=qt.scale,
+        bits=bits,
+        orig_shape=tuple(qt.values.shape),
+    )
+
+
+@dataclasses.dataclass
+class WeightStore:
+    """Immutable packed store over a parameter pytree.
+
+    ``params`` maps flat path -> PackedParam for quantized ("MRAM") leaves;
+    ``passthrough`` holds the leaves kept at full precision (norms, biases,
+    embeddings if so configured) — on Siracusa these live in SRAM.
+    """
+
+    params: Dict[str, PackedParam]
+    passthrough: Dict[str, jax.Array]
+
+    # -- capacity accounting ------------------------------------------------
+    @property
+    def packed_bytes(self) -> int:
+        return sum(p.nbytes_packed for p in self.params.values())
+
+    @property
+    def passthrough_bytes(self) -> int:
+        return sum(int(np.prod(v.shape)) * v.dtype.itemsize
+                   for v in self.passthrough.values())
+
+    @property
+    def dense_equivalent_bytes(self) -> int:
+        """What the same weights would occupy unquantized (bf16)."""
+        return (sum(p.nbytes_dense_bf16 for p in self.params.values())
+                + self.passthrough_bytes)
+
+    def density_gain(self) -> float:
+        """MRAM-style density advantage of the packed store (>= 1)."""
+        denom = max(self.packed_bytes + self.passthrough_bytes, 1)
+        return self.dense_equivalent_bytes / denom
+
+    def fits(self, budget_bytes: int = SIRACUSA_MRAM_BYTES) -> bool:
+        return self.packed_bytes <= budget_bytes
+
+    # -- materialization ----------------------------------------------------
+    def dequantized_params(self, dtype=jnp.float32) -> Dict[str, jax.Array]:
+        out = {k: p.dequantize(dtype) for k, p in self.params.items()}
+        out.update(self.passthrough)
+        return out
+
+
+def _flatten_with_paths(tree: Any) -> Dict[str, jax.Array]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out
+
+
+# Heuristic used when no explicit policy is given: quantize every >=2-D
+# matmul-like weight; keep vectors (norm scales, biases) at full precision.
+def default_policy(path: str, leaf: jax.Array) -> Optional[int]:
+    if leaf.ndim >= 2 and leaf.size >= 1024:
+        return 8
+    return None
+
+
+def freeze(params: Any,
+           policy: Callable[[str, jax.Array], Optional[int]] = default_policy,
+           channel_axis: int = 0) -> WeightStore:
+    """Offline "MRAM programming": quantize+pack a trained param pytree.
+
+    ``policy(path, leaf)`` returns the weight bit-width (2/4/8) or None to
+    keep the leaf at full precision.
+    """
+    flat = _flatten_with_paths(params)
+    packed: Dict[str, PackedParam] = {}
+    passthrough: Dict[str, jax.Array] = {}
+    for path, leaf in flat.items():
+        bits = policy(path, leaf)
+        if bits is None:
+            passthrough[path] = leaf
+        else:
+            packed[path] = pack_param(leaf, bits, channel_axis=channel_axis)
+    return WeightStore(params=packed, passthrough=passthrough)
+
+
+def uniform_policy(bits: int, min_size: int = 1024):
+    def _policy(path: str, leaf: jax.Array) -> Optional[int]:
+        if leaf.ndim >= 2 and leaf.size >= min_size:
+            return bits
+        return None
+    return _policy

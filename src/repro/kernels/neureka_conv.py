@@ -1,0 +1,206 @@
+"""N-EUREKA convolution engine as Pallas TPU kernels.
+
+Implements exactly the three operators the silicon supports (paper §II-C):
+3x3 dense, 3x3 depthwise and 1x1 dense convolutions with 8-bit (uint8)
+activations, 2-8-bit weights and the per-channel NORMQUANT requantization.
+Layout is HWC, like the accelerator's L1 activation layout; weights are
+packed along the reduction axis (the MRAM stream order).
+
+Hardware adaptation notes (see DESIGN.md §2):
+  * N-EUREKA is output-stationary with 6x6 PEs over 8x8 input tiles and
+    28-channel input chunks (bandwidth-limited).  The TPU mapping keeps the
+    output-stationary reduction (accumulators in VMEM scratch across the
+    input-channel grid axis) but uses MXU-aligned channel blocks; spatial
+    tiles are row-strips of the feature map, which at XR feature-map sizes
+    fit VMEM whole.
+  * Bit-serial weight arithmetic becomes sub-byte *packed streaming*: HBM
+    traffic scales with the weight bit-width exactly as MRAM cycles do.
+  * Strides 1 and 2 are supported (MobileNet-V2 needs stride 2); striding is
+    applied when gathering the im2col view inside the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.qmatmul import _unpack_block, qmatmul_int8
+
+
+def _requant_f32(acc: jax.Array, mult: jax.Array, bias: jax.Array) -> jax.Array:
+    """NORMQUANT projection: int32 acc -> uint8 (float-rescale formulation)."""
+    y = jnp.round(acc.astype(jnp.float32) * mult) + bias.astype(jnp.float32)
+    return jnp.clip(y, 0.0, 255.0).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# 3x3 dense:  out[h, w, co] = sum_{i,j,ci} x[s*h+i, s*w+j, ci] * W[co, i, j, ci]
+# Grid: (cout blocks, cin blocks); the padded input strip stays whole in VMEM
+# (the INPUTBUFFER analogue); cin is the innermost (reduction) axis.
+# ---------------------------------------------------------------------------
+
+def _dense3x3_kernel(x_ref, wp_ref, mult_ref, bias_ref, o_ref, acc_ref, *,
+                     bits: int, n_ci: int, stride: int, ho: int, wo: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)               # (Hp, Wp, bci)
+    bci = x.shape[-1]
+    # im2col with stride: (ho*wo, 9*bci) — the DISPATCHINGNETWORK view
+    cols = []
+    for i in range(3):
+        for j in range(3):
+            patch = jax.lax.slice(
+                x, (i, j, 0), (i + (ho - 1) * stride + 1,
+                               j + (wo - 1) * stride + 1, bci),
+                (stride, stride, 1))
+            cols.append(patch.reshape(ho * wo, bci))
+    xm = jnp.concatenate(cols, axis=-1)            # (ho*wo, 9*bci)
+
+    w = _unpack_block(wp_ref[...].reshape(wp_ref.shape[0], -1), bits)
+    w = w[:, : 9 * bci]                            # (bco, 9*bci)
+    acc_ref[...] += jax.lax.dot_general(
+        xm, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(ci == n_ci - 1)
+    def _requant():
+        o_ref[...] = _requant_f32(
+            acc_ref[...], mult_ref[...][None, :], bias_ref[...][None, :])
+
+
+def conv3x3_dense(x: jax.Array, packed: jax.Array, mult: jax.Array,
+                  bias: jax.Array, *, bits: int, cin: int, stride: int = 1,
+                  bco: int = 32, bci: int = 32,
+                  interpret: bool = False) -> jax.Array:
+    """x (H, W, Cin) uint8, packed (Cout, 3, 3, Cin/f) -> (Ho, Wo, Cout) uint8.
+
+    'same' padding for stride 1; for stride 2 output is ceil(H/2) (pad=1).
+    """
+    f = 8 // bits
+    h, w_, c = x.shape
+    cout = packed.shape[0]
+    assert c == cin
+    ho = -(-h // stride)
+    wo = -(-w_ // stride)
+
+    # spatial halo pad + channel pad to block multiple
+    cpad = (-c) % bci
+    hpad = (ho - 1) * stride + 3 - h - 1
+    wpad = (wo - 1) * stride + 3 - w_ - 1
+    xp = jnp.pad(x, ((1, max(hpad, 1)), (1, max(wpad, 1)), (0, cpad)))
+    # weights: (Cout, 3, 3, Cin/f) -> pad Cout and Cin(packed) to blocks
+    copad = (-cout) % bco
+    wp = jnp.pad(packed, ((0, copad), (0, 0), (0, 0), (0, (cpad // f) if cpad else 0)))
+    # reorder so the packed reduction axis blocks as (3,3,bci/f) contiguous
+    wp = wp.reshape(cout + copad, 9, -1)
+    multp = jnp.pad(mult.astype(jnp.float32), (0, copad))
+    biasp = jnp.pad(bias.astype(jnp.int32), (0, copad))
+
+    n_ci = (c + cpad) // bci
+    n_co = (cout + copad) // bco
+    hp, wpd = xp.shape[0], xp.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_dense3x3_kernel, bits=bits, n_ci=n_ci,
+                          stride=stride, ho=ho, wo=wo),
+        grid=(n_co, n_ci),
+        in_specs=[
+            pl.BlockSpec((hp, wpd, bci), lambda co, ci: (0, 0, ci)),
+            pl.BlockSpec((bco, 9, bci // f), lambda co, ci: (co, 0, ci)),
+            pl.BlockSpec((bco,), lambda co, ci: (co,)),
+            pl.BlockSpec((bco,), lambda co, ci: (co,)),
+        ],
+        out_specs=pl.BlockSpec((ho * wo, bco), lambda co, ci: (0, co)),
+        out_shape=jax.ShapeDtypeStruct((ho * wo, cout + copad), jnp.uint8),
+        scratch_shapes=[pltpu.VMEM((ho * wo, bco), jnp.int32)],
+        interpret=interpret,
+    )(xp, wp, multp, biasp)
+    return out[:, :cout].reshape(ho, wo, cout)
+
+
+# ---------------------------------------------------------------------------
+# 3x3 depthwise: out[h, w, c] = sum_{i,j} x[s*h+i, s*w+j, c] * W[c, i, j]
+# Bit-serial in silicon with parallel accumulator update; on TPU a VPU
+# (elementwise) kernel over channel blocks.
+# ---------------------------------------------------------------------------
+
+def _dw3x3_kernel(x_ref, wp_ref, mult_ref, bias_ref, o_ref, *,
+                  bits: int, stride: int, ho: int, wo: int):
+    x = x_ref[...].astype(jnp.int32)               # (Hp, Wp, bc)
+    bc = x.shape[-1]
+    w = _unpack_block(wp_ref[...], bits)[:, :9]    # (bc, 9)
+    acc = jnp.zeros((ho, wo, bc), jnp.int32)
+    for i in range(3):
+        for j in range(3):
+            patch = jax.lax.slice(
+                x, (i, j, 0), (i + (ho - 1) * stride + 1,
+                               j + (wo - 1) * stride + 1, bc),
+                (stride, stride, 1))
+            acc = acc + patch * w[:, i * 3 + j][None, None, :]
+    o_ref[...] = _requant_f32(acc, mult_ref[...][None, None, :],
+                              bias_ref[...][None, None, :])
+
+
+def conv3x3_dw(x: jax.Array, packed: jax.Array, mult: jax.Array,
+               bias: jax.Array, *, bits: int, stride: int = 1, bc: int = 32,
+               interpret: bool = False) -> jax.Array:
+    """Depthwise 3x3; packed (C, ceil(9/f)) uint8 along the 9-tap axis."""
+    f = 8 // bits
+    h, w_, c = x.shape
+    ho = -(-h // stride)
+    wo = -(-w_ // stride)
+    cpad = (-c) % bc
+    hpad = (ho - 1) * stride + 3 - h - 1
+    wpad = (wo - 1) * stride + 3 - w_ - 1
+    xp = jnp.pad(x, ((1, max(hpad, 1)), (1, max(wpad, 1)), (0, cpad)))
+    wp = jnp.pad(packed, ((0, cpad), (0, 0)))
+    multp = jnp.pad(mult.astype(jnp.float32), (0, cpad))
+    biasp = jnp.pad(bias.astype(jnp.int32), (0, cpad))
+    hp, wpd = xp.shape[0], xp.shape[1]
+    kp = wp.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_dw3x3_kernel, bits=bits, stride=stride, ho=ho, wo=wo),
+        grid=((c + cpad) // bc,),
+        in_specs=[
+            pl.BlockSpec((hp, wpd, bc), lambda cb: (0, 0, cb)),
+            pl.BlockSpec((bc, kp), lambda cb: (cb, 0)),
+            pl.BlockSpec((bc,), lambda cb: (cb,)),
+            pl.BlockSpec((bc,), lambda cb: (cb,)),
+        ],
+        out_specs=pl.BlockSpec((ho, wo, bc), lambda cb: (0, 0, cb)),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, c + cpad), jnp.uint8),
+        interpret=interpret,
+    )(xp, wp, multp, biasp)
+    return out[:, :, :c]
+
+
+# ---------------------------------------------------------------------------
+# 1x1 dense (pointwise): a channel matmul — runs on the integer qmatmul
+# kernel (the silicon reuses the same PEs in bit-parallel mode).
+# ---------------------------------------------------------------------------
+
+def conv1x1(x: jax.Array, packed: jax.Array, mult: jax.Array, bias: jax.Array,
+            *, bits: int, cin: int, stride: int = 1,
+            bm: int = 256, bn: int = 128, bk: int = 128,
+            interpret: bool = False) -> jax.Array:
+    h, w_, c = x.shape
+    if stride != 1:
+        x = x[::stride, ::stride, :]
+        h, w_ = x.shape[0], x.shape[1]
+    cout = packed.shape[0]
+    xf = x.reshape(h * w_, c)
+    bk = min(bk, max(8 // bits, ((c + 7) // 8) * 8))
+    out = qmatmul_int8(xf, packed, mult, bias, bits=bits, k_orig=cin,
+                       bm=min(bm, ((h * w_ + 7) // 8) * 8), bn=min(bn, ((cout + 7) // 8) * 8),
+                       bk=bk, interpret=interpret)
+    return out.reshape(h, w_, cout)

@@ -1,0 +1,132 @@
+"""Public jit'd wrappers for the Pallas kernels, with mode dispatch.
+
+Every op takes ``mode``:
+  * "pallas"     — compile the Pallas kernel for TPU (the deployment path)
+  * "interpret"  — run the Pallas kernel body in the Python interpreter on
+                   CPU (correctness validation in this container)
+  * "xla"        — pure-jnp math of the same op (the ref oracle), used by
+                   the multi-pod dry-run so GSPMD sees plain HLO.  The packed
+                   weight layout (and therefore the HBM byte accounting that
+                   the roofline reads) is identical in all three modes.
+
+Weight-prep helpers define the single canonical packed layout shared by
+kernels, oracles and the WeightStore.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing, quantize
+from repro.kernels import ref as _ref
+from repro.kernels import qmatmul as _qmm
+from repro.kernels import neureka_conv as _nkc
+from repro.kernels import flash_attention as _fa
+
+Mode = str
+DEFAULT_MODE = "xla"
+
+
+def _check_mode(mode: Mode) -> Mode:
+    if mode not in ("pallas", "interpret", "xla"):
+        raise ValueError(f"unknown kernel mode {mode!r}")
+    return mode
+
+
+# -- weight preparation (the "MRAM programming" layouts) ---------------------
+
+def prep_linear(w: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:
+    """(out, in) float -> (packed (out, in/f) uint8, scale (out,))."""
+    qt = quantize.quantize_weights(w, bits, channel_axis=0)
+    return packing.pack(qt.values, bits), qt.scale
+
+
+def prep_conv3x3(w: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:
+    """(out, 3, 3, in) float -> (packed (out,3,3,in/f), scale (out,))."""
+    qt = quantize.quantize_weights(w, bits, channel_axis=0)
+    return packing.pack(qt.values, bits), qt.scale
+
+
+def prep_dw3x3(w: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:
+    """(c, 3, 3) float -> (packed (c, ceil(9/f)), scale (c,))."""
+    qt = quantize.quantize_weights(w.reshape(w.shape[0], 9), bits, channel_axis=0)
+    return packing.pack(qt.values, bits), qt.scale
+
+
+# -- ops ---------------------------------------------------------------------
+
+def quant_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array, *,
+                 bits: int, k_orig: int, mode: Mode = DEFAULT_MODE,
+                 bm: int = 128, bn: int = 128, bk: int = 512) -> jax.Array:
+    """Float activations x packed weights -> f32.  x may have leading dims."""
+    _check_mode(mode)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if mode == "xla":
+        out = _ref.qmatmul_f32(x2, packed, scale, bits=bits, k_orig=k_orig)
+    else:
+        out = _qmm.qmatmul_f32(x2, packed, scale, bits=bits, k_orig=k_orig,
+                               bm=bm, bn=bn, bk=bk,
+                               interpret=(mode == "interpret"))
+    return out.reshape(*lead, -1)
+
+
+def quant_matmul_int8(x_q: jax.Array, packed: jax.Array, mult: jax.Array,
+                      bias: jax.Array, *, bits: int, k_orig: int,
+                      mode: Mode = DEFAULT_MODE,
+                      bm: int = 128, bn: int = 128, bk: int = 512) -> jax.Array:
+    _check_mode(mode)
+    lead = x_q.shape[:-1]
+    x2 = x_q.reshape(-1, x_q.shape[-1])
+    if mode == "xla":
+        out = _ref.qmatmul_int8(x2, packed, mult, bias, bits=bits, k_orig=k_orig)
+    else:
+        out = _qmm.qmatmul_int8(x2, packed, mult, bias, bits=bits,
+                                k_orig=k_orig, bm=bm, bn=bn, bk=bk,
+                                interpret=(mode == "interpret"))
+    return out.reshape(*lead, -1)
+
+
+def neureka_conv2d(x: jax.Array, packed: jax.Array, mult: jax.Array,
+                   bias: jax.Array, *, op: str, bits: int, cin: int,
+                   stride: int = 1, mode: Mode = DEFAULT_MODE) -> jax.Array:
+    """One N-EUREKA job: op in {dense3x3, dw3x3, pw1x1}; x (H, W, C) uint8."""
+    _check_mode(mode)
+    interp = mode == "interpret"
+    if op == "dense3x3":
+        if mode == "xla":
+            return _ref.conv3x3_dense(x, packed, mult, bias, bits=bits,
+                                      cin=cin, stride=stride)
+        return _nkc.conv3x3_dense(x, packed, mult, bias, bits=bits, cin=cin,
+                                  stride=stride, interpret=interp)
+    if op == "dw3x3":
+        if mode == "xla":
+            return _ref.conv3x3_dw(x, packed, mult, bias, bits=bits,
+                                   stride=stride)
+        return _nkc.conv3x3_dw(x, packed, mult, bias, bits=bits,
+                               stride=stride, interpret=interp)
+    if op == "pw1x1":
+        if mode == "xla":
+            return _ref.conv1x1(x, packed, mult, bias, bits=bits, cin=cin,
+                                stride=stride)
+        return _nkc.conv1x1(x, packed, mult, bias, bits=bits, cin=cin,
+                            stride=stride, interpret=interp)
+    raise ValueError(f"unknown N-EUREKA op {op!r}")
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, scale: Optional[float] = None,
+              window: Optional[int] = None, mode: Mode = DEFAULT_MODE,
+              bq: int = 256, bk: int = 256) -> jax.Array:
+    """(B, S, D)-shaped attention (B folds batch*heads)."""
+    _check_mode(mode)
+    if mode == "xla":
+        return _ref.flash_attention(q, k, v, causal=causal, scale=scale,
+                                    window=window)
+    return _fa.flash_attention(q, k, v, causal=causal, scale=scale,
+                               window=window, bq=bq, bk=bk,
+                               interpret=(mode == "interpret"))

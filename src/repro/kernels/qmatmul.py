@@ -1,0 +1,179 @@
+"""Fused dequant matmul — the At-MRAM weight path as a Pallas TPU kernel.
+
+The Siracusa mechanism (paper Fig. 4): packed sub-byte weights are streamed
+from the MRAM over a dedicated port, expanded bit-serially *at* the PEs, and
+never staged at full width in any intermediate memory.  The TPU-native
+analogue implemented here:
+
+  * weights live **packed** (2/4/8-bit fields in a uint8 carrier) in HBM;
+  * the Pallas grid pipeline double-buffers packed blocks HBM->VMEM
+    (= the 2-bank interleaved MRAM prefetch hiding the 9-cycle latency);
+  * unpack + dequant happen **inside the kernel**, adjacent to the MXU
+    (= the At-Memory expansion at the PE inputs);
+  * per-output-channel scales are applied once per output block on the final
+    reduction step (= the NORMQUANT per-channel projection).
+
+Two datapaths, mirroring N-EUREKA's two consumers:
+  - float path  (LM serving):   x bf16/f32  @ W_packed -> f32
+  - integer path (N-EUREKA pw): x uint8     @ W_packed -> int32 -> requant uint8
+
+Block shapes are MXU-aligned (multiples of 128 where the problem allows) and
+the K (reduction) grid axis is innermost so output blocks stay resident in
+VMEM across the reduction — output-stationary, like N-EUREKA's accumulators.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _unpack_block(wp: jax.Array, bits: int) -> jax.Array:
+    """uint8 carrier block (bn, bk/f) -> signed int8-valued int32 (bn, bk)."""
+    if bits == 8:
+        return wp.astype(jnp.int32) - 128
+    f = 8 // bits
+    shifts = (jnp.arange(f, dtype=jnp.uint32) * bits)
+    mask = jnp.uint32((1 << bits) - 1)
+    fields = (wp[..., None].astype(jnp.uint32) >> shifts) & mask
+    levels = fields.astype(jnp.int32) - (1 << (bits - 1))
+    bn, bkp, _ = levels.shape
+    return levels.reshape(bn, bkp * f)
+
+
+def _qmatmul_f32_kernel(x_ref, wp_ref, scale_ref, o_ref, *, bits: int, nk: int):
+    """out[m, n] = sum_k x[m, k] * unpack(wp)[n, k] * scale[n]  (f32 acc)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)                    # (bm, bk)
+    w = _unpack_block(wp_ref[...], bits).astype(jnp.float32)   # (bn, bk)
+    o_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _scale():
+        o_ref[...] = o_ref[...] * scale_ref[...][None, :]
+
+
+def _qmatmul_int8_kernel(x_ref, wp_ref, mult_ref, bias_ref, o_ref, acc_ref,
+                         *, bits: int, nk: int):
+    """Integer path with fused requant: uint8 act x packed W -> uint8.
+
+    acc int32 lives in VMEM scratch (the SCM accumulators); the NORMQUANT
+    projection (per-channel float rescale + bias + clip) runs on the final
+    reduction step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)                       # (bm, bk) uint8->i32
+    w = _unpack_block(wp_ref[...], bits)                   # (bn, bk) i32
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _requant():
+        acc = acc_ref[...].astype(jnp.float32) * mult_ref[...][None, :]
+        acc = jnp.round(acc) + bias_ref[...][None, :].astype(jnp.float32)
+        o_ref[...] = jnp.clip(acc, 0.0, 255.0).astype(jnp.uint8)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def qmatmul_f32(x: jax.Array, packed: jax.Array, scale: jax.Array, *,
+                bits: int, k_orig: int,
+                bm: int = 128, bn: int = 128, bk: int = 512,
+                interpret: bool = False) -> jax.Array:
+    """x (M, K) float @ packed (N, K/f) uint8 with per-N scale -> (M, N) f32.
+
+    Blocks are padded to (bm, bn, bk); bk must be a multiple of the packing
+    factor so packed blocks stay byte-aligned (= MRAM-row aligned).
+    """
+    f = 8 // bits
+    assert bk % f == 0
+    m, k = x.shape
+    n = packed.shape[0]
+    assert packed.shape[1] * f >= k_orig and k == k_orig
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(packed, 0, bn), 1, bk // f)
+    sp = _pad_to(scale.astype(jnp.float32), 0, bn)
+    mp, kp = xp.shape
+    np_, kpp = wp.shape
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_qmatmul_f32_kernel, bits=bits, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk // f), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, sp)
+    return out[:m, :n]
+
+
+def qmatmul_int8(x_q: jax.Array, packed: jax.Array, mult: jax.Array,
+                 bias: jax.Array, *, bits: int, k_orig: int,
+                 bm: int = 128, bn: int = 128, bk: int = 512,
+                 interpret: bool = False) -> jax.Array:
+    """uint8 activations (M, K) @ packed weights -> requantized uint8 (M, N).
+
+    ``mult`` is the folded float per-channel rescale (w_scale*in_scale/out_scale),
+    ``bias`` the folded int32 per-channel bias (see core.quantize.fold_requant).
+    """
+    f = 8 // bits
+    assert bk % f == 0
+    m, k = x_q.shape
+    n = packed.shape[0]
+
+    xp = _pad_to(_pad_to(x_q, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(packed, 0, bn), 1, bk // f)
+    multp = _pad_to(mult.astype(jnp.float32), 0, bn)
+    biasp = _pad_to(bias.astype(jnp.int32), 0, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[0]
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_qmatmul_int8_kernel, bits=bits, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk // f), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.uint8),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(xp, wp, multp, biasp)
+    return out[:m, :n]

@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every Pallas kernel (no pallas imports).
+
+Each oracle computes the *same math* as its kernel (including the float
+formulation of the NORMQUANT requant) so integer paths match bit-exactly and
+float paths match to accumulation-order tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+def _requant_f32(acc: jax.Array, mult: jax.Array, bias: jax.Array) -> jax.Array:
+    y = jnp.round(acc.astype(jnp.float32) * mult) + bias.astype(jnp.float32)
+    return jnp.clip(y, 0.0, 255.0).astype(jnp.uint8)
+
+
+def qmatmul_f32(x: jax.Array, packed: jax.Array, scale: jax.Array, *,
+                bits: int, k_orig: int) -> jax.Array:
+    w = packing.unpack(packed, bits, k_orig).astype(jnp.float32)
+    w = w * scale[:, None].astype(jnp.float32)
+    return jnp.matmul(x.astype(jnp.float32), w.T)
+
+
+def qmatmul_int8(x_q: jax.Array, packed: jax.Array, mult: jax.Array,
+                 bias: jax.Array, *, bits: int, k_orig: int) -> jax.Array:
+    w = packing.unpack(packed, bits, k_orig).astype(jnp.int32)
+    acc = jnp.matmul(x_q.astype(jnp.int32), w.T,
+                     preferred_element_type=jnp.int32)
+    return _requant_f32(acc, mult[None, :], bias[None, :])
+
+
+def conv3x3_dense(x: jax.Array, packed: jax.Array, mult: jax.Array,
+                  bias: jax.Array, *, bits: int, cin: int,
+                  stride: int = 1) -> jax.Array:
+    # packed layout: (Cout, 3, 3, Cin/f) — packed per tap along Cin
+    cout = packed.shape[0]
+    w = packing.unpack(packed, bits, cin).astype(jnp.int32)  # (Cout,3,3,Cin)
+    h, w_, c = x.shape
+    ho, wo = -(-h // stride), -(-w_ // stride)
+    hpad = (ho - 1) * stride + 3 - h - 1
+    wpad = (wo - 1) * stride + 3 - w_ - 1
+    xp = jnp.pad(x.astype(jnp.int32), ((1, max(hpad, 1)), (1, max(wpad, 1)), (0, 0)))
+    acc = jnp.zeros((ho, wo, cout), jnp.int32)
+    for i in range(3):
+        for j in range(3):
+            patch = jax.lax.slice(
+                xp, (i, j, 0),
+                (i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, c),
+                (stride, stride, 1))
+            acc = acc + jnp.einsum("hwc,oc->hwo", patch, w[:, i, j, :],
+                                   preferred_element_type=jnp.int32)
+    return _requant_f32(acc, mult[None, None, :], bias[None, None, :])
+
+
+def conv3x3_dw(x: jax.Array, packed: jax.Array, mult: jax.Array,
+               bias: jax.Array, *, bits: int, stride: int = 1) -> jax.Array:
+    c = x.shape[-1]
+    w = packing.unpack(packed, bits, 9).astype(jnp.int32)    # (C, 9)
+    h, w_, _ = x.shape
+    ho, wo = -(-h // stride), -(-w_ // stride)
+    hpad = (ho - 1) * stride + 3 - h - 1
+    wpad = (wo - 1) * stride + 3 - w_ - 1
+    xp = jnp.pad(x.astype(jnp.int32), ((1, max(hpad, 1)), (1, max(wpad, 1)), (0, 0)))
+    acc = jnp.zeros((ho, wo, c), jnp.int32)
+    for i in range(3):
+        for j in range(3):
+            patch = jax.lax.slice(
+                xp, (i, j, 0),
+                (i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, c),
+                (stride, stride, 1))
+            acc = acc + patch * w[:, i * 3 + j][None, None, :]
+    return _requant_f32(acc, mult[None, None, :], bias[None, None, :])
+
+
+def conv1x1(x: jax.Array, packed: jax.Array, mult: jax.Array, bias: jax.Array,
+            *, bits: int, cin: int, stride: int = 1) -> jax.Array:
+    if stride != 1:
+        x = x[::stride, ::stride, :]
+    h, w_, c = x.shape
+    out = qmatmul_int8(x.reshape(h * w_, c), packed, mult, bias,
+                       bits=bits, k_orig=cin)
+    return out.reshape(h, w_, -1)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    window: int | None = None) -> jax.Array:
+    """Naive attention oracle.  q,k,v: (..., S, D) with leading batch dims."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32) * scale
+    sq, sk = q.shape[-2], k.shape[-2]
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", p, v.astype(jnp.float32)).astype(q.dtype)

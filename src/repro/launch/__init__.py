@@ -1,0 +1,4 @@
+# NOTE: dryrun must be imported/run as a fresh process (it sets XLA_FLAGS
+# before importing jax); do not import repro.launch.dryrun from here.
+from repro.launch import hlo_analysis, mesh, steps
+__all__ = ["hlo_analysis", "mesh", "steps"]

@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first (before any jax import): jax locks the
+device count on first backend init, and the production meshes need 512
+placeholder host devices.
+
+Per cell this driver records: memory_analysis (per-device bytes — proves it
+fits), cost_analysis (FLOPs/bytes for the roofline), the collective-op
+census parsed from the optimized HLO, and the three roofline terms.
+Results go to dryrun_results/<cell>.json (resumable; failures recorded,
+not fatal).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b
+  PYTHONPATH=src python -m repro.launch.dryrun --shape train_4k --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --serve-bits 4   # hillclimb
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES, applicable
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.models.transformer import active_param_count, total_param_count
+
+RESULTS_DIR = Path("dryrun_results")
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (per decode/prefill token)."""
+    n_active = active_param_count(cfg)
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    if cfg.family == "vlm" and cell.kind != "decode":
+        tokens = cell.global_batch * cell.seq_len   # patches count as tokens
+    mult = 6 if cell.kind == "train" else 2
+    return float(mult * n_active * tokens)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, serve_bits: int = 8,
+             tag: str = "", overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = dict(arch=arch, shape=shape, mesh="x".join(map(str, mesh.devices.shape)),
+               multi_pod=multi_pod, n_chips=mesh.size, serve_bits=serve_bits,
+               kind=cell.kind, status="start")
+    t0 = time.time()
+    fn, args, _ = build_cell(cfg, cell, mesh, serve_bits=serve_bits)
+    with mesh:
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    flops, hbm_bytes = hlo_analysis.extract_cost(compiled)   # per-device
+    hlo = compiled.as_text()
+    coll = hlo_analysis.collective_stats(hlo)                # per-device
+    # XLA counts loop bodies once: add (L-1) x layer + inner-loop terms
+    # measured from dedicated single-iteration programs (see microbench.py).
+    from repro.launch.microbench import layer_cost
+    lc = layer_cost(cfg, cell, mesh, serve_bits=serve_bits)
+    roof = hlo_analysis.Roofline(
+        flops_per_chip=flops + lc["flops"],
+        hbm_bytes_per_chip=hbm_bytes + lc["hbm_bytes"],
+        collective_bytes_per_chip=coll.total_bytes + lc["collective_bytes"],
+        n_chips=mesh.size)
+    mf = model_flops(cfg, cell)
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=hlo_analysis.memory_analysis_dict(compiled),
+        cost=dict(flops_per_chip_raw=flops, hbm_bytes_per_chip_raw=hbm_bytes,
+                  layer_corrections=lc,
+                  flops_per_chip=flops + lc["flops"],
+                  hbm_bytes_per_chip=hbm_bytes + lc["hbm_bytes"],
+                  total_flops=(flops + lc["flops"]) * mesh.size),
+        collectives=dict(counts=coll.counts, bytes=coll.bytes_by_kind,
+                         total_bytes=coll.total_bytes),
+        roofline=roof.as_dict(),
+        model_flops=mf,
+        useful_flops_frac=(mf / ((flops + lc["flops"]) * mesh.size)
+                           if flops else None),
+        params_total=total_param_count(cfg),
+        params_active=active_param_count(cfg),
+        hlo_n_lines=hlo.count("\n"),
+    )
+    return rec
+
+
+def cell_name(arch, shape, multi_pod, serve_bits, tag=""):
+    pod = "2pod" if multi_pod else "1pod"
+    suffix = f"_w{serve_bits}" if serve_bits != 8 else ""
+    tag = f"_{tag}" if tag else ""
+    return f"{arch}_{shape}_{pod}{suffix}{tag}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch (default all)")
+    ap.add_argument("--shape", default=None, help="single shape (default all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--serve-bits", type=int, default=8)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override, e.g. attn_dtype=bfloat16")
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            pass
+        overrides[k] = v
+
+    RESULTS_DIR.mkdir(exist_ok=True)
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                name = cell_name(arch, shape, mp, args.serve_bits, args.tag)
+                out = RESULTS_DIR / f"{name}.json"
+                if out.exists() and not args.force:
+                    print(f"[cached] {name}")
+                    n_ok += 1
+                    continue
+                if not applicable(arch, shape):
+                    rec = dict(arch=arch, shape=shape, multi_pod=mp,
+                               status="skipped",
+                               reason="long_500k requires sub-quadratic "
+                                      "attention (DESIGN.md section 4)")
+                    out.write_text(json.dumps(rec, indent=1))
+                    print(f"[skip]   {name}")
+                    n_skip += 1
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mp, args.serve_bits, args.tag,
+                                   overrides=overrides)
+                    n_ok += 1
+                    r = rec["roofline"]
+                    print(f"[ok]     {name}: compile {rec['compile_s']:.1f}s "
+                          f"bound={r['bound']} compute={r['compute_s']:.2e}s "
+                          f"mem={r['memory_s']:.2e}s coll={r['collective_s']:.2e}s")
+                except Exception as e:
+                    rec = dict(arch=arch, shape=shape, multi_pod=mp,
+                               status="error", error=str(e),
+                               traceback=traceback.format_exc())
+                    n_fail += 1
+                    print(f"[FAIL]   {name}: {e}")
+                out.write_text(json.dumps(rec, indent=1))
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,148 @@
+"""Post-compile HLO analysis: collective bytes + roofline terms.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but NOT collective traffic;
+we parse the optimized HLO text and sum the *output* shapes of every
+communication op (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), splitting intra-pod ("data"/"model" axes, ICI) traffic
+from cross-pod traffic by replica-group span when available.
+
+Hardware constants: TPU v5e per chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
+HBM_BW = 819e9                  # B/s per chip
+ICI_BW = 50e9                   # B/s per link (~per-chip usable, 1 axis)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^=]*?\)|\S+?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    bytes_by_kind: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done" in line:
+            continue                      # avoid double counting async pairs
+        b = _shape_bytes(shape_str)
+        counts[kind] = counts.get(kind, 0) + 1
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0) + b
+    return CollectiveStats(counts, bytes_by_kind)
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Roofline terms.  XLA's cost_analysis and the SPMD-partitioned HLO are
+    PER-DEVICE programs (verified empirically in EXPERIMENTS.md §Dry-run), so
+    the spec formula  total / (chips * rate)  reduces to  per_device / rate.
+    """
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    n_chips: int
+
+    @property
+    def total_flops(self) -> float:
+        return self.flops_per_chip * self.n_chips
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_chip / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = dict(compute=self.compute_s, memory=self.memory_s,
+                     collective=self.collective_s)
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower-bound step time: overlapped terms -> max; the bound-term
+        fraction of this is what hillclimbing drives down."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict:
+        return dict(flops_per_chip=self.flops_per_chip,
+                    hbm_bytes_per_chip=self.hbm_bytes_per_chip,
+                    collective_bytes_per_chip=self.collective_bytes_per_chip,
+                    total_flops=self.total_flops,
+                    n_chips=self.n_chips, compute_s=self.compute_s,
+                    memory_s=self.memory_s, collective_s=self.collective_s,
+                    bound=self.bound, step_time_s=self.step_time_s)
+
+
+def extract_cost(compiled) -> Tuple[float, float]:
+    """(flops, bytes) from compiled.cost_analysis(), tolerant of backends."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    if byts == 0.0:
+        byts = sum(float(v) for k, v in ca.items()
+                   if k.startswith("bytes accessed"))
+    return flops, byts
+
+
+def memory_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:           # some backends don't implement it
+        return dict(error=str(e))
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = float(v)
+    return out

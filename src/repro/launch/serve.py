@@ -1,0 +1,67 @@
+"""Serving launcher: batched requests over the packed At-MRAM store.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+        --requests 8 --bits 4 --paged
+
+Freezes trained/random params into the packed WeightStore (the "MRAM
+programming" step), optionally pages them through a resident budget
+(core/paging), and runs the continuous-batching engine.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer as tfm
+from repro.parallel.sharding import freeze_for_serving
+from repro.serving import Request, ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--bits", type=int, default=8, choices=(2, 4, 8))
+    ap.add_argument("--scenario", default="l1mram",
+                    choices=("l1mram", "l2mram", "l3mram", "l3flash"))
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    if cfg.family == "encdec":
+        raise SystemExit("serve launcher covers decoder-only archs; "
+                         "see examples/xr_pipeline.py for enc-dec")
+
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    packed = freeze_for_serving(params, bits=args.bits)
+    engine = dict(scenario=args.scenario, mode="xla", bits=args.bits)
+
+    eng = ServingEngine(cfg, packed, batch_slots=args.slots,
+                        max_len=args.max_len, engine=engine)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for uid in range(args.requests):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, cfg.vocab_size,
+                                               8 + uid % 5).astype(np.int32),
+                           max_new_tokens=args.max_new))
+    done = eng.run_until_done()
+    dt = time.time() - t0
+    total_tokens = sum(len(r.generated) for r in done)
+    print(f"served {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
+          f"({total_tokens / dt:.1f} tok/s) [W{args.bits}, {args.scenario}]")
+    return done
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,227 @@
+"""Step builders + input_specs for every (arch x shape) cell.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins (with
+NamedShardings attached) for every model input — params, optimizer state,
+batches, caches — so the dry-run lowers and compiles with **zero device
+allocation**.  The same builders produce the real jitted callables for the
+end-to-end examples (small configs, real arrays).
+
+Cell kinds:
+  train   — full train_step: loss, grads, clip, optimizer update
+  prefill — serve prefill: fill the KV/SSM cache from a prompt
+  decode  — serve_step: ONE new token against a seq_len-deep cache
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeCell
+from repro.models import encdec, transformer as tfm, vlm as vlm_lib
+from repro.models.config import ModelConfig
+from repro.optim import clip_by_global_norm, pick_optimizer
+from repro.parallel import sharding as shd
+
+
+DEFAULT_SERVE_ENGINE = dict(scenario="l1mram", mode="xla", bits=8)
+
+
+def _loss_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec.seq2seq_loss
+    return tfm.lm_loss
+
+
+def _init_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec.init_params
+    return tfm.init_params
+
+
+def param_specs(cfg: ModelConfig, key=None) -> Any:
+    """ShapeDtypeStruct tree of the parameters (eval_shape — no alloc)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(functools.partial(_init_fn(cfg), cfg), key)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, optimizer, lr: float = 3e-4,
+                    engine: Optional[Dict] = None) -> Callable:
+    loss_fn = _loss_fn(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg,
+                                                  engine=engine)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        new_params, new_opt = optimizer.update(grads, opt_state, params,
+                                               jnp.asarray(lr, jnp.float32))
+        return new_params, new_opt, dict(loss=loss, grad_norm=gnorm)
+
+    return train_step
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh) -> Dict:
+    b, s = cell.global_batch, cell.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    bspec2 = NamedSharding(mesh, shd.batch_pspec(b, mesh, extra_dims=1))
+    bspec3 = NamedSharding(mesh, shd.batch_pspec(b, mesh, extra_dims=2))
+    batch: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        batch["frames"] = shd.sds((b, cfg.n_audio_frames, cfg.d_model), dt,
+                                  bspec3)
+        batch["tokens"] = shd.sds((b, s), jnp.int32, bspec2)
+        batch["labels"] = shd.sds((b, s), jnp.int32, bspec2)
+    elif cfg.family == "vlm":
+        s_text = s - cfg.n_patches
+        batch["patches"] = shd.sds((b, cfg.n_patches, cfg.d_model), dt, bspec3)
+        batch["tokens"] = shd.sds((b, s_text), jnp.int32, bspec2)
+        batch["labels"] = shd.sds((b, s_text), jnp.int32, bspec2)
+    else:
+        batch["tokens"] = shd.sds((b, s), jnp.int32, bspec2)
+        batch["labels"] = shd.sds((b, s), jnp.int32, bspec2)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, engine: Optional[Dict] = None):
+    engine = engine or DEFAULT_SERVE_ENGINE
+    if cfg.family == "encdec":
+        def prefill(params, frames, tokens, cache):
+            enc_out = encdec.encode(params, frames, cfg, engine=engine)
+            cache = encdec.precompute_cross_kv(params, enc_out, cfg, cache,
+                                               engine=engine)
+            return encdec.step(params, tokens, cache, jnp.int32(0), cfg,
+                               engine=engine)
+        return prefill
+    if cfg.family == "vlm":
+        def prefill(params, patches, tokens, cache):
+            return tfm.step(params, tokens, cache, jnp.int32(0), cfg,
+                            engine=engine, extra_embeds=patches)
+        return prefill
+
+    def prefill(params, tokens, cache):
+        return tfm.step(params, tokens, cache, jnp.int32(0), cfg,
+                        engine=engine)
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, engine: Optional[Dict] = None):
+    engine = engine or DEFAULT_SERVE_ENGINE
+    if cfg.family == "encdec":
+        def decode(params, token, cache, pos):
+            return encdec.step(params, token, cache, pos, cfg, engine=engine)
+        return decode
+
+    def decode(params, token, cache, pos):
+        return tfm.step(params, token, cache, pos, cfg, engine=engine)
+    return decode
+
+
+def serve_param_specs(cfg: ModelConfig, bits: int = 8) -> Any:
+    """Packed At-MRAM store specs (uint8 carriers + f32 scales)."""
+    return shd.serve_spec_like(param_specs(cfg), bits=bits)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    if cfg.family == "encdec":
+        fn = functools.partial(encdec.init_serve_cache, cfg, batch, max_len)
+    else:
+        fn = functools.partial(tfm.init_serve_cache, cfg, batch, max_len)
+    return jax.eval_shape(fn)
+
+
+def serve_input_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                      bits: int = 8) -> Dict[str, Any]:
+    """Specs for prefill/decode cells: params (packed), inputs, cache."""
+    b, s = cell.global_batch, cell.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    pspecs = serve_param_specs(cfg, bits)
+    pshard = shd.param_shardings(pspecs, mesh)
+    pspecs = shd.with_shardings(pspecs, pshard)
+
+    cspecs = cache_specs(cfg, b, s)
+    cshard = shd.cache_shardings(cspecs, mesh, b)
+    cspecs = shd.with_shardings(cspecs, cshard)
+
+    bspec2 = NamedSharding(mesh, shd.batch_pspec(b, mesh, extra_dims=1))
+    bspec3 = NamedSharding(mesh, shd.batch_pspec(b, mesh, extra_dims=2))
+
+    out: Dict[str, Any] = dict(params=pspecs, cache=cspecs)
+    if cell.kind == "prefill":
+        prompt = s if cfg.family != "vlm" else s - cfg.n_patches
+        prompt = prompt - cfg.n_meta_tokens
+        out["tokens"] = shd.sds((b, prompt), jnp.int32, bspec2)
+        if cfg.family == "encdec":
+            out["frames"] = shd.sds((b, cfg.n_audio_frames, cfg.d_model), dt,
+                                    bspec3)
+        if cfg.family == "vlm":
+            out["patches"] = shd.sds((b, cfg.n_patches, cfg.d_model), dt,
+                                     bspec3)
+    else:  # decode: one token against a seq_len-deep cache
+        out["tokens"] = shd.sds((b, 1), jnp.int32, bspec2)
+        out["pos"] = shd.sds((), jnp.int32, NamedSharding(mesh, P()))
+        if cfg.family == "encdec":
+            pass  # cross-KV already inside the cache specs
+    return out
+
+
+# ---------------------------------------------------------------------------
+# full cell assembly for the dry-run
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+               serve_bits: int = 8,
+               engine: Optional[Dict] = None
+               ) -> Tuple[Callable, Tuple, Dict[str, Any]]:
+    """Returns (fn, example_args_specs, out_shardings_hint)."""
+    cfg = cfg.replace(dtype="bfloat16")
+    if cell.kind == "train":
+        pspecs = param_specs(cfg)
+        pshard = shd.param_shardings(pspecs, mesh)
+        pspecs_sh = shd.with_shardings(pspecs, pshard)
+        # math.prod: shape products overflow int32 under jnp (arctic's
+        # expert tensors are 1.5e11 elements)
+        opt = pick_optimizer(sum(math.prod(l.shape)
+                                 for l in jax.tree_util.tree_leaves(pspecs)),
+                             n_chips=mesh.size)
+        ospecs = jax.eval_shape(opt.init, pspecs)
+        oshard = shd.opt_state_shardings(ospecs, mesh, pspecs)
+        ospecs_sh = shd.with_shardings(ospecs, oshard)
+        batch = train_batch_specs(cfg, cell, mesh)
+        train_engine = dict(engine or {})
+        train_engine.setdefault("dp_axes", shd.dp_axes(mesh))
+        fn = make_train_step(cfg, opt, engine=train_engine)
+        return fn, (pspecs_sh, ospecs_sh, batch), {}
+
+    serve_engine = dict(DEFAULT_SERVE_ENGINE)
+    serve_engine["bits"] = serve_bits
+    if engine:
+        serve_engine.update(engine)
+    specs = serve_input_specs(cfg, cell, mesh, bits=serve_bits)
+    if cell.kind == "prefill":
+        fn = make_prefill_step(cfg, engine=serve_engine)
+        if cfg.family == "encdec":
+            args = (specs["params"], specs["frames"], specs["tokens"],
+                    specs["cache"])
+        elif cfg.family == "vlm":
+            args = (specs["params"], specs["patches"], specs["tokens"],
+                    specs["cache"])
+        else:
+            args = (specs["params"], specs["tokens"], specs["cache"])
+        return fn, args, {}
+
+    fn = make_decode_step(cfg, engine=serve_engine)
+    args = (specs["params"], specs["tokens"], specs["cache"], specs["pos"])
+    return fn, args, {}

@@ -1,0 +1,5 @@
+from repro.models import (attention, config, encdec, layers, mobilenet_v2,
+                          moe, ssm, transformer, vlm)
+
+__all__ = ["attention", "config", "encdec", "layers", "mobilenet_v2",
+           "moe", "ssm", "transformer", "vlm"]

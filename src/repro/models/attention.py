@@ -1,0 +1,193 @@
+"""Attention: GQA with qk-norm, chunked (flash-style) softmax, KV caches.
+
+Three execution paths:
+  * ``chunked_attention`` — pure-JAX blocked online-softmax (lax.scan over
+    KV blocks).  Memory-bounded (never materializes S x S), used by the
+    multi-pod dry-run and the default DSP path.  Same math as the Pallas
+    flash kernel (kernels/flash_attention.py), which replaces it on real
+    TPUs.
+  * ``decode_attention`` — single-step attention over a preallocated cache;
+    reduction-friendly for caches sharded along the sequence axis
+    (sequence-parallel decode, DESIGN.md §3).
+  * the Pallas kernel via kernels.ops.attention (mode="pallas"/"interpret").
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _fold_gqa(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B, Hq, S, D) -> (B, Hkv, G, S, D)."""
+    b, hq, s, d = q.shape
+    return q.reshape(b, n_kv, hq // n_kv, s, d)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      q_offset: int = 0, block: int = 1024,
+                      scale: Optional[float] = None,
+                      compute_dtype=jnp.float32) -> jax.Array:
+    """Blocked online-softmax GQA attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); Hq % Hkv == 0.
+    q_offset: absolute position of q[0] within the kv sequence.
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = (_fold_gqa(q, hkv).astype(jnp.float32)
+          * scale).astype(compute_dtype)                   # (B,Hkv,G,Sq,D)
+
+    block = min(block, sk)
+    pad = (-sk) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nblk = (sk + pad) // block
+    kb = jnp.moveaxis(k.reshape(b, hkv, nblk, block, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, hkv, nblk, block, d), 2, 0)
+
+    qpos = (q_offset + jnp.arange(sq))[:, None]            # (Sq, 1)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        idx, kblk, vblk = xs
+        kpos = (idx * block + jnp.arange(block))[None, :]  # (1, block)
+        s_blk = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
+                           kblk.astype(compute_dtype),
+                           preferred_element_type=jnp.float32)
+        mask = kpos < sk
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        s_blk = jnp.where(mask[None, None, None], s_blk, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s_blk, axis=-1))
+        p = jnp.exp(s_blk - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(compute_dtype),
+            vblk.astype(compute_dtype), preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    g = hq // hkv
+    init = (jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, g, sq), jnp.float32),
+            jnp.zeros((b, hkv, g, sq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init,
+                                  (jnp.arange(nblk), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def windowed_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       window: int, q_offset: int = 0, bq: int = 512,
+                       scale: Optional[float] = None,
+                       compute_dtype=jnp.float32) -> jax.Array:
+    """Causal sliding-window attention with q-blocking: each q block only
+    touches its visible key span (window + bq keys), so work and traffic
+    are O(S * (window + bq)) instead of O(S^2).  ``window`` must be a
+    static int — the hymba fast path (EXPERIMENTS.md §Perf hymba cell).
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    bq = min(bq, sq)
+    pad = (-sq) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nq = (sq + pad) // bq
+    span = min(window + bq, sk)
+
+    qb = jnp.moveaxis(q.reshape(b, hq, nq, bq, d), 2, 0)   # (nq,B,H,bq,d)
+    qg = (qb.astype(jnp.float32) * scale).astype(compute_dtype)
+
+    def one_block(i, qblk):
+        qstart = i * bq + q_offset
+        kstart = jnp.clip(qstart + bq - span, 0, max(sk - span, 0))
+        ks = jax.lax.dynamic_slice_in_dim(k, kstart, span, axis=2)
+        vs = jax.lax.dynamic_slice_in_dim(v, kstart, span, axis=2)
+        qgg = _fold_gqa(qblk, hkv)                         # (B,Hkv,G,bq,d)
+        s_ = jnp.einsum("bhgqd,bhkd->bhgqk", qgg,
+                        ks.astype(compute_dtype),
+                        preferred_element_type=jnp.float32)
+        qpos = qstart + jnp.arange(bq)[:, None]
+        kpos = kstart + jnp.arange(span)[None, :]
+        mask = (kpos <= qpos) & (kpos > qpos - window)
+        s_ = jnp.where(mask[None, None, None], s_, NEG_INF)
+        p = jax.nn.softmax(s_, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(compute_dtype),
+                       vs.astype(compute_dtype),
+                       preferred_element_type=jnp.float32)
+        return o.reshape(b, hq, bq, d)
+
+    out = jax.vmap(one_block)(jnp.arange(nq), qg)          # (nq,B,H,bq,d)
+    out = jnp.moveaxis(out, 0, 2).reshape(b, hq, sq + pad, d)
+    return out[:, :, :sq].astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *,
+                     window: Optional[int] = None,
+                     scale: Optional[float] = None,
+                     compute_dtype=jnp.float32) -> jax.Array:
+    """One-token attention over a preallocated cache.
+
+    q: (B, Hq, 1, D); caches: (B, Hkv, Smax, D); cache_len: () int32 —
+    number of valid positions (the new token is at cache_len - 1).
+    """
+    b, hq, _, d = q.shape
+    hkv, smax = k_cache.shape[1], k_cache.shape[2]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    # compute_dtype=bf16: the cache is consumed at its storage precision by
+    # a mixed-precision dot (f32 accumulate) — no full-width cache copy in
+    # HBM.  This is the At-Memory discipline applied to the KV stream.
+    qg = (_fold_gqa(q, hkv).astype(jnp.float32) * scale).astype(compute_dtype)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
+                   k_cache.astype(compute_dtype),
+                   preferred_element_type=jnp.float32)
+    kpos = jnp.arange(smax)[None, :]
+    cl = (cache_len[:, None] if getattr(cache_len, "ndim", 0) == 1
+          else cache_len)                     # (B,1) per-batch or scalar
+    mask = kpos < cl
+    if window is not None:
+        mask = mask & (kpos > cl - 1 - window)
+    mask = jnp.broadcast_to(mask[:, None, None, None] if mask.ndim == 2
+                            else mask[None, None, None], s.shape)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(compute_dtype),
+                     v_cache.astype(compute_dtype),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+def init_cache(batch: int, n_kv: int, max_len: int, head_dim: int,
+               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return dict(
+        k=jnp.zeros((batch, n_kv, max_len, head_dim), dtype),
+        v=jnp.zeros((batch, n_kv, max_len, head_dim), dtype),
+    )
+
+
+def update_cache(cache: Dict[str, jax.Array], k_new: jax.Array,
+                 v_new: jax.Array, pos: jax.Array) -> Dict[str, jax.Array]:
+    """Insert (B, Hkv, S_new, D) at ``pos`` (scalar, or (B,) per-batch for
+    continuous-batching decode)."""
+    if getattr(pos, "ndim", 0) == 1:
+        upd = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice(
+            c, n, (0, p, 0)))
+        return dict(k=upd(cache["k"], k_new.astype(cache["k"].dtype), pos),
+                    v=upd(cache["v"], v_new.astype(cache["v"].dtype), pos))
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, 0, pos, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, 0, pos, 0))
+    return dict(k=k, v=v)

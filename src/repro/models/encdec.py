@@ -1,0 +1,228 @@
+"""Whisper-style encoder-decoder backbone (whisper-tiny assignment).
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings (B, n_audio_frames, d_model).  The
+backbone is faithful: sinusoidal-position encoder with bidirectional
+attention + GELU MLPs, decoder with causal self-attention, cross-attention
+to the encoder output, learned positions, layernorm-with-bias throughout.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.transformer import (_attn_params, _dense_init, _mlp_params,
+                                      _norm_params, _dtype)
+
+
+def _sinusoid(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    angle = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def _enc_layer_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    return dict(attn_norm=_norm_params(cfg, ks[0], cfg.d_model),
+                attn=_attn_params(cfg, ks[1]),
+                mlp_norm=_norm_params(cfg, ks[2], cfg.d_model),
+                mlp=_mlp_params(cfg, ks[3], cfg.d_ff))
+
+
+def _dec_layer_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    return dict(attn_norm=_norm_params(cfg, ks[0], cfg.d_model),
+                attn=_attn_params(cfg, ks[1]),
+                xattn_norm=_norm_params(cfg, ks[2], cfg.d_model),
+                xattn=_attn_params(cfg, ks[3]),
+                mlp_norm=_norm_params(cfg, ks[4], cfg.d_model),
+                mlp=_mlp_params(cfg, ks[5], cfg.d_ff))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6 + cfg.n_encoder_layers + cfg.n_layers)
+    enc = [_enc_layer_params(cfg, ks[6 + i]) for i in range(cfg.n_encoder_layers)]
+    dec = [_dec_layer_params(cfg, ks[6 + cfg.n_encoder_layers + i])
+           for i in range(cfg.n_layers)]
+    return dict(
+        embed=(jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                 jnp.float32) * 0.02).astype(_dtype(cfg)),
+        dec_pos=(jax.random.normal(ks[1], (4096 + 32768, cfg.d_model),
+                                   jnp.float32) * 0.01).astype(_dtype(cfg)),
+        enc_layers=jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *enc),
+        dec_layers=jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *dec),
+        enc_final_norm=_norm_params(cfg, ks[2], cfg.d_model),
+        final_norm=_norm_params(cfg, ks[3], cfg.d_model),
+    )
+
+
+def _mha(x: jax.Array, kv_src: jax.Array, p: Dict[str, Any],
+         cfg: ModelConfig, *, causal: bool,
+         engine: Optional[Dict] = None) -> jax.Array:
+    b, s, _ = x.shape
+    sk = kv_src.shape[1]
+    hd = cfg.hd
+    q = L.linear(x, p["wq"], engine=engine).reshape(
+        b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = L.linear(kv_src, p["wk"], engine=engine).reshape(
+        b, sk, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = L.linear(kv_src, p["wv"], engine=engine).reshape(
+        b, sk, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    o = attn_lib.chunked_attention(q, k, v, causal=causal,
+                                   q_offset=sk - s if causal else 0,
+                                   block=cfg.attn_block)
+    return L.linear(o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim),
+                    p["wo"], engine=engine)
+
+
+def enc_layer_apply(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig, *,
+                    engine: Optional[Dict] = None) -> jax.Array:
+    h = L.apply_norm(x, p.get("attn_norm"), cfg.norm_type)
+    x = x + _mha(h, h, p["attn"], cfg, causal=False, engine=engine)
+    h = L.apply_norm(x, p.get("mlp_norm"), cfg.norm_type)
+    return x + L.mlp(h, p["mlp"], cfg.mlp_act, engine=engine)
+
+
+def dec_train_layer_apply(x: jax.Array, enc_out: jax.Array,
+                          p: Dict[str, Any], cfg: ModelConfig, *,
+                          engine: Optional[Dict] = None) -> jax.Array:
+    """One decoder layer of the training path (no cache): causal self-attn
+    + cross-attn to the encoder states + MLP.  Used by decode() and by the
+    roofline microbench."""
+    h = L.apply_norm(x, p.get("attn_norm"), cfg.norm_type)
+    x = x + _mha(h, h, p["attn"], cfg, causal=True, engine=engine)
+    h = L.apply_norm(x, p.get("xattn_norm"), cfg.norm_type)
+    x = x + _mha(h, enc_out, p["xattn"], cfg, causal=False, engine=engine)
+    h = L.apply_norm(x, p.get("mlp_norm"), cfg.norm_type)
+    return x + L.mlp(h, p["mlp"], cfg.mlp_act, engine=engine)
+
+
+def encode(params: Dict[str, Any], frames: jax.Array, cfg: ModelConfig, *,
+           engine: Optional[Dict] = None) -> jax.Array:
+    """frames: (B, T, D) stub embeddings -> encoder states (B, T, D)."""
+    x = frames.astype(_dtype(cfg)) + _sinusoid(
+        frames.shape[1], cfg.d_model).astype(_dtype(cfg))[None]
+
+    def body(x, p):
+        return enc_layer_apply(x, p, cfg, engine=engine), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.apply_norm(x, params.get("enc_final_norm"), cfg.norm_type)
+
+
+def decode(params: Dict[str, Any], tokens: jax.Array, enc_out: jax.Array,
+           cfg: ModelConfig, *, engine: Optional[Dict] = None) -> jax.Array:
+    """tokens (B, S) + encoder states -> logits (B, S, V)."""
+    b, s = tokens.shape
+    x = (L.embed(tokens, params["embed"]).astype(_dtype(cfg))
+         + params["dec_pos"][None, :s].astype(_dtype(cfg)))
+
+    def body(x, p):
+        return dec_train_layer_apply(x, enc_out, p, cfg, engine=engine), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.apply_norm(x, params.get("final_norm"), cfg.norm_type)
+    return L.unembed(x, params["embed"])
+
+
+def seq2seq_loss(params: Dict[str, Any], batch: Dict[str, jax.Array],
+                 cfg: ModelConfig, *, engine: Optional[Dict] = None) -> jax.Array:
+    enc_out = encode(params, batch["frames"], cfg, engine=engine)
+    logits = decode(params, batch["tokens"], enc_out, cfg, engine=engine)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(ll))
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# -- serving: decoder KV cache + precomputed cross-attn KV -------------------
+
+def init_serve_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    L_ = cfg.n_layers
+    return dict(
+        kv=dict(k=jnp.zeros((L_, batch, cfg.n_kv_heads, max_len, cfg.hd), dt),
+                v=jnp.zeros((L_, batch, cfg.n_kv_heads, max_len, cfg.hd), dt)),
+        xk=jnp.zeros((L_, batch, cfg.n_kv_heads, cfg.n_audio_frames, cfg.hd), dt),
+        xv=jnp.zeros((L_, batch, cfg.n_kv_heads, cfg.n_audio_frames, cfg.hd), dt),
+    )
+
+
+def precompute_cross_kv(params: Dict[str, Any], enc_out: jax.Array,
+                        cfg: ModelConfig, cache: Dict[str, Any],
+                        *, engine: Optional[Dict] = None) -> Dict[str, Any]:
+    b, t, _ = enc_out.shape
+
+    def body(_, p):
+        k = L.linear(enc_out, p["xattn"]["wk"], engine=engine).reshape(
+            b, t, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+        v = L.linear(enc_out, p["xattn"]["wv"], engine=engine).reshape(
+            b, t, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+        return None, (k, v)
+
+    _, (xk, xv) = jax.lax.scan(body, None, params["dec_layers"])
+    return dict(cache, xk=xk.astype(_dtype(cfg)), xv=xv.astype(_dtype(cfg)))
+
+
+def dec_layer_apply(x: jax.Array, p: Dict[str, Any],
+                    layer_cache: Dict[str, jax.Array], xk: jax.Array,
+                    xv: jax.Array, pos: jax.Array, cfg: ModelConfig, *,
+                    engine: Optional[Dict] = None):
+    """One decoder layer of the serve path: self-attn (cached) + cross-attn
+    (precomputed encoder KV) + MLP."""
+    b, s, _ = x.shape
+    hd = cfg.hd
+    h = L.apply_norm(x, p.get("attn_norm"), cfg.norm_type)
+    q = L.linear(h, p["attn"]["wq"], engine=engine).reshape(
+        b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = L.linear(h, p["attn"]["wk"], engine=engine).reshape(
+        b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = L.linear(h, p["attn"]["wv"], engine=engine).reshape(
+        b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    kv = attn_lib.update_cache(layer_cache, k, v, pos)
+    if s == 1:
+        o = attn_lib.decode_attention(q, kv["k"], kv["v"], cache_len=pos + 1)
+    else:
+        o = attn_lib.chunked_attention(q, k, v, causal=True,
+                                       block=cfg.attn_block)
+    x = x + L.linear(o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim),
+                     p["attn"]["wo"], engine=engine)
+    # cross attention over precomputed encoder KV
+    h = L.apply_norm(x, p.get("xattn_norm"), cfg.norm_type)
+    q = L.linear(h, p["xattn"]["wq"], engine=engine).reshape(
+        b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    o = attn_lib.chunked_attention(q, xk, xv, causal=False,
+                                   block=cfg.attn_block)
+    x = x + L.linear(o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim),
+                     p["xattn"]["wo"], engine=engine)
+    h = L.apply_norm(x, p.get("mlp_norm"), cfg.norm_type)
+    x = x + L.mlp(h, p["mlp"], cfg.mlp_act, engine=engine)
+    return x, kv
+
+
+def step(params: Dict[str, Any], tokens: jax.Array, cache: Dict[str, Any],
+         pos: jax.Array, cfg: ModelConfig, *,
+         engine: Optional[Dict] = None) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decoder serve step (S==1 decode / S>1 prefill) with cross-attn."""
+    b, s = tokens.shape
+    x = (L.embed(tokens, params["embed"]).astype(_dtype(cfg))
+         + jax.lax.dynamic_slice_in_dim(
+             params["dec_pos"], pos, s, axis=0)[None].astype(_dtype(cfg)))
+
+    def body(x, xs):
+        p, layer_cache, xk, xv = xs
+        return dec_layer_apply(x, p, layer_cache, xk, xv, pos, cfg,
+                               engine=engine)
+
+    x, new_kv = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["kv"], cache["xk"], cache["xv"]))
+    x = L.apply_norm(x, params.get("final_norm"), cfg.norm_type)
+    logits = L.unembed(x, params["embed"])
+    return logits, dict(cache, kv=new_kv)

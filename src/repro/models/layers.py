@@ -1,0 +1,149 @@
+"""Shared model layers (pure functional JAX).
+
+Weights can be *dense* arrays (training / DSP path) or *packed* dicts
+{"packed": uint8, "scale": f32} produced by the WeightStore freeze (the
+At-MRAM serving path).  Every matmul goes through :func:`linear`, which
+dispatches between them — the zero-copy heterogeneous-engine contract of
+the Siracusa cluster (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scenarios
+from repro.kernels import ops as kops
+
+
+# ---------------------------------------------------------------------------
+# linear dispatch
+# ---------------------------------------------------------------------------
+
+def linear(x: jax.Array, w, *, engine: Optional[Dict[str, Any]] = None,
+           bias: Optional[jax.Array] = None) -> jax.Array:
+    """y = x @ W^T (+ bias).  W: dense (N, K) array or packed dict.
+
+    ``engine``: {"scenario": ..., "mode": ..., "bits": ...} for packed
+    weights (defaults: l1mram / xla).
+    """
+    if isinstance(w, dict) and "packed" in w:
+        eng = engine or {}
+        scenario = eng.get("scenario", "l1mram")
+        mode = eng.get("mode", "xla")
+        bits = int(eng.get("bits", 8))
+        k_orig = x.shape[-1]
+        if scenario == "l1mram":
+            out = kops.quant_matmul(x, w["packed"], w["scale"], bits=bits,
+                                    k_orig=k_orig, mode=mode)
+        else:
+            from repro.core.weight_store import PackedParam
+            f = 8 // bits
+            n = w["packed"].shape[0]
+            p = PackedParam(packed=w["packed"], scale=w["scale"], bits=bits,
+                            orig_shape=(n, k_orig))
+            out = scenarios.linear_apply(x, p, scenario=scenario, mode=mode)
+        out = out.astype(x.dtype)
+    else:
+        out = jnp.matmul(x, w.T)
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: Optional[jax.Array], eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        x = x * (1.0 + 0.0 + scale.astype(jnp.float32))  # scale stored raw
+    return x.astype(dt)
+
+
+def layernorm(x: jax.Array, scale: Optional[jax.Array],
+              bias: Optional[jax.Array], eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        x = x * scale.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def apply_norm(x: jax.Array, params: Optional[Dict[str, jax.Array]],
+               kind: str) -> jax.Array:
+    """kind: rmsnorm | layernorm | nonparam_ln (OLMo-1B's non-parametric LN)."""
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"] if params else None)
+    if kind == "layernorm":
+        return layernorm(x, params.get("scale") if params else None,
+                         params.get("bias") if params else None)
+    if kind == "nonparam_ln":
+        return layernorm(x, None, None)
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, S, head_dim); positions: (S,) shared or (B, S) per-batch."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (d/2,)
+    if positions.ndim == 2:                                  # per-batch
+        angles = (positions[:, None, :, None].astype(jnp.float32) * freqs)
+    else:
+        angles = positions[..., :, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp(x: jax.Array, p: Dict[str, Any], act: str,
+        engine: Optional[Dict[str, Any]] = None) -> jax.Array:
+    """Gated (swiglu/geglu) or plain (gelu) MLP."""
+    if act in ("swiglu", "geglu"):
+        g = linear(x, p["w_gate"], engine=engine)
+        u = linear(x, p["w_up"], engine=engine)
+        h = (jax.nn.silu(g) if act == "swiglu"
+             else jax.nn.gelu(g, approximate=True)) * u
+    elif act == "gelu":
+        h = jax.nn.gelu(linear(x, p["w_up"], engine=engine,
+                               bias=p.get("b_up")), approximate=True)
+    else:
+        raise ValueError(f"unknown mlp act {act!r}")
+    return linear(h, p["w_down"], engine=engine, bias=p.get("b_down"))
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """logits = x @ table^T (tied or dedicated head)."""
+    return jnp.matmul(x, table.T.astype(x.dtype))

@@ -1,0 +1,125 @@
+"""Int8 MobileNet-V2 1.0-224 on the N-EUREKA path — the paper's workload.
+
+This is the end-to-end network of the paper's §IV scenario study: every
+conv runs as an N-EUREKA job (dense3x3 / dw3x3 / pw1x1 via
+kernels.ops.neureka_conv2d), weights live packed in a WeightStore, and the
+execution schedule is the same job list the memsys model walks — so the
+measured functional network and the analytical latency/energy model share
+one source of truth (core/perf_model.mobilenet_v2_jobs).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize
+from repro.core.perf_model import mobilenet_v2_jobs
+from repro.core.memsys import LayerShape
+from repro.kernels import ops as kops
+
+
+def init_params(key: jax.Array, weight_bits: int = 8,
+                img: int = 224) -> Dict[str, Any]:
+    """Float master weights for every job (to be frozen/packed)."""
+    jobs = mobilenet_v2_jobs(weight_bits, img)
+    params: Dict[str, Any] = {}
+    keys = jax.random.split(key, len(jobs))
+    for job, k in zip(jobs, keys):
+        if job.op_kind == "dense3x3":
+            shape = (job.cout, 3, 3, job.cin)
+        elif job.op_kind == "dw3x3":
+            shape = (job.cin, 3, 3)
+        else:
+            shape = (job.cout, job.cin)
+        fan_in = int(np.prod(shape[1:]))
+        params[job.name] = dict(
+            w=jax.random.normal(k, shape, jnp.float32) * (fan_in ** -0.5),
+            bias=jnp.zeros((shape[0],), jnp.float32),
+        )
+    return params
+
+
+def freeze_packed(params: Dict[str, Any], weight_bits: int = 8,
+                  img: int = 224) -> Dict[str, Any]:
+    """Quantize+pack every job's weights and fold requant params.
+
+    Per-channel requant multipliers are calibrated analytically so each
+    layer's int32 accumulator distribution maps onto the uint8 range
+    (NEMO-style static calibration): acc_std ~ in_rms * levels_rms *
+    sqrt(K); mult = target_std / acc_std with the output centered at 128
+    (activations are unsigned, zp folded into the bias).
+    """
+    jobs = mobilenet_v2_jobs(weight_bits, img)
+    out: Dict[str, Any] = {}
+    in_rms = 128.0                     # running estimate of input-act RMS
+    for job in jobs:
+        p = params[job.name]
+        if job.op_kind == "dense3x3":
+            packed, scale = kops.prep_conv3x3(p["w"], weight_bits)
+            k_red = 9 * job.cin
+            lv = packing_levels(packed, weight_bits, (job.cout, 3, 3, job.cin))
+        elif job.op_kind == "dw3x3":
+            packed, scale = kops.prep_dw3x3(p["w"], weight_bits)
+            k_red = 9
+            lv = packing_levels(packed, weight_bits, (job.cin, 9))
+        else:
+            packed, scale = kops.prep_linear(p["w"], weight_bits)
+            k_red = job.cin
+            lv = packing_levels(packed, weight_bits, (job.cout, job.cin))
+        lv_rms = jnp.sqrt(jnp.mean(
+            lv.reshape(lv.shape[0], -1).astype(jnp.float32) ** 2, axis=1))
+        acc_std = in_rms * jnp.maximum(lv_rms, 1e-3) * (k_red ** 0.5)
+        mult = 40.0 / acc_std          # target output std ~ 40 LSB
+        bias = jnp.full((lv.shape[0],), 128, jnp.int32)   # center unsigned
+        out[job.name] = dict(packed=packed, mult=mult.astype(jnp.float32),
+                             bias=bias + jnp.round(
+                                 p["bias"]).astype(jnp.int32))
+    return out
+
+
+def packing_levels(packed: jax.Array, bits: int, shape) -> jax.Array:
+    from repro.core import packing as _packing
+    return _packing.unpack(packed, bits, shape[-1]).reshape(shape[0], -1)
+
+
+def apply(packed_params: Dict[str, Any], image_q: jax.Array, *,
+          weight_bits: int = 8, mode: str = "xla",
+          img: int = 224) -> jax.Array:
+    """Run int8 MobileNet-V2.  image_q: (H, W, 3) uint8 -> logits (1000,).
+
+    Residual adds follow NEMO integer semantics: uint8 feature maps added
+    in int32 then clipped back to uint8 (scales aligned by construction).
+    """
+    jobs = mobilenet_v2_jobs(weight_bits, img)
+    x = image_q
+    residual: Optional[jax.Array] = None
+    res_cin = -1
+    for job in jobs:
+        p = packed_params[job.name]
+        if job.name == "fc":
+            x = jnp.mean(x.astype(jnp.float32), axis=(0, 1),
+                         keepdims=True).astype(jnp.uint8)   # avg pool
+        op = job.op_kind
+        new_x = kops.neureka_conv2d(
+            x, p["packed"], p["mult"], p["bias"], op=op,
+            bits=weight_bits, cin=job.cin, stride=job.stride, mode=mode)
+        # inverted-residual skip: around (pw_exp, dw, pw_proj) triples with
+        # stride 1 and matching channels
+        if job.name.endswith(".pw_exp"):
+            residual, res_cin = x, job.cin
+        if (job.name.endswith(".pw_proj") and residual is not None
+                and job.stride == 1 and new_x.shape == residual.shape):
+            s = residual.astype(jnp.int32) + new_x.astype(jnp.int32) - 128
+            new_x = jnp.clip(s, 0, 255).astype(jnp.uint8)
+        if job.name.endswith(".pw_proj"):
+            residual = None
+        x = new_x
+    return x.reshape(-1)
+
+
+def job_list(weight_bits: int = 8, img: int = 224) -> List[LayerShape]:
+    return mobilenet_v2_jobs(weight_bits, img)

@@ -1,0 +1,191 @@
+"""Mixture-of-Experts with capacity-based EP dispatch (qwen2-moe, arctic).
+
+Dispatch is the static-shape sort+scatter formulation used on TPUs:
+tokens' top-k assignments are sorted by expert, each assignment gets a
+rank-within-expert via a searchsorted offset, assignments whose rank
+exceeds the per-expert capacity are dropped (standard capacity-factor
+routing), and the (E, C, D) dispatch buffer is built with one scatter.
+Expert FFNs run as a single batched einsum over the expert dimension,
+which shards over the `model` mesh axis (expert parallelism).
+
+Under the At-MRAM serving path, expert weights are the paging showcase:
+a 60-expert layer's packed weights behave exactly like a > 8 MiB network
+on Siracusa — pages of experts stream through the resident budget
+(core/paging.py) while the router's deterministic layer order drives
+proactive prefetch.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def capacity(n_tokens: int, n_experts: int, k: int,
+             capacity_factor: float) -> int:
+    c = int(n_tokens * k / n_experts * capacity_factor)
+    return max(8, -(-c // 8) * 8)     # pad to 8 for TPU-friendly shapes
+
+
+def route(x: jax.Array, router_w: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """x: (T, D) -> (gates (T, k) softmaxed over chosen, idx (T, k))."""
+    logits = jnp.matmul(x.astype(jnp.float32), router_w.T.astype(jnp.float32))
+    gates, idx = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    return gates, idx
+
+
+def dispatch(x: jax.Array, gates: jax.Array, idx: jax.Array,
+             n_experts: int, cap: int):
+    """Sort+scatter dispatch: returns (buf (E, C, D), aux arrays).
+
+    Pure-array form (no closures) so it vmaps over dispatch groups —
+    group-local dispatch keeps the scatter on-shard (no cross-device
+    scatter collectives), the EP optimization of EXPERIMENTS.md §Perf.
+    """
+    t, d = x.shape
+    k = idx.shape[1]
+    flat_e = idx.reshape(-1)                          # (T*k,)
+    flat_g = gates.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    g_sorted = flat_g[order]
+
+    # rank within expert: position - first index of that expert in the sort
+    starts = jnp.searchsorted(e_sorted, jnp.arange(n_experts), side="left")
+    rank = jnp.arange(t * k) - starts[e_sorted]
+    keep = rank < cap
+    slot = jnp.where(keep, rank, cap)                 # overflow -> trash slot
+
+    buf = jnp.zeros((n_experts, cap + 1, d), x.dtype)
+    buf = buf.at[e_sorted, slot].set(x[tok_sorted])
+    buf = buf[:, :cap, :]
+    aux = dict(e_sorted=e_sorted, slot=slot, tok_sorted=tok_sorted,
+               g_sorted=g_sorted, keep=keep)
+    return buf, aux
+
+
+def combine(expert_out: jax.Array, aux, t: int) -> jax.Array:
+    dout = expert_out.shape[-1]
+    padded = jnp.pad(expert_out, ((0, 0), (0, 1), (0, 0)))
+    y_sorted = padded[aux["e_sorted"], aux["slot"]]   # (T*k, Dout)
+    w = jnp.where(aux["keep"], aux["g_sorted"], 0.0)[:, None]
+    y_sorted = y_sorted * w.astype(y_sorted.dtype)
+    out = jnp.zeros((t, dout), y_sorted.dtype)
+    return out.at[aux["tok_sorted"]].add(y_sorted)
+
+
+def dispatch_combine(x: jax.Array, gates: jax.Array, idx: jax.Array,
+                     n_experts: int, cap: int):
+    """Back-compat wrapper: returns (buf, combine closure)."""
+    buf, aux = dispatch(x, gates, idx, n_experts, cap)
+    t = x.shape[0]
+    return buf, lambda expert_out: combine(expert_out, aux, t)
+
+
+def expert_ffn(buf: jax.Array, p: Dict[str, Any], act: str = "swiglu",
+               engine: Optional[Dict[str, Any]] = None) -> jax.Array:
+    """Batched expert MLP: buf (E, C, D) x stacked weights (E, F, D)."""
+    if isinstance(p["w_gate"], dict):
+        # packed experts: vmap the quantized path over the expert dim
+        def one(b, wg, wu, wd, sg, su, sd):
+            pe = dict(w_gate=dict(packed=wg, scale=sg),
+                      w_up=dict(packed=wu, scale=su),
+                      w_down=dict(packed=wd, scale=sd))
+            return layers.mlp(b, pe, act, engine=engine)
+        return jax.vmap(one)(buf, p["w_gate"]["packed"], p["w_up"]["packed"],
+                             p["w_down"]["packed"], p["w_gate"]["scale"],
+                             p["w_up"]["scale"], p["w_down"]["scale"])
+    g = jnp.einsum("ecd,efd->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,efd->ecf", buf, p["w_up"])
+    h = (jax.nn.silu(g) if act == "swiglu"
+         else jax.nn.gelu(g, approximate=True)) * u
+    return jnp.einsum("ecf,edf->ecd", h, p["w_down"])
+
+
+def moe_apply(x: jax.Array, p: Dict[str, Any], *, n_experts: int, k: int,
+              capacity_factor: float = 1.25, act: str = "swiglu",
+              groups: int = 1,
+              engine: Optional[Dict[str, Any]] = None) -> jax.Array:
+    """Full MoE layer.  x: (..., D) -> (..., D).
+
+    p: router (E, D), w_gate/w_up (E, F, D), w_down (E, D, F),
+    optional shared-expert MLP (w_gate/w_up/w_down without E dim) and
+    optional dense-residual MLP (arctic) under p["dense"].
+
+    ``groups > 1`` enables DP-local dispatch: tokens are regrouped to
+    (G, T/G, ...) with G matching the data-parallel shard count, so the
+    sort/scatter/gather machinery never crosses shards — only the expert
+    einsums touch the network (psum over the TP'd expert hidden dim).
+    Beyond-paper optimization; see EXPERIMENTS.md §Perf.
+    """
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    t = xf.shape[0]
+
+    if groups > 1 and t % groups == 0:
+        from jax.sharding import PartitionSpec as P
+        tg = t // groups
+        xg = xf.reshape(groups, tg, d)
+        if engine and engine.get("dp_axes"):
+            xg = jax.lax.with_sharding_constraint(
+                xg, P(tuple(engine["dp_axes"]), None, None))
+        gates, idx = jax.vmap(lambda xx: route(xx, p["router"], k))(xg)
+        cap = capacity(tg, n_experts, k, capacity_factor)
+        buf, aux = jax.vmap(
+            lambda xx, gg, ii: dispatch(xx, gg, ii, n_experts, cap))(
+            xg, gates, idx)
+        if engine and engine.get("dp_axes"):
+            dp = tuple(engine["dp_axes"])
+            # keep the dispatch buffer group-sharded and the expert hidden
+            # dim TP'd — vmap otherwise loses the F-sharding and GSPMD
+            # replicates the expert einsums (measured: 3x compute blowup).
+            buf = jax.lax.with_sharding_constraint(
+                buf, P(dp, None, None, None))
+            g_ = jnp.einsum("gecd,efd->gecf", buf, p["w_gate"])
+            u_ = jnp.einsum("gecd,efd->gecf", buf, p["w_up"])
+            g_ = jax.lax.with_sharding_constraint(g_, P(dp, None, None, "model"))
+            u_ = jax.lax.with_sharding_constraint(u_, P(dp, None, None, "model"))
+            h_ = (jax.nn.silu(g_) if act == "swiglu"
+                  else jax.nn.gelu(g_, approximate=True)) * u_
+            expert_out = jnp.einsum("gecf,edf->gecd", h_, p["w_down"])
+            expert_out = jax.lax.with_sharding_constraint(
+                expert_out, P(dp, None, None, None))
+        else:
+            expert_out = jax.vmap(
+                lambda bb: expert_ffn(bb, p, act=act, engine=engine))(buf)
+        y = jax.vmap(lambda eo, ax: combine(eo, ax, tg))(expert_out, aux)
+        y = y.reshape(t, d).astype(x.dtype)
+    else:
+        gates, idx = route(xf, p["router"], k)
+        cap = capacity(t, n_experts, k, capacity_factor)
+        buf, aux = dispatch(xf, gates, idx, n_experts, cap)
+        expert_out = expert_ffn(buf, p, act=act, engine=engine)
+        y = combine(expert_out, aux, t).astype(x.dtype)
+
+    if "shared" in p:
+        y = y + layers.mlp(xf, p["shared"], act, engine=engine)
+    if "dense" in p:
+        y = y + layers.mlp(xf, p["dense"], act, engine=engine)
+    return y.reshape(*lead, d)
+
+
+def router_aux_loss(x: jax.Array, router_w: jax.Array, idx: jax.Array,
+                    n_experts: int) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss."""
+    xf = x.reshape(-1, x.shape[-1])
+    logits = jnp.matmul(xf.astype(jnp.float32), router_w.T.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)           # (T, E)
+    # fraction of tokens whose top-1 hits each expert
+    top1 = jax.nn.one_hot(idx[..., 0].reshape(-1), n_experts)
+    f = jnp.mean(top1, axis=0)
+    pbar = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(f * pbar)

@@ -1,0 +1,168 @@
+"""Mamba-1 selective SSM (falcon-mamba-7b; hymba's SSM heads).
+
+Train/prefill uses a chunked parallel scan (lax.scan over sequence chunks,
+associative scan inside a chunk) so the (B, S, d_inner, N) discretized
+tensors never materialize beyond one chunk — the VMEM-bounded discipline
+again.  Decode is the O(1) recurrent update carrying (h, conv window).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: Optional[jax.Array],
+                  state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over sequence.  x: (B, S, C), w: (C, K).
+
+    Returns (y, new_state) with state = last K-1 inputs (B, K-1, C).
+    """
+    bsz, s, c = x.shape
+    k = w.shape[1]
+    if state is None:
+        state = jnp.zeros((bsz, k - 1, c), x.dtype)
+    xe = jnp.concatenate([state, x], axis=1)          # (B, S+K-1, C)
+    y = jnp.zeros((bsz, s, c), jnp.float32)
+    for i in range(k):
+        y = y + xe[:, i:i + s, :].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    new_state = xe[:, s:, :] if k > 1 else state
+    return y.astype(x.dtype), new_state
+
+
+def _ssm_chunk_scan(dA: jax.Array, dBx: jax.Array, h0: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """h_t = dA_t * h_{t-1} + dBx_t within one chunk via associative scan.
+
+    dA, dBx: (B, T, Di, N); h0: (B, Di, N).  Returns (h_all, h_last).
+    """
+    def comb(a, b):
+        a_a, a_b = a
+        b_a, b_b = b
+        return a_a * b_a, b_a * a_b + b_b
+
+    aa, bb = jax.lax.associative_scan(comb, (dA, dBx), axis=1)
+    h_all = aa * h0[:, None] + bb
+    return h_all, h_all[:, -1]
+
+
+def selective_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                   C: jax.Array, D: jax.Array, h0: Optional[jax.Array] = None,
+                   chunk: int = 256,
+                   compute_dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """Selective SSM over a sequence.
+
+    x, dt: (Bz, S, Di);  A: (Di, N);  B, C: (Bz, S, N);  D: (Di,).
+    Returns (y (Bz, S, Di), h_last (Bz, Di, N)).
+    """
+    bsz, s, di = x.shape
+    n = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nchunks = (s + pad) // chunk
+
+    xc = jnp.moveaxis(x.reshape(bsz, nchunks, chunk, di), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(bsz, nchunks, chunk, di), 1, 0)
+    Bc = jnp.moveaxis(B.reshape(bsz, nchunks, chunk, n), 1, 0)
+    Cc = jnp.moveaxis(C.reshape(bsz, nchunks, chunk, n), 1, 0)
+
+    def step(h, xs):
+        # compute_dtype=bf16 halves the HBM traffic of the (B,T,Di,N)
+        # discretized tensors; the carried state h stays f32 for stability.
+        xk, dtk, bk, ck = (v.astype(compute_dtype) for v in xs)
+        dA = jnp.exp(dtk.astype(jnp.float32)[..., None]
+                     * A[None, None]).astype(compute_dtype)   # (B,T,Di,N)
+        dBx = dtk[..., None] * bk[:, :, None, :] * xk[..., None]
+        h_all, h_last = _ssm_chunk_scan(dA.astype(compute_dtype),
+                                        dBx.astype(compute_dtype),
+                                        h.astype(compute_dtype))
+        y = jnp.einsum("btdn,btn->btd", h_all, ck,
+                       preferred_element_type=jnp.float32)
+        return h_last.astype(jnp.float32), y
+
+    h_last, ys = jax.lax.scan(step, h0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s + pad, di)[:, :s]
+    y = y + x[:, :s].astype(jnp.float32) * D[None, None]
+    return y, h_last
+
+
+def ssm_decode_step(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                    C: jax.Array, D: jax.Array, h: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence.  x, dt: (Bz, Di); B, C: (Bz, N); h: (Bz, Di, N)."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    dA = jnp.exp(dtf[..., None] * A[None])                    # (Bz, Di, N)
+    dBx = dtf[..., None] * B[:, None, :].astype(jnp.float32) * xf[..., None]
+    h = dA * h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C.astype(jnp.float32))
+    y = y + xf * D[None]
+    return y, h
+
+
+def mamba_mixer(x: jax.Array, p: Dict[str, Any], *, d_inner: int,
+                ssm_state: int, dt_rank: int, conv_k: int = 4,
+                chunk: int = 256, scan_dtype=jnp.float32,
+                shard_inner: bool = False,
+                state: Optional[Dict[str, jax.Array]] = None,
+                engine: Optional[Dict[str, Any]] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full Mamba-1 mixer.  x: (B, S, D) -> (B, S, D).
+
+    ``state`` (decode): {"h": (B, Di, N), "conv": (B, K-1, Di)}.
+    """
+    decode = state is not None and x.shape[1] == 1
+
+    xz = layers.linear(x, p["in_proj"], engine=engine)        # (B,S,2*Di)
+    if shard_inner and engine and engine.get("dp_axes"):
+        from jax.sharding import PartitionSpec as P
+        xz = jax.lax.with_sharding_constraint(
+            xz, P(tuple(engine["dp_axes"]), None, "model"))
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = causal_conv1d(xs, p["conv_w"], p.get("conv_b"), conv_state)
+    xc = jax.nn.silu(xc)
+
+    dbc = layers.linear(xc, p["x_proj"], engine=engine)       # (B,S,R+2N)
+    dt_in = dbc[..., :dt_rank]
+    B = dbc[..., dt_rank:dt_rank + ssm_state]
+    C = dbc[..., dt_rank + ssm_state:]
+    dt = jax.nn.softplus(layers.linear(dt_in, p["dt_proj"], engine=engine)
+                         + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (Di, N)
+
+    if decode:
+        h = state["h"]
+        y, h_new = ssm_decode_step(xc[:, 0], dt[:, 0], A, B[:, 0], C[:, 0],
+                                   p["D"], h)
+        y = y[:, None]
+        new_state = dict(h=h_new, conv=new_conv)
+    else:
+        h0 = state["h"] if state is not None else None
+        y, h_last = selective_scan(xc, dt, A, B, C, p["D"], h0, chunk=chunk,
+                                   compute_dtype=scan_dtype)
+        new_state = dict(h=h_last, conv=new_conv) if state is not None else None
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = layers.linear(y, p["out_proj"], engine=engine)
+    return out, new_state
+
+
+def init_ssm_state(batch: int, d_inner: int, ssm_state: int, conv_k: int = 4,
+                   dtype=jnp.float32) -> Dict[str, jax.Array]:
+    return dict(h=jnp.zeros((batch, d_inner, ssm_state), jnp.float32),
+                conv=jnp.zeros((batch, conv_k - 1, d_inner), dtype))

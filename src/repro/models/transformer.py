@@ -1,0 +1,501 @@
+"""Decoder-only LM assembly: init / forward / train loss / prefill / decode.
+
+One code path covers the dense, MoE, SSM and hybrid families via
+ModelConfig; layers are *stacked* and executed with ``jax.lax.scan`` so the
+lowered HLO stays one-layer-sized (essential for 512-device dry-run compile
+times and for weight paging, whose page == layer granularity).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm_params(cfg: ModelConfig, key, shape_d: int) -> Optional[Dict]:
+    if cfg.norm_type == "nonparam_ln":
+        return {}
+    if cfg.norm_type == "layernorm":
+        return dict(scale=jnp.ones((shape_d,), _dtype(cfg)),
+                    bias=jnp.zeros((shape_d,), _dtype(cfg)))
+    return dict(scale=jnp.zeros((shape_d,), _dtype(cfg)))   # rmsnorm (1+s)
+
+
+def _dense_init(key, out_d: int, in_d: int, cfg: ModelConfig,
+                scale: float = 1.0) -> jax.Array:
+    std = scale * (in_d ** -0.5)
+    return (jax.random.normal(key, (out_d, in_d), jnp.float32) * std
+            ).astype(_dtype(cfg))
+
+
+def _attn_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    p = dict(
+        wq=_dense_init(ks[0], cfg.q_dim, cfg.d_model, cfg),
+        wk=_dense_init(ks[1], cfg.kv_dim, cfg.d_model, cfg),
+        wv=_dense_init(ks[2], cfg.kv_dim, cfg.d_model, cfg),
+        wo=_dense_init(ks[3], cfg.d_model, cfg.q_dim, cfg),
+    )
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), _dtype(cfg))
+        p["bk"] = jnp.zeros((cfg.kv_dim,), _dtype(cfg))
+        p["bv"] = jnp.zeros((cfg.kv_dim,), _dtype(cfg))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.hd,), _dtype(cfg))
+        p["k_norm"] = jnp.zeros((cfg.hd,), _dtype(cfg))
+    return p
+
+
+def _mlp_params(cfg: ModelConfig, key, d_ff: int) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return dict(w_gate=_dense_init(ks[0], d_ff, cfg.d_model, cfg),
+                    w_up=_dense_init(ks[1], d_ff, cfg.d_model, cfg),
+                    w_down=_dense_init(ks[2], cfg.d_model, d_ff, cfg))
+    return dict(w_up=_dense_init(ks[0], d_ff, cfg.d_model, cfg),
+                b_up=jnp.zeros((d_ff,), _dtype(cfg)),
+                w_down=_dense_init(ks[1], cfg.d_model, d_ff, cfg),
+                b_down=jnp.zeros((cfg.d_model,), _dtype(cfg)))
+
+
+def _moe_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    e, f, d = cfg.n_experts, cfg.moe_d_ff, cfg.d_model
+    std = d ** -0.5
+    p = dict(
+        router=_dense_init(ks[0], e, d, cfg),
+        w_gate=(jax.random.normal(ks[1], (e, f, d), jnp.float32) * std
+                ).astype(_dtype(cfg)),
+        w_up=(jax.random.normal(ks[2], (e, f, d), jnp.float32) * std
+              ).astype(_dtype(cfg)),
+        w_down=(jax.random.normal(ks[3], (e, d, f), jnp.float32) * (f ** -0.5)
+                ).astype(_dtype(cfg)),
+    )
+    if cfg.shared_d_ff:
+        p["shared"] = _mlp_params(cfg, ks[4], cfg.shared_d_ff)
+    if cfg.dense_residual_d_ff:
+        p["dense"] = _mlp_params(cfg, ks[5], cfg.dense_residual_d_ff)
+    return p
+
+
+def _ssm_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    di, n, r = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    return dict(
+        in_proj=_dense_init(ks[0], 2 * di, cfg.d_model, cfg),
+        conv_w=(jax.random.normal(ks[1], (di, cfg.ssm_conv), jnp.float32)
+                * (cfg.ssm_conv ** -0.5)).astype(_dtype(cfg)),
+        conv_b=jnp.zeros((di,), _dtype(cfg)),
+        x_proj=_dense_init(ks[2], r + 2 * n, di, cfg),
+        dt_proj=_dense_init(ks[3], di, r, cfg),
+        dt_bias=jnp.full((di,), -4.6, _dtype(cfg)),   # softplus^-1(0.01)
+        A_log=jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None],
+                               (di, 1))),
+        D=jnp.ones((di,), jnp.float32),
+        out_proj=_dense_init(ks[4], cfg.d_model, di, cfg),
+    )
+
+
+def _layer_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "hybrid", "vlm"):
+        p["attn_norm"] = _norm_params(cfg, ks[0], cfg.d_model)
+        p["attn"] = _attn_params(cfg, ks[1])
+    if cfg.family in ("ssm", "hybrid"):
+        p["ssm_norm"] = _norm_params(cfg, ks[2], cfg.d_model)
+        p["ssm"] = _ssm_params(cfg, ks[3])
+    if cfg.family == "moe":
+        p["mlp_norm"] = _norm_params(cfg, ks[4], cfg.d_model)
+        p["moe"] = _moe_params(cfg, ks[5])
+    elif cfg.family != "ssm":     # dense / hybrid / vlm get a dense MLP
+        p["mlp_norm"] = _norm_params(cfg, ks[4], cfg.d_model)
+        p["mlp"] = _mlp_params(cfg, ks[5], cfg.d_ff)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    layer_ps = [_layer_params(cfg, ks[4 + i]) for i in range(cfg.n_layers)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layer_ps)
+    params: Dict[str, Any] = dict(
+        embed=(jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                 jnp.float32) * 0.02).astype(_dtype(cfg)),
+        final_norm=_norm_params(cfg, ks[1], cfg.d_model),
+        layers=stacked,
+    )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(ks[2], cfg.vocab_size, cfg.d_model, cfg)
+    if cfg.n_meta_tokens:
+        params["meta_tokens"] = (jax.random.normal(
+            ks[3], (cfg.n_meta_tokens, cfg.d_model), jnp.float32) * 0.02
+            ).astype(_dtype(cfg))
+    return params
+
+
+def count_params(params: Any) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params)
+               if hasattr(x, "size"))
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+
+def _attn_apply(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig, *,
+                window, q_offset: int = 0,
+                cache: Optional[Dict[str, jax.Array]] = None,
+                cache_pos: Optional[jax.Array] = None,
+                static_window: Optional[int] = None,
+                engine: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = L.linear(x, p["wq"], engine=engine, bias=p.get("bq"))
+    k = L.linear(x, p["wk"], engine=engine, bias=p.get("bk"))
+    v = L.linear(x, p["wv"], engine=engine, bias=p.get("bv"))
+    q = q.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"])
+        k = L.rmsnorm(k, p["k_norm"])
+    pos = q_offset + jnp.arange(s)
+    if cache_pos is not None:
+        if getattr(cache_pos, "ndim", 0) == 1:   # per-batch (continuous batching)
+            pos = cache_pos[:, None] + jnp.arange(s)[None]
+        else:
+            pos = cache_pos + jnp.arange(s)
+    q = L.apply_rope(q, pos, cfg.rope_theta)
+    k = L.apply_rope(k, pos, cfg.rope_theta)
+
+    adt = jnp.dtype(cfg.attn_dtype)
+    if cache is not None:
+        insert_at = cache_pos if cache_pos is not None else 0
+        cache = attn_lib.update_cache(cache, k, v, insert_at)
+        if s == 1:   # decode
+            o = attn_lib.decode_attention(
+                q, cache["k"], cache["v"],
+                cache_len=insert_at + 1,
+                window=window if window is not None else None,
+                compute_dtype=adt)
+        else:        # prefill into cache
+            o = attn_lib.chunked_attention(q, k, v, causal=True,
+                                           window=window, q_offset=0,
+                                           block=cfg.attn_block,
+                                           compute_dtype=adt)
+    elif static_window is not None:
+        # q-blocked sliding-window fast path: O(S*(window+bq)) work
+        o = attn_lib.windowed_attention(q, k, v, window=static_window,
+                                        q_offset=q_offset,
+                                        compute_dtype=adt)
+    else:
+        o = attn_lib.chunked_attention(q, k, v, causal=True, window=window,
+                                       q_offset=q_offset,
+                                       block=cfg.attn_block,
+                                       compute_dtype=adt)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
+    return L.linear(o, p["wo"], engine=engine), cache
+
+
+def _layer_apply(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig, *,
+                 window, cache: Optional[Dict] = None,
+                 cache_pos: Optional[jax.Array] = None,
+                 static_window: Optional[int] = None,
+                 engine: Optional[Dict] = None
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    new_cache: Dict[str, Any] = {}
+    if "attn" in p:
+        h = L.apply_norm(x, p.get("attn_norm"), cfg.norm_type)
+        a, kv = _attn_apply(h, p["attn"], cfg, window=window,
+                            cache=cache.get("kv") if cache else None,
+                            cache_pos=cache_pos,
+                            static_window=static_window, engine=engine)
+        if cfg.family == "hybrid":
+            # hymba: attention and SSM heads run in parallel on the same
+            # normalized input; outputs are averaged.
+            m, s_state = ssm_lib.mamba_mixer(
+                h, p["ssm"], d_inner=cfg.d_inner, ssm_state=cfg.ssm_state,
+                dt_rank=cfg.dt_rank, conv_k=cfg.ssm_conv,
+                chunk=cfg.ssm_chunk, scan_dtype=jnp.dtype(cfg.scan_dtype),
+                shard_inner=cfg.ssm_shard_inner,
+                state=cache.get("ssm") if cache else None, engine=engine)
+            a = 0.5 * (a + m)
+            if cache is not None:
+                new_cache["ssm"] = s_state
+        x = x + a
+        if cache is not None:
+            new_cache["kv"] = kv
+    elif "ssm" in p:   # pure SSM family
+        h = L.apply_norm(x, p.get("ssm_norm"), cfg.norm_type)
+        m, s_state = ssm_lib.mamba_mixer(
+            h, p["ssm"], d_inner=cfg.d_inner, ssm_state=cfg.ssm_state,
+            dt_rank=cfg.dt_rank, conv_k=cfg.ssm_conv, chunk=cfg.ssm_chunk,
+            scan_dtype=jnp.dtype(cfg.scan_dtype),
+            shard_inner=cfg.ssm_shard_inner,
+            state=cache.get("ssm") if cache else None, engine=engine)
+        x = x + m
+        if cache is not None:
+            new_cache["ssm"] = s_state
+
+    if "moe" in p:
+        h = L.apply_norm(x, p.get("mlp_norm"), cfg.norm_type)
+        x = x + moe_lib.moe_apply(
+            h, p["moe"], n_experts=cfg.n_experts, k=cfg.n_experts_active,
+            capacity_factor=cfg.capacity_factor, act=cfg.mlp_act,
+            groups=max(cfg.moe_groups, 1), engine=engine)
+    elif "mlp" in p:
+        h = L.apply_norm(x, p.get("mlp_norm"), cfg.norm_type)
+        x = x + L.mlp(h, p["mlp"], cfg.mlp_act, engine=engine)
+    return x, (new_cache if cache is not None else None)
+
+
+def _layer_windows(cfg: ModelConfig) -> Optional[jax.Array]:
+    """Per-layer window sizes (hymba mixes sliding-window + global layers)."""
+    if cfg.window is None:
+        return None
+    w = jnp.full((cfg.n_layers,), cfg.window, jnp.int32)
+    if cfg.n_global_layers:
+        # global layers: first, last, and evenly spaced middles (hymba)
+        idx = jnp.linspace(0, cfg.n_layers - 1,
+                           cfg.n_global_layers).round().astype(jnp.int32)
+        w = w.at[idx].set(jnp.int32(2 ** 30))
+    return w
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(params: Dict[str, Any], tokens: jax.Array, cfg: ModelConfig, *,
+            engine: Optional[Dict] = None,
+            extra_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """tokens (B, S) -> logits (B, S_total, V).
+
+    ``extra_embeds`` (B, P, D) are prepended (VLM patches / hymba meta
+    tokens are handled internally).
+    """
+    x = L.embed(tokens, params["embed"]).astype(_dtype(cfg))
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    prefix = []
+    if extra_embeds is not None:
+        prefix.append(extra_embeds.astype(x.dtype))
+    if cfg.n_meta_tokens:
+        b = x.shape[0]
+        prefix.append(jnp.broadcast_to(
+            params["meta_tokens"][None], (b, cfg.n_meta_tokens, cfg.d_model)
+        ).astype(x.dtype))
+    if prefix:
+        x = jnp.concatenate(prefix + [x], axis=1)
+
+    windows = _layer_windows(cfg)
+    win_xs = (windows if windows is not None
+              else jnp.zeros((cfg.n_layers,), jnp.int32))
+
+    if (cfg.segmented_window_scan and cfg.window is not None
+            and cfg.n_global_layers):
+        # order-preserving segmentation: unroll the (few) global-attention
+        # layers, scan the sliding-window runs between them with a STATIC
+        # window so the q-blocked fast path applies (hymba optimization,
+        # EXPERIMENTS.md §Perf).
+        import numpy as _np
+        g_idx = sorted(set(int(i) for i in _np.round(
+            _np.linspace(0, cfg.n_layers - 1, cfg.n_global_layers))))
+
+        def win_body(x, p):
+            y, _ = _layer_apply(x, p, cfg, window=None,
+                                static_window=cfg.window, engine=engine)
+            return y, None
+
+        if cfg.remat:
+            win_body = jax.checkpoint(win_body)
+        pos = 0
+        for g in g_idx + [cfg.n_layers]:
+            if g > pos:   # sliding-window run [pos, g)
+                seg = jax.tree_util.tree_map(lambda a: a[pos:g],
+                                             params["layers"])
+                x, _ = jax.lax.scan(win_body, x, seg)
+            if g < cfg.n_layers:   # the global layer itself
+                pg = jax.tree_util.tree_map(lambda a: a[g], params["layers"])
+                x, _ = _layer_apply(x, pg, cfg, window=None, engine=engine)
+            pos = g + 1
+    else:
+        def body(x, xs):
+            p, win = xs
+            w = win if windows is not None else None
+            y, _ = _layer_apply(x, p, cfg, window=w, engine=engine)
+            return y, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, (params["layers"], win_xs))
+
+    x = L.apply_norm(x, params.get("final_norm"), cfg.norm_type)
+    head = params.get("lm_head", params["embed"])
+    logits = L.unembed(x, head)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+def lm_loss(params: Dict[str, Any], batch: Dict[str, jax.Array],
+            cfg: ModelConfig, *, engine: Optional[Dict] = None) -> jax.Array:
+    """Next-token cross-entropy.  batch: tokens (B, S), labels (B, S),
+    optional loss_mask, optional frames/patches for stub frontends."""
+    extra = batch.get("patches")
+    logits = forward(params, batch["tokens"], cfg, engine=engine,
+                     extra_embeds=extra)
+    # only score the text positions (prefix tokens carry no labels)
+    s = batch["labels"].shape[1]
+    logits = logits[:, -s:, :].astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(ll))
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with per-layer caches (stacked, scan-carried)
+# ---------------------------------------------------------------------------
+
+def init_serve_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    cache: Dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "hybrid", "vlm", "encdec"):
+        cache["kv"] = dict(
+            k=jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.hd), dt),
+            v=jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.hd), dt),
+        )
+    if cfg.family in ("ssm", "hybrid"):
+        cache["ssm"] = dict(
+            h=jnp.zeros((cfg.n_layers, batch, cfg.d_inner, cfg.ssm_state),
+                        jnp.float32),
+            conv=jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                            cfg.d_inner), dt),
+        )
+    return cache
+
+
+def step(params: Dict[str, Any], tokens: jax.Array, cache: Dict[str, Any],
+         pos: jax.Array, cfg: ModelConfig, *,
+         engine: Optional[Dict] = None,
+         extra_embeds: Optional[jax.Array] = None
+         ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Serve step: run ``tokens`` (B, S) through the model, reading/writing
+    the stacked cache at position ``pos``.  S == 1 is decode; S > 1 prefill.
+
+    On prefill, ``extra_embeds`` (VLM patches) and hymba meta tokens are
+    prepended exactly as in :func:`forward`; the returned logits cover only
+    the last S (token) positions.  ``pos`` must account for the prefix when
+    decoding (first decode pos = prefix_len + prompt_len).
+    """
+    s_tokens = tokens.shape[1]
+    x = L.embed(tokens, params["embed"]).astype(_dtype(cfg))
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if s_tokens > 1:   # prefill: build the prefix exactly like forward()
+        prefix = []
+        if extra_embeds is not None:
+            prefix.append(extra_embeds.astype(x.dtype))
+        if cfg.n_meta_tokens:
+            b = x.shape[0]
+            prefix.append(jnp.broadcast_to(
+                params["meta_tokens"][None],
+                (b, cfg.n_meta_tokens, cfg.d_model)).astype(x.dtype))
+        if prefix:
+            x = jnp.concatenate(prefix + [x], axis=1)
+    windows = _layer_windows(cfg)
+    win_xs = (windows if windows is not None
+              else jnp.zeros((cfg.n_layers,), jnp.int32))
+
+    def body(x, xs):
+        p, win, layer_cache = xs
+        w = win if windows is not None else None
+        y, new_cache = _layer_apply(x, p, cfg, window=w, cache=layer_cache,
+                                    cache_pos=pos, engine=engine)
+        return y, new_cache
+
+    x, new_cache = jax.lax.scan(body, x,
+                                (params["layers"], win_xs, cache))
+    x = x[:, -s_tokens:]       # score only the token positions
+    x = L.apply_norm(x, params.get("final_norm"), cfg.norm_type)
+    head = params.get("lm_head", params["embed"])
+    logits = L.unembed(x, head)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# FLOP accounting (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE counts only active experts)."""
+    d = cfg.d_model
+    per_layer = 0
+    if cfg.family in ("dense", "moe", "hybrid", "vlm", "encdec"):
+        per_layer += d * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * d
+    if cfg.family in ("ssm", "hybrid"):
+        di = cfg.d_inner
+        per_layer += (d * 2 * di + di * cfg.ssm_conv
+                      + di * (cfg.dt_rank + 2 * cfg.ssm_state)
+                      + cfg.dt_rank * di + di * d)
+    if cfg.family == "moe":
+        e_active = cfg.n_experts_active
+        per_layer += 3 * d * cfg.moe_d_ff * e_active
+        if cfg.shared_d_ff:
+            per_layer += 3 * d * cfg.shared_d_ff
+        if cfg.dense_residual_d_ff:
+            per_layer += 3 * d * cfg.dense_residual_d_ff
+        per_layer += d * cfg.n_experts        # router
+    elif cfg.family != "ssm":
+        mult = 3 if cfg.mlp_act in ("swiglu", "geglu") else 2
+        per_layer += mult * d * cfg.d_ff
+    n = cfg.n_layers * per_layer
+    n += cfg.vocab_size * d                   # embedding/unembedding
+    n_enc = cfg.n_encoder_layers * (4 * d * d + 2 * d * cfg.d_ff)
+    return n + n_enc
+
+
+def total_param_count(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    per_layer = 0
+    if cfg.family in ("dense", "moe", "hybrid", "vlm", "encdec"):
+        per_layer += d * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * d
+    if cfg.family in ("ssm", "hybrid"):
+        di = cfg.d_inner
+        per_layer += (d * 2 * di + di * cfg.ssm_conv
+                      + di * (cfg.dt_rank + 2 * cfg.ssm_state)
+                      + cfg.dt_rank * di + di * d)
+    if cfg.family == "moe":
+        per_layer += 3 * d * cfg.moe_d_ff * cfg.n_experts
+        if cfg.shared_d_ff:
+            per_layer += 3 * d * cfg.shared_d_ff
+        if cfg.dense_residual_d_ff:
+            per_layer += 3 * d * cfg.dense_residual_d_ff
+        per_layer += d * cfg.n_experts
+    elif cfg.family != "ssm":
+        mult = 3 if cfg.mlp_act in ("swiglu", "geglu") else 2
+        per_layer += mult * d * cfg.d_ff
+    n = cfg.n_layers * per_layer + cfg.vocab_size * d
+    n += cfg.n_encoder_layers * (4 * d * d + 2 * d * cfg.d_ff)
+    return n

@@ -1,0 +1,57 @@
+"""LLaVA-NeXT-style VLM backbone (llava-next-34b assignment).
+
+The anyres vision tower is a STUB per the assignment: ``input_specs()``
+provides precomputed patch embeddings (B, n_patches, d_model), standing in
+for the CLIP tower + anyres tiling + projector.  The language backbone is
+the full decoder LM (models/transformer.py); patches are prepended to the
+token embeddings, as the real model splices projected image features into
+the prompt.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    return tfm.init_params(cfg, key)
+
+
+def forward(params: Dict[str, Any], tokens: jax.Array,
+            patches: jax.Array, cfg: ModelConfig, *,
+            engine: Optional[Dict] = None) -> jax.Array:
+    """tokens (B, S_text), patches (B, P, D) -> logits over S_text + P."""
+    return tfm.forward(params, tokens, cfg, engine=engine,
+                       extra_embeds=patches)
+
+
+def vlm_loss(params: Dict[str, Any], batch: Dict[str, jax.Array],
+             cfg: ModelConfig, *, engine: Optional[Dict] = None) -> jax.Array:
+    """Loss over text positions only (image patches carry no labels)."""
+    return tfm.lm_loss(params, batch, cfg, engine=engine)
+
+
+def prefill(params: Dict[str, Any], tokens: jax.Array, patches: jax.Array,
+            cache: Dict[str, Any], cfg: ModelConfig, *,
+            engine: Optional[Dict] = None) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Serve-path prefill: embed patches+tokens, fill the KV cache.
+
+    Patch embeddings enter the cache like ordinary positions (the real
+    system does exactly this — image tokens are just prompt positions).
+    """
+    logits, cache = tfm.step(params, tokens, cache, jnp.int32(0), cfg,
+                             engine=engine, extra_embeds=patches)
+    return logits, cache
+
+
+def decode_step(params: Dict[str, Any], token: jax.Array,
+                cache: Dict[str, Any], pos: jax.Array, cfg: ModelConfig, *,
+                engine: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    return tfm.step(params, token, cache, pos, cfg, engine=engine)

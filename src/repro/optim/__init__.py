@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adamw, adafactor,
+                                    clip_by_global_norm, pick_optimizer)
+from repro.optim.schedules import cosine_schedule, linear_warmup
+
+__all__ = ["Optimizer", "adamw", "adafactor", "clip_by_global_norm",
+           "pick_optimizer", "cosine_schedule", "linear_warmup"]

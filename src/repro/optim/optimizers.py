@@ -1,0 +1,140 @@
+"""Optimizers (pure JAX; no external deps).
+
+AdamW for standard sizes; Adafactor (factored second moment, no first
+moment) for the 100B+ archs where AdamW state would blow the per-chip HBM
+budget at the assigned mesh (DESIGN.md §3).  Both are functional:
+``init(params) -> state``, ``update(grads, state, params, lr) ->
+(new_params, new_state)``; states are pytrees that shard exactly like the
+parameters they mirror.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return dict(mu=jax.tree_util.tree_map(zeros, params),
+                    nu=jax.tree_util.tree_map(zeros, params),
+                    count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state["mu"], state["nu"],
+                                     params)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda o: o[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree_util.tree_map(lambda o: o[2], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, dict(mu=mu, nu=nu, count=count)
+
+    return Optimizer("adamw", init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern) — factored second moments for >= 2-D params
+# ---------------------------------------------------------------------------
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay_rate: float = 0.8, weight_decay: float = 0.0) -> Optimizer:
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    # State is kept as a FLAT LIST aligned with tree_flatten(params) order —
+    # per-param factored/unfactored dicts must not be traversed as pytrees
+    # alongside the param tree.
+    def init(params):
+        leaves = jax.tree_util.tree_leaves(params)
+        states = []
+        for p in leaves:
+            if _factored(p):
+                states.append(dict(vr=jnp.zeros(p.shape[:-1], jnp.float32),
+                                   vc=jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                                jnp.float32)))
+            else:
+                states.append(dict(v=jnp.zeros(p.shape, jnp.float32)))
+        return dict(v=states, count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        beta = 1.0 - count.astype(jnp.float32) ** -decay_rate
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)[..., None]
+                v_est = (vr[..., None] * vc[..., None, :]) / denom
+                step = g * jax.lax.rsqrt(v_est + eps)
+                new_s = dict(vr=vr, vc=vc)
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                step = g * jax.lax.rsqrt(v + eps)
+                new_s = dict(v=v)
+            # update clipping (RMS of step <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(step)) + eps)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), new_s
+
+        leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+        leaves_p = treedef.flatten_up_to(params)
+        results = [upd(g, s, p)
+                   for g, s, p in zip(leaves_g, state["v"], leaves_p)]
+        new_params = treedef.unflatten([r[0] for r in results])
+        return new_params, dict(v=[r[1] for r in results], count=count)
+
+    return Optimizer("adafactor", init, update)
+
+
+def pick_optimizer(total_params: int, hbm_budget_per_chip: float = 16e9,
+                   n_chips: int = 256) -> Optimizer:
+    """AdamW (12 B/param incl. bf16 grads) if it fits; else Adafactor."""
+    adamw_bytes = total_params * 12
+    if adamw_bytes / n_chips < 0.6 * hbm_budget_per_chip:
+        return adamw()
+    return adafactor()

@@ -1,0 +1,2 @@
+from repro.parallel import sharding
+__all__ = ["sharding"]

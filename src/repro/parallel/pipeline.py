@@ -1,0 +1,90 @@
+"""GPipe-style pipeline parallelism as a shard_map utility.
+
+For depth-dominated models (falcon-mamba's 64 layers) a "stage" axis can
+replace part of the model axis: layers are split into S contiguous stages,
+microbatches flow stage-to-stage via ``jax.lax.ppermute``, and the classic
+GPipe schedule (S + M - 1 ticks for M microbatches) overlaps compute with
+the point-to-point transfers.  This module provides the schedule as a
+reusable combinator + an analytical bubble model used by the perf log.
+
+It is exercised by tests/test_pipeline.py on a small mesh; the assigned
+production cells use DP x TP (+EP) which profiled better at these sizes
+(see EXPERIMENTS.md §Perf notes), so PP stays an opt-in config knob.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    """GPipe bubble: (S-1) / (S-1+M)."""
+    return (n_stages - 1) / (n_stages - 1 + n_microbatches)
+
+
+def pipelined_apply(layer_fn: Callable[[jax.Array, Any], jax.Array],
+                    mesh: Mesh, stage_axis: str, n_microbatches: int):
+    """Build fn(x, stage_params) running a GPipe schedule over ``stage_axis``.
+
+    ``layer_fn(x_mb, stage_params)`` applies ONE stage to one microbatch.
+    x: (B, ...) with B % n_microbatches == 0; stage_params: pytree whose
+    leaves carry a leading stage dim sharded over ``stage_axis``.
+    """
+    n_stages = mesh.shape[stage_axis]
+
+    def stage_local(x, params):
+        # x arrives already split: (M, B/M, ...) microbatches, replicated
+        # copy on every stage; each stage computes only when its tick holds
+        # a valid microbatch (GPipe staggering), then passes it along the
+        # ring.  The LAST stage deposits finished microbatches into a
+        # non-rotating accumulator, psum-broadcast at the end.
+        idx = jax.lax.axis_index(stage_axis)
+        m = n_microbatches
+        total_ticks = n_stages + m - 1
+        is_last = idx == n_stages - 1
+
+        def tick(carry, t):
+            buf, out_acc = carry            # buf rotates; out_acc stays put
+            mb = t - idx                    # microbatch at this stage now
+            valid = (mb >= 0) & (mb < m)
+            mb_c = jnp.clip(mb, 0, m - 1)
+            x_mb = jax.lax.dynamic_index_in_dim(buf, mb_c, 0, keepdims=False)
+            y_mb = layer_fn(x_mb, params)
+            y_mb = jnp.where(valid, y_mb, x_mb)
+            buf = jax.lax.dynamic_update_index_in_dim(buf, y_mb, mb_c, 0)
+            done = jnp.where(valid & is_last, y_mb,
+                             jax.lax.dynamic_index_in_dim(out_acc, mb_c, 0,
+                                                          keepdims=False))
+            out_acc = jax.lax.dynamic_update_index_in_dim(out_acc, done,
+                                                          mb_c, 0)
+            # pass the freshly computed microbatch downstream
+            buf = jax.lax.ppermute(
+                buf, stage_axis,
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (buf, out_acc), None
+
+        out0 = jnp.zeros_like(x)
+        (_, out_acc), _ = jax.lax.scan(tick, (x, out0),
+                                       jnp.arange(total_ticks))
+        # only the last stage holds results; broadcast to every stage
+        return jax.lax.psum(out_acc, stage_axis)
+
+    def fn(x, stage_params):
+        b = x.shape[0]
+        assert b % n_microbatches == 0
+        xm = x.reshape(n_microbatches, b // n_microbatches, *x.shape[1:])
+        out = shard_map(
+            stage_local, mesh=mesh,
+            in_specs=(P(), P(stage_axis)),
+            out_specs=P(),
+            check_rep=False,
+        )(xm, stage_params)
+        return out.reshape(b, *x.shape[1:])
+
+    return fn

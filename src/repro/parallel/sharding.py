@@ -1,0 +1,241 @@
+"""Sharding plans: logical rules -> NamedSharding per parameter/cache/input.
+
+Plan (DESIGN.md §3), per mesh ("data", "model") or ("pod", "data", "model"):
+
+  * batch dims            -> ("pod", "data")      (pure DP across pods)
+  * weight out-features   -> "model"              (tensor parallel)
+  * weight in-features    -> "data"               (FSDP / ZeRO-3)
+  * MoE expert dim        -> "model" when divisible (EP), else the expert
+                             hidden dim F -> "model" (TP-in-expert)
+  * KV cache sequence     -> "model"              (sequence-parallel decode)
+  * SSM channel dims      -> "model" (+"data" when divisible by both)
+  * anything indivisible  -> replicated on that axis (rule checks divide)
+
+Rules are *shape+path* based so the same planner covers every arch family
+and both dense (train) and packed (serve) parameter trees.  Optimizer
+states mirror their parameters (AdamW moments via tree_map; Adafactor's
+factored vectors drop the packed last axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# parameter leaves that get packed for At-MRAM serving.  Routers stay at
+# full precision: they are tiny and routing decisions are quantization-
+# sensitive (same reasoning as norm/bias params living in SRAM on-chip).
+PACKABLE = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+            "in_proj", "out_proj", "x_proj", "dt_proj"}
+
+
+def _axis_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis] if axis in mesh.axis_names else 1
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([_axis_size(mesh, a) for a in dp_axes(mesh)]))
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    if isinstance(axis, tuple):
+        size = int(np.prod([_axis_size(mesh, a) for a in axis]))
+    else:
+        size = _axis_size(mesh, axis)
+    return n % size == 0 and n >= size
+
+
+def _maybe(n: int, mesh: Mesh, axis):
+    return axis if _div(n, mesh, axis) else None
+
+
+def _param_pspec(path: Tuple[str, ...], shape: Tuple[int, ...],
+                 mesh: Mesh) -> P:
+    last = path[-1]
+    in_layers = any(k in ("layers", "enc_layers", "dec_layers")
+                    for k in path)
+    # packed-serving leaves: (..., 'w_x', 'packed'|'scale')
+    if last in ("packed", "scale") and len(path) >= 2:
+        base = _param_pspec(path[:-1], shape if last == "packed"
+                            else shape + (1,), mesh)
+        if last == "scale":
+            return P(*base[:-1])
+        return base
+
+    if last in ("embed", "lm_head"):
+        return P(_maybe(shape[0], mesh, "model"),
+                 _maybe(shape[1], mesh, "data"))
+    if last in ("meta_tokens", "dec_pos"):
+        return P()
+
+    dims = shape[1:] if in_layers else shape       # strip stacked L dim
+    lead: Tuple = (None,) if in_layers else ()
+
+    if len(dims) <= 1:
+        return P(*(lead + (None,) * len(dims)))
+
+    if last == "conv_w":                           # (di, K)
+        return P(*(lead + (_maybe(dims[0], mesh, "model"), None)))
+    if last == "A_log":                            # (di, N)
+        return P(*(lead + (_maybe(dims[0], mesh, "model"), None)))
+
+    if len(dims) == 3:                             # MoE experts (E, F, D)
+        e, a, b = dims
+        if _div(e, mesh, "model"):
+            return P(*(lead + ("model", None, _maybe(b, mesh, "data"))))
+        if last == "w_down":                       # (E, D, F): F -> model
+            return P(*(lead + (None, _maybe(a, mesh, "data"),
+                               _maybe(b, mesh, "model"))))
+        return P(*(lead + (None, _maybe(a, mesh, "model"),
+                           _maybe(b, mesh, "data"))))
+
+    if len(dims) == 2:                             # (out, in)
+        return P(*(lead + (_maybe(dims[0], mesh, "model"),
+                           _maybe(dims[1], mesh, "data"))))
+
+    return P(*(lead + (None,) * len(dims)))
+
+
+def param_shardings(params_tree: Any, mesh: Mesh) -> Any:
+    """Tree of NamedSharding matching ``params_tree`` (arrays or SDS)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    out = []
+    for path, leaf in flat:
+        keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+        spec = _param_pspec(keys, tuple(leaf.shape), mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params_tree), out)
+
+
+def opt_state_shardings(opt_state: Any, mesh: Mesh, params_tree: Any) -> Any:
+    """Optimizer-state shardings: moments mirror their parameter; factored
+    Adafactor vectors / scalars fall back to shape rules."""
+    param_shards = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_tree)[0]:
+        keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+        param_shards[tuple(leaf.shape)] = _param_pspec(keys, tuple(leaf.shape),
+                                                       mesh)
+
+    def per_leaf(leaf):
+        shape = tuple(leaf.shape)
+        if shape in param_shards:
+            return NamedSharding(mesh, param_shards[shape])
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        # factored vectors: shard the largest shardable dim on model
+        spec = [None] * len(shape)
+        for i in sorted(range(len(shape)), key=lambda i: -shape[i]):
+            if _div(shape[i], mesh, "model"):
+                spec[i] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(per_leaf, opt_state)
+
+
+# ---------------------------------------------------------------------------
+# activations / inputs / caches
+# ---------------------------------------------------------------------------
+
+def batch_pspec(batch: int, mesh: Mesh, extra_dims: int = 1) -> P:
+    axes = dp_axes(mesh)
+    if not axes or batch % dp_size(mesh) != 0:
+        return P(*((None,) * (1 + extra_dims)))
+    return P(axes, *((None,) * extra_dims))
+
+
+def cache_shardings(cache_tree: Any, mesh: Mesh, batch: int) -> Any:
+    """KV cache (L, B, H, S, hd): B->dp, S->model.
+    SSM state h (L, B, di, N): di->model; conv (L, B, K-1, di): di->model."""
+    bspec = dp_axes(mesh) if batch % dp_size(mesh) == 0 and dp_size(mesh) > 1 else None
+
+    def per_leaf(path, leaf):
+        keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+        nd = len(leaf.shape)
+        if keys[-1] in ("k", "v") and nd == 5:        # (L,B,H,S,hd)
+            return NamedSharding(mesh, P(
+                None, bspec, None,
+                _maybe(leaf.shape[3], mesh, "model"), None))
+        if keys[-1] in ("xk", "xv") and nd == 5:      # cross-attn KV
+            return NamedSharding(mesh, P(None, bspec, None, None, None))
+        if keys[-1] == "h" and nd == 4:               # (L,B,di,N)
+            return NamedSharding(mesh, P(
+                None, bspec, _maybe(leaf.shape[2], mesh, "model"), None))
+        if keys[-1] == "conv" and nd == 4:            # (L,B,K-1,di)
+            return NamedSharding(mesh, P(
+                None, bspec, None, _maybe(leaf.shape[3], mesh, "model")))
+        return NamedSharding(mesh, P(*((None,) * nd)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    out = [per_leaf(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(cache_tree), out)
+
+
+def sds(shape, dtype, sharding) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def with_shardings(spec_tree: Any, shard_tree: Any) -> Any:
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        spec_tree, shard_tree)
+
+
+# ---------------------------------------------------------------------------
+# packed-store spec (At-MRAM serving parameters)
+# ---------------------------------------------------------------------------
+
+def freeze_for_serving(params: Any, bits: int = 8) -> Any:
+    """Quantize+pack every PACKABLE matmul leaf (real arrays)."""
+    from repro.core import packing, quantize
+
+    def per_leaf(path, leaf):
+        keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+        if keys[-1] in PACKABLE and leaf.ndim >= 2:
+            flat = leaf.reshape(-1, leaf.shape[-1])
+            qt = quantize.quantize_weights(flat, bits, channel_axis=0)
+            packed = packing.pack(qt.values, bits).reshape(
+                *leaf.shape[:-1], -1)
+            scale = qt.scale.reshape(leaf.shape[:-1])
+            return dict(packed=packed, scale=scale)
+        return leaf
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = [per_leaf(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def serve_spec_like(params_spec: Any, bits: int = 8) -> Any:
+    """ShapeDtypeStruct tree of the packed store (no allocation)."""
+    f = 8 // bits
+
+    def per_leaf(path, leaf):
+        keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+        if keys[-1] in PACKABLE and len(leaf.shape) >= 2:
+            k = leaf.shape[-1]
+            return dict(
+                packed=jax.ShapeDtypeStruct(
+                    leaf.shape[:-1] + ((k + f - 1) // f,), jnp.uint8),
+                scale=jax.ShapeDtypeStruct(leaf.shape[:-1], jnp.float32),
+            )
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_spec)
+    out = [per_leaf(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)

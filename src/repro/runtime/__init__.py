@@ -1,0 +1,4 @@
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.runtime.monitor import StragglerMonitor, FailureInjector
+
+__all__ = ["Trainer", "TrainerConfig", "StragglerMonitor", "FailureInjector"]

@@ -1,0 +1,64 @@
+"""Straggler detection + failure injection for fault-tolerance tests.
+
+StragglerMonitor keeps an EWMA of step latency and flags steps that
+exceed ``threshold`` x the moving estimate — on a real fleet this signal
+feeds the controller that hot-swaps the slow host (and, within a step,
+XLA's collective timeouts do the intra-step mitigation).  The monitor also
+exports the history the perf log reads.
+
+FailureInjector deterministically raises at chosen steps to exercise the
+restart path in tests and examples (chaos-monkey style).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+
+class StragglerMonitor:
+    def __init__(self, alpha: float = 0.2, threshold: float = 2.0,
+                 warmup: int = 3):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup
+        self.ewma: Optional[float] = None
+        self.history: List[float] = []
+        self.flagged: List[int] = []
+        self._t0: Optional[float] = None
+
+    def step_start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def step_end(self) -> bool:
+        """Record one step; returns True if the step was a straggler."""
+        assert self._t0 is not None
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        self.history.append(dt)
+        is_straggler = False
+        if self.ewma is None:
+            self.ewma = dt
+        else:
+            if (len(self.history) > self.warmup
+                    and dt > self.threshold * self.ewma):
+                is_straggler = True
+                self.flagged.append(len(self.history) - 1)
+            # EWMA ignores flagged outliers so one straggler doesn't mask
+            # the next
+            if not is_straggler:
+                self.ewma = self.alpha * dt + (1 - self.alpha) * self.ewma
+        return is_straggler
+
+
+class FailureInjector:
+    """Raises RuntimeError at the given steps — once each."""
+
+    def __init__(self, fail_at_steps=()):
+        self.fail_at = set(fail_at_steps)
+        self.fired = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected failure at step {step}")

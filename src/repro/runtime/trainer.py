@@ -1,0 +1,110 @@
+"""Fault-tolerant training loop.
+
+The loop is structured as it would run on a real fleet:
+
+    restore-or-init -> [step: data(step) -> train_step -> monitor
+                        -> periodic async checkpoint] -> on failure:
+    re-enter restore-or-init (a fresh process/host set does the same).
+
+Because the data pipeline is step-indexed and the checkpoint stores
+(params, opt_state, step), a crash at ANY point resumes bit-exactly (the
+restart-equivalence test asserts this).  Elasticity: restore() takes the
+*current* mesh's shardings, so the same checkpoint brings the run up on a
+different pod count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticLMDataset
+from repro.runtime.monitor import FailureInjector, StragglerMonitor
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 25
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_n: int = 3
+    log_every: int = 10
+    max_restarts: int = 3
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, train_step: Callable,
+                 init_state: Callable[[], Dict[str, Any]],
+                 dataset: SyntheticLMDataset,
+                 failure_injector: Optional[FailureInjector] = None,
+                 shardings: Optional[Dict[str, Any]] = None):
+        """``init_state() -> {"params": ..., "opt_state": ...}``;
+        ``train_step(params, opt_state, batch) -> (params, opt, metrics)``.
+        """
+        self.cfg = cfg
+        self.train_step = train_step
+        self.init_state = init_state
+        self.dataset = dataset
+        self.injector = failure_injector
+        self.shardings = shardings
+        self.ckpt = CheckpointManager(cfg.checkpoint_dir, keep_n=cfg.keep_n)
+        self.monitor = StragglerMonitor()
+        self.metrics_log = []
+        self.restarts = 0
+
+    # -- restore-or-init ------------------------------------------------------
+    def _bring_up(self):
+        state = self.init_state()
+        start_step = 0
+        if self.ckpt.latest_step() is not None:
+            tmpl = dict(state)
+            start_step, state = self.ckpt.restore(
+                tmpl, shardings=self.shardings)
+            start_step += 1
+        return start_step, state
+
+    # -- main loop ------------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        while True:
+            try:
+                return self._run_once()
+            except RuntimeError as e:
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                print(f"[trainer] failure ({e}); restart "
+                      f"{self.restarts}/{self.cfg.max_restarts}")
+
+    def _run_once(self) -> Dict[str, Any]:
+        step, state = self._bring_up()
+        params, opt_state = state["params"], state["opt_state"]
+        while step < self.cfg.total_steps:
+            if self.injector is not None:
+                self.injector.maybe_fail(step)
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.dataset.batch(step).items()}
+            self.monitor.step_start()
+            params, opt_state, metrics = self.train_step(params, opt_state,
+                                                         batch)
+            jax.block_until_ready(metrics["loss"])
+            straggler = self.monitor.step_end()
+            self.metrics_log.append(
+                dict(step=step, loss=float(metrics["loss"]),
+                     straggler=straggler))
+            if step % self.cfg.log_every == 0:
+                print(f"[trainer] step {step} loss {float(metrics['loss']):.4f}"
+                      + (" [straggler]" if straggler else ""))
+            if (step + 1) % self.cfg.checkpoint_every == 0:
+                self.ckpt.save(step, dict(params=params,
+                                          opt_state=opt_state))
+            step += 1
+        self.ckpt.save(self.cfg.total_steps - 1,
+                       dict(params=params, opt_state=opt_state), block=True)
+        self.ckpt.wait()
+        return dict(params=params, opt_state=opt_state,
+                    metrics=self.metrics_log, restarts=self.restarts)

@@ -1,0 +1,3 @@
+from repro.serving.engine import ServingEngine, Request, sample_token
+
+__all__ = ["ServingEngine", "Request", "sample_token"]

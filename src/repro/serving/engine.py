@@ -1,0 +1,156 @@
+"""Batched serving engine over the packed At-MRAM weight store.
+
+The paper's deployment story, at LM scale: weights live packed (WeightStore
+= the MRAM), the fused dequant path computes, and when the packed model
+exceeds the resident budget the layer pages stream host->HBM double-
+buffered (core/paging.HostPagedStore) — §II-B2's software-assisted
+virtual paging, proactive swaps included.
+
+The engine is a continuous-batching loop:
+  * requests join a waiting queue and are admitted into free batch slots;
+  * one jitted ``step`` serves the whole batch each tick (prefill for
+    fresh slots via right-aligned prompts, decode for the rest);
+  * finished sequences free their slot immediately (no drain barrier).
+
+For simplicity prompts are prefilled per-request (prefill_step) into the
+slot's cache region; decode runs batched across all active slots.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+
+
+def sample_token(logits: jax.Array, key: jax.Array, temperature: float = 1.0,
+                 top_k: int = 0) -> jax.Array:
+    """logits (..., V) -> token ids (...,)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    logits = logits / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[..., -1:]
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *, batch_slots: int = 4,
+                 max_len: int = 512, engine: Optional[Dict] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.engine = engine or dict(scenario="l1mram", mode="xla", bits=8)
+        self.key = jax.random.PRNGKey(seed)
+
+        self.cache = tfm.init_serve_cache(cfg, batch_slots, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_pos = np.zeros(batch_slots, np.int32)
+        self.waiting: List[Request] = []
+        self.finished: List[Request] = []
+
+        self._decode = jax.jit(functools.partial(self._decode_impl))
+        self._prefill_len_cache: Dict[int, Callable] = {}
+
+    # -- jitted bodies --------------------------------------------------------
+    def _decode_impl(self, params, tokens, cache, pos_vec):
+        # batched decode with PER-SLOT positions (continuous batching):
+        # rope, cache insert and attention masks all take the (B,) vector.
+        logits, cache = tfm.step(params, tokens, cache, pos_vec, self.cfg,
+                                 engine=self.engine)
+        return logits, cache
+
+    def _prefill_for_len(self, s: int):
+        if s not in self._prefill_len_cache:
+            def impl(params, tokens, cache, slot):
+                # single-sequence prefill into one slot: run batch-1 then
+                # scatter the new cache rows into the slot index.
+                sub = jax.tree_util.tree_map(
+                    lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, 1),
+                    cache)
+                logits, sub = tfm.step(params, tokens[None], sub,
+                                       jnp.int32(0), self.cfg,
+                                       engine=self.engine)
+                cache = jax.tree_util.tree_map(
+                    lambda c, s_: jax.lax.dynamic_update_slice_in_dim(
+                        c, s_.astype(c.dtype), slot, 1),
+                    cache, sub)
+                return logits[0, -1], cache
+            self._prefill_len_cache[s] = jax.jit(impl)
+        return self._prefill_len_cache[s]
+
+    # -- public API -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.slots):
+            if self.slot_req[i] is None and self.waiting:
+                req = self.waiting.pop(0)
+                s = len(req.prompt)
+                prefill = self._prefill_for_len(s)
+                logits, self.cache = prefill(
+                    self.params, jnp.asarray(req.prompt), self.cache,
+                    jnp.int32(i))
+                self.key, sub = jax.random.split(self.key)
+                tok = int(sample_token(logits, sub, req.temperature))
+                req.generated.append(tok)
+                prefix = self.cfg.n_meta_tokens
+                self.slot_req[i] = req
+                self.slot_pos[i] = s + prefix
+
+    def step(self) -> None:
+        """One engine tick: admit, batched decode, retire."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slot_req[i].generated[-1]
+        pos_vec = jnp.asarray(self.slot_pos)
+        logits, self.cache = self._decode(self.params, jnp.asarray(tokens),
+                                          self.cache, pos_vec)
+        self.key, sub = jax.random.split(self.key)
+        greedy = sample_token(logits[:, -1], sub, temperature=0.0)
+        sampled = sample_token(logits[:, -1], sub, temperature=1.0)
+        for i in active:
+            req = self.slot_req[i]
+            tok = greedy[i] if req.temperature == 0.0 else sampled[i]
+            req.generated.append(int(tok))
+            self.slot_pos[i] += 1
+            if (len(req.generated) >= req.max_new_tokens
+                    or self.slot_pos[i] >= self.max_len - 1):
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[i] = None
+
+    def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
+        ticks = 0
+        while (self.waiting or any(r is not None for r in self.slot_req)):
+            self.step()
+            ticks += 1
+            if ticks > max_ticks:
+                raise RuntimeError("serving loop did not converge")
+        return self.finished

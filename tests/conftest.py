@@ -1,0 +1,11 @@
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and
+# benches must see 1 device (the 512-device override belongs ONLY to
+# launch/dryrun.py).  Multi-device behaviour is tested via subprocesses
+# (tests/test_multidevice.py).
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

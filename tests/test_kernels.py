@@ -1,0 +1,129 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes / dtypes / weight bit-widths.  Integer paths must match
+bit-exactly; float paths to accumulation tolerance."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing, quantize
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.qmatmul import qmatmul_f32, qmatmul_int8
+from repro.kernels import neureka_conv as nkc
+
+BITS = (2, 4, 8)
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("m,k,n", [(16, 64, 32), (96, 200, 130), (1, 33, 7)])
+def test_qmatmul_f32_sweep(rng, bits, m, k, n):
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    packed, scale = ops.prep_linear(w, bits)
+    out = qmatmul_f32(x, packed, scale, bits=bits, k_orig=k,
+                      bm=32, bn=32, bk=64, interpret=True)
+    expect = ref.qmatmul_f32(x, packed, scale, bits=bits, k_orig=k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qmatmul_dtypes(rng, bits, dtype):
+    x = jnp.asarray(rng.normal(size=(24, 80)), dtype)
+    w = jnp.asarray(rng.normal(size=(40, 80)), jnp.float32)
+    packed, scale = ops.prep_linear(w, bits)
+    out = qmatmul_f32(x, packed, scale, bits=bits, k_orig=80,
+                      bm=16, bn=16, bk=40, interpret=True)
+    expect = ref.qmatmul_f32(x, packed, scale, bits=bits, k_orig=80)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_qmatmul_int8_exact(rng, bits):
+    m, k, n = 40, 130, 50
+    xq = jnp.asarray(rng.integers(0, 255, (m, k)), jnp.uint8)
+    w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    packed, scale = ops.prep_linear(w, bits)
+    mult = jnp.asarray(rng.uniform(1e-4, 1e-3, (n,)), jnp.float32)
+    bias = jnp.asarray(rng.integers(-8, 8, (n,)), jnp.int32)
+    out = qmatmul_int8(xq, packed, mult, bias, bits=bits, k_orig=k,
+                       bm=16, bn=32, bk=32, interpret=True)
+    expect = ref.qmatmul_int8(xq, packed, mult, bias, bits=bits, k_orig=k)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("hwc", [(12, 10, 24, 16), (7, 7, 3, 32)])
+def test_conv3x3_dense(rng, bits, stride, hwc):
+    h, w_, cin, cout = hwc
+    x = jnp.asarray(rng.integers(0, 255, (h, w_, cin)), jnp.uint8)
+    wf = jnp.asarray(rng.normal(size=(cout, 3, 3, cin)), jnp.float32)
+    packed, scale = ops.prep_conv3x3(wf, bits)
+    mult = jnp.asarray(rng.uniform(1e-4, 1e-3, (cout,)), jnp.float32)
+    bias = jnp.asarray(rng.integers(-8, 8, (cout,)), jnp.int32)
+    out = nkc.conv3x3_dense(x, packed, mult, bias, bits=bits, cin=cin,
+                            stride=stride, bco=16, bci=8, interpret=True)
+    expect = ref.conv3x3_dense(x, packed, mult, bias, bits=bits, cin=cin,
+                               stride=stride)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv3x3_dw(rng, bits, stride):
+    h, w_, c = 9, 11, 40
+    x = jnp.asarray(rng.integers(0, 255, (h, w_, c)), jnp.uint8)
+    wf = jnp.asarray(rng.normal(size=(c, 3, 3)), jnp.float32)
+    packed, scale = ops.prep_dw3x3(wf, bits)
+    mult = jnp.asarray(rng.uniform(1e-4, 1e-3, (c,)), jnp.float32)
+    bias = jnp.asarray(rng.integers(-8, 8, (c,)), jnp.int32)
+    out = nkc.conv3x3_dw(x, packed, mult, bias, bits=bits, stride=stride,
+                         bc=16, interpret=True)
+    expect = ref.conv3x3_dw(x, packed, mult, bias, bits=bits, stride=stride)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_conv1x1(rng, bits):
+    x = jnp.asarray(rng.integers(0, 255, (7, 9, 33)), jnp.uint8)
+    wf = jnp.asarray(rng.normal(size=(17, 33)), jnp.float32)
+    packed, scale = ops.prep_linear(wf, bits)
+    mult = jnp.asarray(rng.uniform(1e-4, 1e-3, (17,)), jnp.float32)
+    bias = jnp.asarray(rng.integers(-8, 8, (17,)), jnp.int32)
+    out = nkc.conv1x1(x, packed, mult, bias, bits=bits, cin=33,
+                      interpret=True)
+    expect = ref.conv1x1(x, packed, mult, bias, bits=bits, cin=33)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("sq,sk,causal,window", [
+    (64, 64, True, None), (37, 37, True, None), (17, 80, True, None),
+    (64, 64, True, 16), (50, 50, False, None), (1, 64, True, None),
+])
+def test_flash_attention(rng, sq, sk, causal, window):
+    q = jnp.asarray(rng.normal(size=(3, sq, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(3, sk, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(3, sk, 16)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=16, bk=16, interpret=True)
+    expect = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_ops_mode_dispatch(rng):
+    """xla / interpret modes agree through the public wrappers."""
+    x = jnp.asarray(rng.normal(size=(4, 8, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    packed, scale = ops.prep_linear(w, 4)
+    a = ops.quant_matmul(x, packed, scale, bits=4, k_orig=64, mode="xla")
+    b = ops.quant_matmul(x, packed, scale, bits=4, k_orig=64,
+                         mode="interpret", bm=16, bn=16, bk=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+    assert a.shape == (4, 8, 32)

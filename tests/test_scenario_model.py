@@ -1,0 +1,93 @@
+"""The calibrated memsys model must reproduce the paper's claims."""
+
+import collections
+
+import pytest
+
+from repro.core import memsys
+from repro.core.memsys import LOW_POWER, NOMINAL, neureka_gops
+from repro.core.perf_model import (mnv2_scenario_table, mnv2_total_macs,
+                                   mnv2_weight_bytes)
+
+
+def test_mobilenet_job_list_matches_network():
+    # MobileNet-V2 1.0-224: ~300M MACs, 3.4M params
+    assert mnv2_total_macs() == pytest.approx(300e6, rel=0.05)
+    assert mnv2_weight_bytes(8) == pytest.approx(3.4e6, rel=0.05)
+    # all-weights-on-chip claim: 8-bit weights fit the 4 MiB MRAM
+    assert mnv2_weight_bytes(8) <= 4 * 1024 * 1024
+
+
+def test_fig10_latency_energy_anchors():
+    tab = mnv2_scenario_table()
+    lat = {s: t for s, (t, e, _) in tab.items()}
+    en = {s: e for s, (t, e, _) in tab.items()}
+    # paper: 12.6 ms / 3.8 mJ (L3FLASH) and 7.3 ms / 1.4 mJ (L1MRAM)
+    assert lat["l3flash"] == pytest.approx(12.6e-3, rel=0.10)
+    assert en["l3flash"] == pytest.approx(3.8e-3, rel=0.10)
+    assert lat["l1mram"] == pytest.approx(7.3e-3, rel=0.10)
+    assert en["l1mram"] == pytest.approx(1.4e-3, rel=0.10)
+
+
+def test_fig10_headline_ratios():
+    tab = mnv2_scenario_table()
+    # 1.7x latency and ~3x energy vs off-chip NVM (abstract claim)
+    assert tab["l3flash"][0] / tab["l1mram"][0] == pytest.approx(1.7, rel=0.08)
+    assert tab["l3flash"][1] / tab["l1mram"][1] == pytest.approx(3.0, rel=0.15)
+    # monotone improvement with coupling tightness
+    order = ["l3flash", "l3mram", "l2mram", "l1mram"]
+    lats = [tab[s][0] for s in order]
+    assert lats == sorted(lats, reverse=True)
+
+
+def test_l3mram_energy_halves():
+    tab = mnv2_scenario_table()
+    # paper: on-chip MRAM as L3 lowers energy ~2x vs off-chip flash
+    assert tab["l3flash"][1] / tab["l3mram"][1] == pytest.approx(2.0, rel=0.15)
+
+
+def test_neureka_throughput_anchors():
+    # Fig 8 anchors at nominal 360 MHz
+    assert neureka_gops("dense3x3", 8) == pytest.approx(698e9, rel=0.01)
+    assert neureka_gops("dense3x3", 2) == pytest.approx(1947e9, rel=0.01)
+    # ideal 738 GOp/s at 8b (utilization ~0.95)
+    assert memsys.neureka_ideal_gops("dense3x3", 8) == pytest.approx(
+        738e9, rel=0.01)
+    # low-power point scales with frequency
+    assert neureka_gops("dense3x3", 8, LOW_POWER) == pytest.approx(
+        698e9 * 210 / 360, rel=0.01)
+
+
+def test_layerwise_regimes_fig11():
+    """L3FLASH shows weight-memory-bound deep layers; L1MRAM eliminates
+    them (paper Fig 11)."""
+    tab = mnv2_scenario_table()
+    flash_regimes = collections.Counter(
+        t.regime for t in tab["l3flash"][2])
+    l1_regimes = collections.Counter(t.regime for t in tab["l1mram"][2])
+    assert flash_regimes["weight-memory"] >= 5
+    assert l1_regimes["weight-memory"] <= 1
+    # the deep 1x1 layers are the weight-bound ones under L3FLASH
+    deep_pw = [t for t in tab["l3flash"][2]
+               if t.name.endswith("pw_proj")][-3:]
+    assert any(t.regime == "weight-memory" for t in deep_pw)
+
+
+def test_weight_bits_cut_weight_path():
+    """2-bit weights reduce the weight-path pressure 4x (MRAM density /
+    bit-serial claim carried to the model)."""
+    t8 = mnv2_scenario_table(weight_bits=8)["l3flash"][0]
+    t2 = mnv2_scenario_table(weight_bits=2)["l3flash"][0]
+    assert t2 < t8 * 0.75  # substantially faster when weight-bound
+
+
+def test_table1_operating_points():
+    assert NOMINAL.cluster_hz == 360e6 and NOMINAL.mram_hz == 180e6
+    assert LOW_POWER.cluster_hz == 210e6
+    # power scaling ~2.2x from the paper
+    assert NOMINAL.cluster_power_w / LOW_POWER.cluster_power_w == pytest.approx(
+        2.2, rel=0.05)
+    # MRAM port bandwidth: 92 Gbit/s at nominal
+    assert memsys.mram_port_Bps(NOMINAL) * 8 == pytest.approx(92e9, rel=0.01)
+    # L1 aggregate: 184 Gbit/s
+    assert memsys.l1_total_Bps(NOMINAL) * 8 == pytest.approx(184e9, rel=0.01)

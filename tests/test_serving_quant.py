@@ -1,0 +1,114 @@
+"""Serving engine + packed-store (At-MRAM) serving correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import freeze_for_serving
+from repro.serving import Request, ServingEngine, sample_token
+
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16, remat=False)
+
+
+def test_continuous_batching_matches_offline(rng):
+    params = tfm.init_params(CFG, jax.random.PRNGKey(0))
+    eng = ServingEngine(CFG, params, batch_slots=3, max_len=64)
+    reqs = {}
+    for uid in range(5):
+        r = Request(uid=uid, prompt=rng.integers(0, 256, 4 + uid).astype(np.int32),
+                    max_new_tokens=5)
+        reqs[uid] = r
+        eng.submit(r)
+    done = eng.run_until_done()
+    assert sorted(r.uid for r in done) == list(range(5))
+    for uid, r in reqs.items():
+        toks = jnp.asarray(r.prompt)[None]
+        for t in range(5):
+            lg = tfm.forward(params, toks, CFG)
+            nt = jnp.argmax(lg[:, -1], -1)
+            assert r.generated[t] == int(nt[0]), f"uid {uid} tok {t}"
+            toks = jnp.concatenate([toks, nt[:, None]], 1)
+
+
+def test_packed_serving_close_to_dense(rng):
+    """W8 packed serving (the At-MRAM path) tracks the dense model."""
+    params = tfm.init_params(CFG, jax.random.PRNGKey(0))
+    packed = freeze_for_serving(params, bits=8)
+    tokens = jnp.asarray(rng.integers(0, 256, (2, 12)), jnp.int32)
+    dense = tfm.forward(params, tokens, CFG)
+    quant = tfm.forward(packed, tokens, CFG,
+                        engine=dict(scenario="l1mram", mode="xla", bits=8))
+    # top-1 predictions should agree at int8 for nearly every position
+    agree = np.mean(np.asarray(jnp.argmax(dense, -1) == jnp.argmax(quant, -1)))
+    assert agree > 0.9
+    # store density: packed leaves are ~1 byte/weight vs 4 (f32)
+    n_dense = sum(l.size * l.dtype.itemsize
+                  for l in jax.tree_util.tree_leaves(params))
+    n_packed = sum(l.size * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(packed))
+    assert n_packed < 0.55 * n_dense
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_packed_bits_density(bits, rng):
+    params = tfm.init_params(CFG, jax.random.PRNGKey(0))
+    packed = freeze_for_serving(params, bits=bits)
+
+    def packed_bytes(tree):
+        return sum(l.size for p, l in
+                   jax.tree_util.tree_flatten_with_path(tree)[0]
+                   if l.dtype == jnp.uint8)
+
+    b = packed_bytes(packed)
+    b8 = packed_bytes(freeze_for_serving(params, bits=8))
+    assert b == pytest.approx(b8 * bits / 8, rel=0.02)
+
+
+def test_scenarios_identical_through_model(rng):
+    params = tfm.init_params(CFG, jax.random.PRNGKey(0))
+    packed = freeze_for_serving(params, bits=8)
+    tokens = jnp.asarray(rng.integers(0, 256, (1, 8)), jnp.int32)
+    outs = {}
+    for sc in ("l1mram", "l2mram", "l3mram"):
+        outs[sc] = np.asarray(tfm.forward(
+            packed, tokens, CFG, engine=dict(scenario=sc, mode="xla",
+                                             bits=8)))
+    np.testing.assert_allclose(outs["l2mram"], outs["l1mram"], rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(outs["l3mram"], outs["l1mram"], rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_sampler():
+    logits = jnp.asarray([[0.0, 5.0, 1.0]])
+    assert int(sample_token(logits, jax.random.PRNGKey(0), 0.0)[0]) == 1
+    # top-k=1 equals greedy even at temperature
+    assert int(sample_token(logits, jax.random.PRNGKey(1), 1.0, top_k=1)[0]) == 1
+
+
+def test_paged_serving_stream(rng):
+    """HostPagedStore streams layer pages through a tight budget and the
+    model still computes correctly (the >8MiB-network path of §II-B2)."""
+    from repro.core.paging import HostPagedStore
+    from repro.core.weight_store import freeze, uniform_policy
+
+    params = {f"l{i}": dict(w=jnp.asarray(rng.normal(size=(64, 64)),
+                                          jnp.float32)) for i in range(6)}
+    store = freeze(params, uniform_policy(8, min_size=16))
+    paged = HostPagedStore(store, page_bytes=2 * 64 * 64)
+    x = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    # run "layers" in page order, weights arriving from the paged stream
+    y = x
+    from repro.core import scenarios
+    for page, dev_params in paged.stream():
+        for name in page.param_names:
+            y = jnp.tanh(scenarios.linear_apply(y, dev_params[name]))
+    assert y.shape == (4, 64)
+    assert paged.miss_count == 1     # proactive prefetch hid all but cold
+    paged.close()

@@ -1,0 +1,187 @@
+"""Checkpoint / data / optimizer / trainer fault-tolerance tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, save_pytree, restore_pytree
+from repro.data import SyntheticLMDataset, prefetch
+from repro.optim import adamw, adafactor, clip_by_global_norm
+from repro.runtime import FailureInjector, StragglerMonitor, Trainer, TrainerConfig
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _tree(rng):
+    return dict(a=jnp.asarray(rng.normal(size=(4, 8)), jnp.float32),
+                nested=dict(b=jnp.asarray(rng.integers(0, 10, (3,)),
+                                          jnp.int32)),
+                lst=[jnp.ones((2,)), jnp.zeros((5,), jnp.bfloat16)])
+
+
+def test_save_restore_identity(tmp_path, rng):
+    tree = _tree(rng)
+    save_pytree(tree, tmp_path / "ck")
+    out = restore_pytree(tree, tmp_path / "ck")
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomicity_no_tmp_left(tmp_path, rng):
+    save_pytree(_tree(rng), tmp_path / "ck")
+    assert not (tmp_path / "ck.tmp").exists()
+    # overwrite is atomic too
+    save_pytree(_tree(rng), tmp_path / "ck")
+    assert (tmp_path / "ck" / "manifest.json").exists()
+
+
+def test_manager_keep_n_and_latest(tmp_path, rng):
+    mgr = CheckpointManager(tmp_path, keep_n=2, async_save=False)
+    tree = _tree(rng)
+    for step in (5, 10, 15, 20):
+        mgr.save(step, tree)
+    assert mgr.all_steps() == [15, 20]
+    assert mgr.latest_step() == 20
+    step, out = mgr.restore(tree)
+    assert step == 20
+
+
+def test_async_save_then_wait(tmp_path, rng):
+    mgr = CheckpointManager(tmp_path, keep_n=3, async_save=True)
+    tree = _tree(rng)
+    mgr.save(1, tree)
+    mgr.wait()
+    assert mgr.all_steps() == [1]
+
+
+def test_restore_shape_mismatch_raises(tmp_path, rng):
+    save_pytree(dict(a=jnp.zeros((4,))), tmp_path / "ck")
+    with pytest.raises(ValueError):
+        restore_pytree(dict(a=jnp.zeros((5,))), tmp_path / "ck")
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_step_determinism():
+    ds = SyntheticLMDataset(1000, 16, 4, seed=3)
+    a = ds.batch(7)
+    b = ds.batch(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.batch(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_host_sharding_differs():
+    d0 = SyntheticLMDataset(1000, 16, 8, n_hosts=2, host_id=0)
+    d1 = SyntheticLMDataset(1000, 16, 8, n_hosts=2, host_id=1)
+    assert d0.local_batch == 4
+    assert not np.array_equal(d0.batch(0)["tokens"], d1.batch(0)["tokens"])
+
+
+def test_data_labels_are_next_tokens():
+    ds = SyntheticLMDataset(1000, 16, 2)
+    b = ds.batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_prefetch_matches_direct():
+    ds = SyntheticLMDataset(100, 8, 2)
+    it = prefetch(ds, start_step=3, depth=2)
+    for step in (3, 4, 5):
+        got = next(it)
+        np.testing.assert_array_equal(got["tokens"], ds.batch(step)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make_opt", [adamw, adafactor])
+def test_optimizer_decreases_quadratic(make_opt):
+    opt = make_opt()
+    params = dict(w=jnp.asarray([[2.0, -3.0], [1.0, 4.0]]),
+                  b=jnp.asarray([1.0, -1.0]))
+    loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(50):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params,
+                                   jnp.asarray(0.05, jnp.float32))
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_clip_by_global_norm():
+    grads = dict(a=jnp.full((10,), 100.0))
+    clipped, gn = clip_by_global_norm(grads, 1.0)
+    assert float(gn) == pytest.approx(np.sqrt(10 * 100.0 ** 2), rel=1e-5)
+    total = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert total == pytest.approx(1.0, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant trainer: restart equivalence
+# ---------------------------------------------------------------------------
+
+def _make_trainer(tmp_path, fail_at=None, total=12):
+    from repro.configs import ARCHS
+    from repro.launch.steps import make_train_step
+    cfg = ARCHS["qwen3-0.6b"].smoke()
+    opt = adamw()
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    from repro.models import transformer as tfm
+
+    def init_state():
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        return dict(params=params, opt_state=opt.init(params))
+
+    ds = SyntheticLMDataset(cfg.vocab_size, 32, 2, seed=1)
+    injector = FailureInjector(fail_at or [])
+    return Trainer(TrainerConfig(total_steps=total, checkpoint_every=4,
+                                 checkpoint_dir=str(tmp_path), log_every=100),
+                   step_fn, init_state, ds, failure_injector=injector)
+
+
+def test_trainer_restart_equivalence(tmp_path):
+    """A run crashed at step 7 and restarted produces bit-identical final
+    params to an uninterrupted run."""
+    clean = _make_trainer(tmp_path / "clean").run()
+    crashed = _make_trainer(tmp_path / "crash", fail_at=[7]).run()
+    assert crashed["restarts"] == 1
+    for a, b in zip(jax.tree_util.tree_leaves(clean["params"]),
+                    jax.tree_util.tree_leaves(crashed["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trainer_gives_up_after_max_restarts(tmp_path):
+    t = _make_trainer(tmp_path, fail_at=[1], total=4)
+    t.injector = FailureInjector([1, 2, 3])
+    t.cfg.max_restarts = 1
+    # keeps failing at fresh steps -> exceeds budget
+
+    class AlwaysFail(FailureInjector):
+        def maybe_fail(self, step):
+            raise RuntimeError("boom")
+
+    t.injector = AlwaysFail()
+    with pytest.raises(RuntimeError):
+        t.run()
+
+
+def test_straggler_monitor_flags_outlier():
+    import time
+    m = StragglerMonitor(threshold=3.0, warmup=2)
+    for i in range(6):
+        m.step_start()
+        time.sleep(0.02 if i != 4 else 0.2)
+        flagged = m.step_end()
+        assert flagged == (i == 4)
+    assert m.flagged == [4]
