@@ -1,13 +1,19 @@
 """Paper Fig 10 — MobileNet-V2 end-to-end latency/energy under the four
-NVM integration scenarios.  THE headline reproduction: L3FLASH
-12.6 ms / 3.8 mJ -> L1MRAM 7.3 ms / 1.4 mJ (1.7x / 3x)."""
+NVM integration scenarios, plus a mixed PlacementPlan (hot layers pinned
+At-MRAM within a tightened budget, cold layers paged off-chip — the
+§II-B2 deployment point between the uniform extremes).  THE headline
+reproduction: L3FLASH 12.6 ms / 3.8 mJ -> L1MRAM 7.3 ms / 1.4 mJ
+(1.7x / 3x)."""
 
-from repro.core.perf_model import mnv2_scenario_table
+from repro.core.perf_model import (mnv2_budget_plan, mnv2_plan_walk,
+                                   mnv2_scenario_table)
 
 from benchmarks.common import row
 
 PAPER = dict(l3flash=(12.6, 3.8), l3mram=(10.1, 1.9),
              l2mram=(9.0, 1.8), l1mram=(7.3, 1.4))
+
+MIXED_BUDGET = 2 * 1024 * 1024      # bytes (2 MiB) of resident MRAM
 
 
 def main() -> None:
@@ -26,6 +32,15 @@ def main() -> None:
     p_avg = tab["l1mram"][1] * 30
     row("fig10.power_30fps", 0.0,
         f"{p_avg*1e3:.1f}mW average (paper: <60 mW target)")
+
+    # mixed placement: greedy hot set inside a 2 MiB budget, rest paged
+    plan = mnv2_budget_plan(MIXED_BUDGET)
+    tm, em, _ = mnv2_plan_walk(plan)
+    n_hot = len(plan.rules)
+    row("fig10.mixed_2mib", tm * 1e6,
+        f"model={tm*1e3:.2f}ms/{em*1e3:.2f}mJ ({n_hot} hot layers "
+        f"l1mram-resident, rest paged l3flash; between uniform l3flash "
+        f"and l1mram)")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,14 @@
 """Serving a model LARGER than the resident weight budget — the paper's
-software-assisted virtual paging (§II-B2) at LM scale.
+software-assisted virtual paging (§II-B2) at LM scale, driven by a
+PlacementPlan.
 
-The packed model is split into layer-granular pages; a budget-limited
-device store streams pages host->device double-buffered ahead of use
-(proactive swap).  We compare a paged generation against the fully
-resident one: identical tokens, and the prefetcher hides every swap
-except the cold first page.
+``plan_for_budget`` splits the packed store against the resident budget:
+the hottest parameters (highest bytes-used-per-inference) are pinned
+l1mram-resident, the rest are marked paged/l3flash.  The plan-aware
+``HostPagedStore`` then uploads the hot set once and streams only the
+paged parameters host->device double-buffered ahead of use (proactive
+swap).  We check the mixed execution is bit-identical to the fully
+resident one.
 
 Run:  PYTHONPATH=src python examples/serve_paged.py
 """
@@ -16,6 +19,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.paging import HostPagedStore, StallModel, build_pages
+from repro.core.placement import plan_for_budget
 from repro.core.weight_store import freeze, uniform_policy
 from repro.models import transformer as tfm
 from repro.parallel.sharding import freeze_for_serving
@@ -42,21 +46,29 @@ def main():
                            for p in path)
             per_layer[f"layer{i:02d}/{key}"] = leaf
     flat_store = freeze(per_layer, uniform_policy(8, min_size=256))
+
+    # budget ~ half the model: plan_for_budget pins the hot half resident,
+    # the cold half pages through two live slots (MRAM + tile SRAM)
+    budget = flat_store.packed_bytes // 2
+    plan = plan_for_budget(flat_store, budget)
     layer_bytes = flat_store.packed_bytes // cfg.n_layers
     page_bytes = 2 * layer_bytes + 64
-    pages = build_pages(flat_store, page_bytes)
-    print(f"model: {flat_store.packed_bytes/1e6:.2f} MB packed, "
-          f"{len(pages)} pages of <= {page_bytes/1e6:.2f} MB "
-          f"(resident budget = 2 pages, like MRAM+tile SRAM)")
+    pages = build_pages(flat_store, page_bytes, plan=plan)
+    print(f"model: {flat_store.packed_bytes/1e6:.2f} MB packed; plan pins "
+          f"{plan.resident_bytes(flat_store)/1e6:.2f} MB resident "
+          f"(budget {budget/1e6:.2f} MB), pages "
+          f"{plan.paged_bytes(flat_store)/1e6:.2f} MB across {len(pages)} "
+          f"pages of <= {page_bytes/1e6:.2f} MB")
+    assert plan.fits(flat_store, budget)
 
-    paged = HostPagedStore(flat_store, page_bytes)
-    streamed = {}
+    paged = HostPagedStore(flat_store, page_bytes, plan=plan)
+    streamed = dict(paged.resident)      # hot set pinned at construction
     for page, dev_params in paged.stream(resident_slots=2):
         streamed.update(dev_params)
     print(f"  swaps: {paged.swap_count}, demand misses: {paged.miss_count} "
           f"(proactive prefetch hid all but the cold start)")
 
-    # every streamed page leaf is bit-identical to the resident store
+    # every leaf — pinned or streamed — is bit-identical to the reference
     drift = 0
     for name, p in flat_store.params.items():
         drift = max(drift, int(jnp.max(jnp.abs(
@@ -65,7 +77,8 @@ def main():
     print(f"  streamed-vs-resident packed drift: {drift} (must be 0)")
     assert drift == 0
 
-    # stall model: how much latency paging would add on the SoC
+    # stall model over the PAGED traffic only: what the plan's cold half
+    # costs on the SoC (the hot half never swaps)
     sm = StallModel(swap_bandwidth_bytes_per_s=550e6)   # HyperBus
     compute = [0.8e-3] * len(pages)                     # per-page compute
     r = sm.run(pages, compute)

@@ -1,9 +1,13 @@
 # The paper's primary contribution — the At-MRAM neural engine substrate:
 # NEMO quantization, sub-byte packing, the packed WeightStore (MRAM
-# analogue), virtual weight paging, the four NVM integration scenarios,
-# and the calibrated Siracusa memory-system model.
+# analogue), per-layer weight placement + virtual weight paging, the four
+# NVM integration scenarios, and the calibrated Siracusa memory-system
+# model.
 from repro.core import (engine, memsys, packing, paging, perf_model,
-                        quantize, scenarios, weight_store)
+                        placement, quantize, scenarios, weight_store)
+from repro.core.placement import (Placement, PlacementPlan, SCENARIOS,
+                                  plan_for_budget)
 
 __all__ = ["engine", "memsys", "packing", "paging", "perf_model",
-           "quantize", "scenarios", "weight_store"]
+           "placement", "quantize", "scenarios", "weight_store",
+           "Placement", "PlacementPlan", "SCENARIOS", "plan_for_budget"]

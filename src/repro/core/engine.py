@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import scenarios
+from repro.core.placement import PlacementPlan
 from repro.core.weight_store import PackedParam
 
 
@@ -33,22 +34,41 @@ class EngineConfig:
     scenario: str = "l1mram"      # weight placement for the neureka path
     mode: str = "xla"             # kernel mode: pallas | interpret | xla
     weight_bits: int = 8          # default packing precision
+    # optional per-parameter placement; overrides `scenario` when set so a
+    # single model can mix integration points (hot At-MRAM, cold paged)
+    plan: Optional[PlacementPlan] = None
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
+
+    @classmethod
+    def from_plan(cls, plan: PlacementPlan, engine: str = "neureka"
+                  ) -> "EngineConfig":
+        return cls(engine=engine, scenario=plan.default.scenario,
+                   mode=plan.mode, weight_bits=plan.default.weight_bits,
+                   plan=plan)
+
+    def scenario_for(self, path: Optional[str]) -> str:
+        if self.plan is not None:
+            return self.plan.scenario_for(path)
+        return self.scenario
 
 
 DSP = EngineConfig(engine="dsp")
 NEUREKA = EngineConfig(engine="neureka")
 
 
-def linear(x: jax.Array, w, cfg: EngineConfig, *, out_dtype=None) -> jax.Array:
+def linear(x: jax.Array, w, cfg: EngineConfig, *, path: Optional[str] = None,
+           out_dtype=None) -> jax.Array:
     """y = x @ W^T.  ``w`` is a PackedParam (neureka) or a dense (N, K) array
     (dsp).  Dense weights passed to a neureka engine raise — the packed
     store is the only weight source the accelerator reads (MRAM semantics).
+
+    ``path`` is the parameter's placement path; when ``cfg.plan`` is set the
+    scenario is resolved per parameter instead of globally.
     """
     if isinstance(w, PackedParam):
-        return scenarios.linear_apply(x, w, scenario=cfg.scenario,
+        return scenarios.linear_apply(x, w, scenario=cfg.scenario_for(path),
                                       mode=cfg.mode, out_dtype=out_dtype)
     if cfg.engine == "neureka":
         raise TypeError("neureka engine requires packed weights "

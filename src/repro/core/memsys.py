@@ -14,7 +14,9 @@ All bandwidths in bytes/s, energies in J, times in s.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.placement import SCENARIOS, PlacementPlan, ScenarioCost
 
 # ---------------------------------------------------------------------------
 # Operating points (paper Table I)
@@ -151,21 +153,6 @@ def neureka_ideal_gops(op_kind: str, weight_bits: int) -> float:
 # interfaces they cross per inference.
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass(frozen=True)
-class ScenarioCost:
-    """Per-byte weight-path costs for one integration scenario."""
-    name: str
-    # bandwidth of the ingress stage feeding weights toward L2/L1
-    weight_bw_Bps: float
-    # energy per weight byte end-to-end (all hops)
-    weight_energy_per_B: float
-    # does the weight path steal L1 bandwidth from activations?
-    weights_through_l1: bool
-    # how many times each weight byte crosses the shared cluster port
-    # (L3 scenarios store+load through L2 = 2; L2MRAM = 1; L1MRAM = 0)
-    shared_port_crossings: int
-
-
 def scenario_costs(op: OperatingPoint = NOMINAL) -> Dict[str, ScenarioCost]:
     v = _vscale(op)
     return {
@@ -191,9 +178,6 @@ def scenario_costs(op: OperatingPoint = NOMINAL) -> Dict[str, ScenarioCost]:
             v * E_MRAM_READ_PER_B,
             weights_through_l1=False, shared_port_crossings=0),
     }
-
-
-SCENARIOS = ("l3flash", "l3mram", "l2mram", "l1mram")
 
 
 # ---------------------------------------------------------------------------
@@ -300,15 +284,40 @@ def layer_timing(layer: LayerShape, scenario: str,
                        regime)
 
 
-def network_walk(layers: Sequence[LayerShape], scenario: str,
+Scenarios = Union[str, Sequence[str], PlacementPlan]
+
+
+def resolve_scenarios(layers: Sequence[LayerShape],
+                      scenario: Scenarios) -> List[str]:
+    """Per-layer scenario list from a global name, an explicit per-layer
+    sequence, or a PlacementPlan keyed by layer name."""
+    if isinstance(scenario, str):
+        return [scenario] * len(layers)
+    if isinstance(scenario, PlacementPlan):
+        return [scenario.scenario_for(l.name) for l in layers]
+    names = list(scenario)
+    if len(names) != len(layers):
+        raise ValueError(f"got {len(names)} scenarios for {len(layers)} "
+                         "layers")
+    return names
+
+
+def network_walk(layers: Sequence[LayerShape], scenario: Scenarios,
                  op: OperatingPoint = NOMINAL) -> Tuple[float, float, List[LayerTiming]]:
-    """End-to-end latency/energy of a network under a scenario.
+    """End-to-end latency/energy of a network under a weight placement.
+
+    ``scenario`` is a single global scenario name (the paper's Fig 10
+    setup), an explicit per-layer sequence, or a
+    :class:`~repro.core.placement.PlacementPlan` matched against layer
+    names — the mixed-residency case where hot layers stream from At-MRAM
+    while cold layers come through the background path.
 
     Double buffering across layers: per-layer latency is the max of its
     pipeline stages (paper §IV-C: "overall latency is determined by the
     latency of the slowest step").
     """
-    timings = [layer_timing(l, scenario, op) for l in layers]
+    per_layer = resolve_scenarios(layers, scenario)
+    timings = [layer_timing(l, s, op) for l, s in zip(layers, per_layer)]
     total_s = sum(t.latency_s for t in timings)
     total_j = sum(t.energy_j for t in timings)
     return total_s, total_j, timings

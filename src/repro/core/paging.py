@@ -24,6 +24,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tupl
 import jax
 import numpy as np
 
+from repro.core.placement import PlacementPlan
 from repro.core.weight_store import WeightStore, PackedParam, SIRACUSA_MRAM_BYTES
 
 
@@ -35,14 +36,21 @@ class Page:
 
 
 def build_pages(store: WeightStore, page_bytes: int = SIRACUSA_MRAM_BYTES,
-                order: Optional[Sequence[str]] = None) -> List[Page]:
+                order: Optional[Sequence[str]] = None,
+                plan: Optional[PlacementPlan] = None) -> List[Page]:
     """Greedy first-fit pagination preserving access (layer) order.
 
     Keeping pages contiguous in access order is what makes proactive
     prefetch a *static* schedule — the paper's "typically deterministic
     weight access pattern".
+
+    When ``plan`` is given, only its ``paged`` parameters are paginated;
+    the plan's resident hot set stays pinned outside the page cache (the
+    §II-B2 split between live MRAM contents and background pages).
     """
     names = list(order) if order is not None else list(store.params.keys())
+    if plan is not None:
+        names = [n for n in names if plan.placement_for(n).paged]
     pages: List[Page] = []
     cur: List[str] = []
     cur_bytes = 0
@@ -129,17 +137,32 @@ def validate_schedule(entries: Sequence[PageScheduleEntry],
 class HostPagedStore:
     """Runtime paged weight streaming: host RAM = background flash, device
     HBM = the two live pages.  Double-buffered with a worker thread — the
-    software analogue of the FC+IO-DMA proactive swap."""
+    software analogue of the FC+IO-DMA proactive swap.
+
+    With a ``plan``, the plan's resident parameters are uploaded once and
+    stay pinned in ``self.resident`` (the live MRAM image); only the paged
+    parameters flow through the page cache.
+    """
 
     def __init__(self, store: WeightStore, page_bytes: int,
-                 device: Optional[jax.Device] = None):
+                 device: Optional[jax.Device] = None,
+                 plan: Optional[PlacementPlan] = None):
         self.store = store
-        self.pages = build_pages(store, page_bytes)
+        self.plan = plan
+        self.pages = build_pages(store, page_bytes, plan=plan)
         self.device = device or jax.devices()[0]
         # evacuate packed params to host numpy (off-chip flash image)
         self._host: Dict[str, Tuple[np.ndarray, np.ndarray, PackedParam]] = {}
+        self.resident: Dict[str, PackedParam] = {}
         for name, p in store.params.items():
-            self._host[name] = (np.asarray(p.packed), np.asarray(p.scale), p)
+            if plan is not None and not plan.placement_for(name).paged:
+                self.resident[name] = PackedParam(
+                    packed=jax.device_put(p.packed, self.device),
+                    scale=jax.device_put(p.scale, self.device),
+                    bits=p.bits, orig_shape=p.orig_shape)
+            else:
+                self._host[name] = (np.asarray(p.packed), np.asarray(p.scale),
+                                    p)
         self._pool = ThreadPoolExecutor(max_workers=1)
         self.swap_count = 0
         self.miss_count = 0

@@ -1,0 +1,338 @@
+"""Per-layer weight placement — the single source of truth for *where
+weights live* (paper §IV Fig 9 scenarios + §II-B2 virtual paging).
+
+Siracusa's central result is that the integration point of the weight
+memory (off-chip flash, background L3/L2 MRAM, or the At-MRAM port)
+determines system latency and energy, and its virtual paging shows the
+decision is made **per page, not per model**.  This module owns that
+decision for the whole framework:
+
+  * ``SCENARIOS`` — the four NVM integration points.  This is the only
+    definition site; ``core.memsys`` (analytical model) and
+    ``core.scenarios`` (executable weight paths) both import it, and a test
+    asserts the two stacks stay in sync.
+  * ``Placement`` — one parameter's placement: scenario, packed bit-width,
+    and residency (``resident`` in the 4 MiB MRAM vs ``paged`` from
+    background memory through the §II-B2 page cache).
+  * ``PlacementPlan`` — maps parameter paths -> ``Placement`` via ordered
+    glob rules with a default.  Consumed by all four layers that previously
+    reinvented the concept: the executable linear dispatch
+    (``models.layers.linear`` / ``core.engine``), the analytical walk
+    (``memsys.network_walk``), paging (``core.paging``) and the serving
+    runtime (``serving.ServingEngine``, ``launch.serve``).
+  * ``plan_for_budget`` — greedy hot-set solver: pin the parameters with the
+    highest bytes-used-per-inference resident until the MRAM budget is
+    spent; everything else is paged from the cold scenario.
+
+The old single-global-scenario API survives as ``PlacementPlan.uniform``
+and as transparent acceptance of the legacy ``{"scenario", "mode", "bits"}``
+engine dicts (``as_plan`` / ``linear_dispatch``).
+
+Path conventions: paths are full flattened store keys — the stacked LM
+tree uses ``layers/attn/wq`` (one entry per parameter *group*; the scan
+executes every depth with the same placement), per-layer flat stores use
+``layer03/mlp/w_down``.  Executable call sites pass the same canonical
+store path, so exact-path rules (e.g. from :func:`plan_for_budget`) match
+dispatch and accounting identically.  A pattern matches a path if it
+glob-matches the full path or a ``/``-boundary suffix of it, so
+hand-written rules can stay short (``attn/wq``, ``mlp/*``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+from repro.core.weight_store import SIRACUSA_MRAM_BYTES, WeightStore
+
+# The four NVM integration scenarios (paper §IV, Fig 9), loosest->tightest
+# coupling.  THE single definition site for both the analytical and the
+# executable stack.
+SCENARIOS = ("l3flash", "l3mram", "l2mram", "l1mram")
+
+RESIDENCIES = ("resident", "paged")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioCost:
+    """Per-byte weight-path costs for one integration scenario (filled in
+    by ``memsys.scenario_costs`` from the calibrated bandwidth/energy
+    constants; the dataclass lives here so the scenario *vocabulary* has a
+    single home)."""
+    name: str
+    # bandwidth of the ingress stage feeding weights toward L2/L1
+    weight_bw_Bps: float
+    # energy per weight byte end-to-end (all hops)
+    weight_energy_per_B: float
+    # does the weight path steal L1 bandwidth from activations?
+    weights_through_l1: bool
+    # how many times each weight byte crosses the shared cluster port
+    # (L3 scenarios store+load through L2 = 2; L2MRAM = 1; L1MRAM = 0)
+    shared_port_crossings: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Where one parameter lives: integration scenario, packed precision,
+    and whether it is MRAM-resident or paged from background memory."""
+
+    scenario: str = "l1mram"
+    weight_bits: int = 8
+    residency: str = "resident"
+
+    def __post_init__(self):
+        if self.scenario not in SCENARIOS:
+            raise ValueError(f"unknown scenario {self.scenario!r}; "
+                             f"expected one of {SCENARIOS}")
+        if self.residency not in RESIDENCIES:
+            raise ValueError(f"unknown residency {self.residency!r}; "
+                             f"expected one of {RESIDENCIES}")
+        if self.weight_bits not in (2, 4, 8):
+            raise ValueError(f"weight_bits must be 2/4/8, got "
+                             f"{self.weight_bits}")
+
+    @property
+    def paged(self) -> bool:
+        return self.residency == "paged"
+
+
+# Canonical hot/cold placements for budget planning: hot weights stream
+# over the dedicated At-MRAM port; cold weights page in from off-chip
+# flash (§II-B2).
+HOT = Placement("l1mram", 8, "resident")
+COLD = Placement("l3flash", 8, "paged")
+
+
+def _match(path: str, pattern: str) -> bool:
+    """Glob match helper honouring the path conventions above."""
+    return (fnmatch.fnmatchcase(path, pattern)
+            or fnmatch.fnmatchcase(path, "*/" + pattern))
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPlan:
+    """Parameter path -> :class:`Placement`, first-matching-rule-wins.
+
+    Frozen and hashable so it can be closed over inside jit'd model code
+    exactly like the legacy engine dict.  ``mode`` is the kernel mode
+    (pallas | interpret | xla) shared by every dispatch under the plan.
+    """
+
+    default: Placement = Placement()
+    rules: Tuple[Tuple[str, Placement], ...] = ()
+    mode: str = "xla"
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def uniform(cls, scenario: str = "l1mram", bits: int = 8,
+                mode: str = "xla", residency: str = "resident"
+                ) -> "PlacementPlan":
+        """The legacy one-global-scenario API as a thin constructor."""
+        return cls(default=Placement(scenario, bits, residency), mode=mode)
+
+    def with_rule(self, pattern: str, placement: Placement) -> "PlacementPlan":
+        """Return a copy with ``pattern -> placement`` appended (rules are
+        evaluated in order, so earlier rules take precedence)."""
+        return dataclasses.replace(self, rules=self.rules + ((pattern,
+                                                              placement),))
+
+    def replace(self, **kw) -> "PlacementPlan":
+        return dataclasses.replace(self, **kw)
+
+    # -- lookup -------------------------------------------------------------
+    def placement_for(self, path: Optional[str]) -> Placement:
+        if path is not None:
+            for pattern, placement in self.rules:
+                if _match(path, pattern):
+                    return placement
+        return self.default
+
+    def scenario_for(self, path: Optional[str]) -> str:
+        return self.placement_for(path).scenario
+
+    def bits_for(self, path: Optional[str]) -> int:
+        return self.placement_for(path).weight_bits
+
+    @property
+    def is_uniform(self) -> bool:
+        return not self.rules
+
+    def scenarios_used(self) -> Tuple[str, ...]:
+        """Scenarios the plan can dispatch to, in SCENARIOS order."""
+        used = {self.default.scenario} | {p.scenario for _, p in self.rules}
+        return tuple(s for s in SCENARIOS if s in used)
+
+    # -- store accounting ---------------------------------------------------
+    def split_names(self, names: Sequence[str]
+                    ) -> Tuple[List[str], List[str]]:
+        """Partition parameter paths into (resident, paged), order kept."""
+        resident, paged = [], []
+        for n in names:
+            (paged if self.placement_for(n).paged else resident).append(n)
+        return resident, paged
+
+    def resident_bytes(self, store: "StoreSizes") -> int:
+        sizes = _sizes_of(store)
+        resident, _ = self.split_names(list(sizes))
+        return sum(sizes[n] for n in resident)
+
+    def paged_bytes(self, store: "StoreSizes") -> int:
+        sizes = _sizes_of(store)
+        _, paged = self.split_names(list(sizes))
+        return sum(sizes[n] for n in paged)
+
+    def fits(self, store: "StoreSizes",
+             budget_bytes: int = SIRACUSA_MRAM_BYTES) -> bool:
+        return self.resident_bytes(store) <= budget_bytes
+
+    def summary(self, store: Optional["StoreSizes"] = None) -> str:
+        lines = [f"PlacementPlan(mode={self.mode}, default="
+                 f"{self.default.scenario}/{self.default.weight_bits}b/"
+                 f"{self.default.residency}, {len(self.rules)} rules)"]
+        for pattern, p in self.rules:
+            lines.append(f"  {pattern} -> {p.scenario}/{p.weight_bits}b/"
+                         f"{p.residency}")
+        if store is not None:
+            lines.append(f"  resident {self.resident_bytes(store)} B, "
+                         f"paged {self.paged_bytes(store)} B")
+        return "\n".join(lines)
+
+
+DEFAULT_PLAN = PlacementPlan()
+
+# Anything that names parameter sizes: a packed WeightStore or a plain
+# {path: nbytes} mapping (e.g. packed-leaf sizes of a serving tree, or the
+# analytical per-layer weight bytes).
+StoreSizes = Union[WeightStore, Mapping[str, int]]
+
+
+def _sizes_of(store: StoreSizes) -> Dict[str, int]:
+    if isinstance(store, WeightStore):
+        return {n: p.nbytes_packed for n, p in store.params.items()}
+    return dict(store)
+
+
+# ---------------------------------------------------------------------------
+# Legacy-engine interop: every model entry point threads an ``engine``
+# object; historically an untyped {"scenario", "mode", "bits"} dict
+# (optionally carrying "dp_axes" sharding hints for training).  These
+# helpers let a PlacementPlan, an EngineConfig, a legacy dict, or None all
+# flow through the same parameter.
+# ---------------------------------------------------------------------------
+
+def as_plan(engine: Any) -> PlacementPlan:
+    """Normalize any engine-ish object into a PlacementPlan."""
+    if engine is None:
+        return DEFAULT_PLAN
+    if isinstance(engine, PlacementPlan):
+        return engine
+    if isinstance(engine, Mapping):
+        return PlacementPlan.uniform(
+            scenario=engine.get("scenario", "l1mram"),
+            bits=int(engine.get("bits", 8)),
+            mode=engine.get("mode", "xla"))
+    plan = getattr(engine, "plan", None)           # EngineConfig
+    if isinstance(plan, PlacementPlan):
+        return plan
+    if hasattr(engine, "scenario"):
+        return PlacementPlan.uniform(
+            scenario=engine.scenario,
+            bits=int(getattr(engine, "weight_bits", 8)),
+            mode=getattr(engine, "mode", "xla"))
+    raise TypeError(f"cannot interpret {type(engine).__name__} as a "
+                    "placement plan")
+
+
+def linear_dispatch(engine: Any, path: Optional[str]
+                    ) -> Tuple[str, str, int]:
+    """(scenario, mode, bits) for one linear call site.
+
+    Legacy dicts keep their global answer; plans answer per path.
+    """
+    if isinstance(engine, Mapping):               # legacy fast path
+        return (engine.get("scenario", "l1mram"),
+                engine.get("mode", "xla"),
+                int(engine.get("bits", 8)))
+    plan = as_plan(engine)
+    p = plan.placement_for(path)
+    return p.scenario, plan.mode, p.weight_bits
+
+
+def dp_axes_of(engine: Any) -> Tuple[str, ...]:
+    """Data-parallel sharding axes threaded alongside the engine (training
+    path).  Placement plans carry none; legacy dicts may."""
+    if isinstance(engine, Mapping):
+        return tuple(engine.get("dp_axes") or ())
+    return ()
+
+
+def path_key(path: Sequence[Any]) -> str:
+    """Canonical flat path string for a jax tree_flatten_with_path entry —
+    the vocabulary PlacementPlan rules match against."""
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def packed_sizes(tree: Any) -> Dict[str, int]:
+    """{param path: packed bytes} for every packed leaf of a serving tree
+    (the {"packed", "scale"} dicts produced by freeze_for_serving) — the
+    exact dispatch surface to feed :func:`plan_for_budget`."""
+    import jax
+
+    sizes: Dict[str, int] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = path_key(path)
+        if key.endswith("/packed"):
+            sizes[key[:-len("/packed")]] = int(leaf.size)
+    return sizes
+
+
+# ---------------------------------------------------------------------------
+# Greedy hot-set budget solver (§II-B2 against the 4 MiB MRAM).
+# ---------------------------------------------------------------------------
+
+def plan_for_budget(store: StoreSizes,
+                    budget_bytes: int = SIRACUSA_MRAM_BYTES, *,
+                    uses: Optional[Mapping[str, float]] = None,
+                    hot: Placement = HOT, cold: Placement = COLD,
+                    mode: str = "xla") -> PlacementPlan:
+    """Pin the highest bytes-used-per-inference parameters resident.
+
+    ``store`` is a WeightStore (sizes = packed bytes) or a plain
+    {name: nbytes} mapping (e.g. analytical layer weight bytes).  ``uses``
+    optionally weights each parameter by how many times its bytes cross the
+    weight port per inference (default 1); the greedy score is
+    ``nbytes * uses`` — the traffic a resident slot saves.
+
+    Returns a plan whose rules pin the chosen hot set (exact-path rules,
+    ``hot`` placement) and whose default is ``cold`` for everything else.
+    """
+    sizes = _sizes_of(store)
+    uses = uses or {}
+
+    def score(name: str) -> float:
+        return sizes[name] * float(uses.get(name, 1.0))
+
+    order = sorted(sizes, key=lambda n: (-score(n), n))
+    rules: List[Tuple[str, Placement]] = []
+    used = 0
+    for name in order:
+        if used + sizes[name] <= budget_bytes:
+            rules.append((name, hot))
+            used += sizes[name]
+    return PlacementPlan(default=cold, rules=tuple(rules), mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# Freeze-policy bridge: drive WeightStore.freeze precision from a plan.
+# ---------------------------------------------------------------------------
+
+def freeze_policy(plan: PlacementPlan, min_size: int = 1024):
+    """A ``weight_store.freeze`` policy taking per-param bits from ``plan``
+    (>=2-D matmul-like leaves only, like the default policy)."""
+    def _policy(path: str, leaf) -> Optional[int]:
+        if leaf.ndim >= 2 and leaf.size >= min_size:
+            return plan.bits_for(path)
+        return None
+    return _policy

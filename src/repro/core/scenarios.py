@@ -23,15 +23,17 @@ which the roofline/bench harness measures — mirroring the paper's method.
 
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.placement import SCENARIOS, PlacementPlan
 from repro.core.weight_store import PackedParam
 from repro.kernels import ops as kops
 
-SCENARIOS = ("l3flash", "l3mram", "l2mram", "l1mram")
+__all__ = ["SCENARIOS", "linear_apply", "plan_apply", "weight_path_bytes"]
 
 
 def linear_apply(x: jax.Array, p: PackedParam, *, scenario: str = "l1mram",
@@ -55,11 +57,21 @@ def linear_apply(x: jax.Array, p: PackedParam, *, scenario: str = "l1mram",
     return out.astype(out_dtype)
 
 
+def plan_apply(x: jax.Array, p: PackedParam, plan: PlacementPlan,
+               path: Optional[str] = None, *, out_dtype=None) -> jax.Array:
+    """:func:`linear_apply` with the scenario resolved per parameter path
+    from a :class:`~repro.core.placement.PlacementPlan`."""
+    return linear_apply(x, p, scenario=plan.scenario_for(path),
+                        mode=plan.mode, out_dtype=out_dtype)
+
+
 def weight_path_bytes(p: PackedParam, scenario: str) -> int:
     """HBM bytes the weight crosses per use under each scenario (for the
     analytical comparison; the roofline measures the real compiled value)."""
     packed = p.nbytes_packed
-    full = int(jnp.prod(jnp.asarray(p.orig_shape))) * 4
+    # static host-side constant: math.prod, NOT jnp (a device round-trip
+    # for a python shape tuple)
+    full = math.prod(p.orig_shape) * 4
     if scenario == "l1mram":
         return packed                      # read packed once
     if scenario == "l2mram":

@@ -1,11 +1,13 @@
 """Serving launcher: batched requests over the packed At-MRAM store.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-        --requests 8 --bits 4 --paged
+        --requests 8 --bits 4 --budget-mb 2
 
 Freezes trained/random params into the packed WeightStore (the "MRAM
-programming" step), optionally pages them through a resident budget
-(core/paging), and runs the continuous-batching engine.
+programming" step) and runs the continuous-batching engine under a
+PlacementPlan: ``--scenario`` gives the legacy uniform placement,
+``--budget-mb`` runs the greedy hot-set solver instead (hot params pinned
+l1mram-resident, the rest paged l3flash — §II-B2 against the budget).
 """
 
 from __future__ import annotations
@@ -17,6 +19,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.placement import PlacementPlan, packed_sizes, plan_for_budget
 from repro.models import transformer as tfm
 from repro.parallel.sharding import freeze_for_serving
 from repro.serving import Request, ServingEngine
@@ -33,6 +36,10 @@ def main(argv=None):
     ap.add_argument("--bits", type=int, default=8, choices=(2, 4, 8))
     ap.add_argument("--scenario", default="l1mram",
                     choices=("l1mram", "l2mram", "l3mram", "l3flash"))
+    ap.add_argument("--budget-mb", type=float, default=None,
+                    help="resident MRAM budget in MiB; enables the greedy "
+                         "hot-set plan (mixed placement) instead of the "
+                         "uniform --scenario")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -44,10 +51,21 @@ def main(argv=None):
 
     params = tfm.init_params(cfg, jax.random.PRNGKey(0))
     packed = freeze_for_serving(params, bits=args.bits)
-    engine = dict(scenario=args.scenario, mode="xla", bits=args.bits)
+    if args.budget_mb is not None:
+        # greedy hot-set plan over exactly the packed leaves the serving
+        # dispatch reads (PACKABLE matmul weights; embed/norms never page)
+        from repro.core.placement import Placement
+        sizes = packed_sizes(packed)
+        plan = plan_for_budget(
+            sizes, int(args.budget_mb * 1024 * 1024),
+            hot=Placement("l1mram", args.bits, "resident"),
+            cold=Placement("l3flash", args.bits, "paged"))
+        print(plan.summary(sizes))
+    else:
+        plan = PlacementPlan.uniform(args.scenario, bits=args.bits)
 
     eng = ServingEngine(cfg, packed, batch_slots=args.slots,
-                        max_len=args.max_len, engine=engine)
+                        max_len=args.max_len, plan=plan)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for uid in range(args.requests):
@@ -58,8 +76,10 @@ def main(argv=None):
     done = eng.run_until_done()
     dt = time.time() - t0
     total_tokens = sum(len(r.generated) for r in done)
+    place = ("mixed:" + "+".join(plan.scenarios_used())
+             if not plan.is_uniform else plan.default.scenario)
     print(f"served {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens / dt:.1f} tok/s) [W{args.bits}, {args.scenario}]")
+          f"({total_tokens / dt:.1f} tok/s) [W{args.bits}, {place}]")
     return done
 
 

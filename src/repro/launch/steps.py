@@ -23,13 +23,18 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.shapes import ShapeCell
+from repro.core.placement import PlacementPlan
 from repro.models import encdec, transformer as tfm, vlm as vlm_lib
 from repro.models.config import ModelConfig
 from repro.optim import clip_by_global_norm, pick_optimizer
 from repro.parallel import sharding as shd
 
 
+# Legacy dict form, kept for callers that merge overrides into it
+# (launch/microbench.py); serve-step builders normalize everything to a
+# PlacementPlan via placement.as_plan.
 DEFAULT_SERVE_ENGINE = dict(scenario="l1mram", mode="xla", bits=8)
+DEFAULT_SERVE_PLAN = PlacementPlan.uniform()
 
 
 def _loss_fn(cfg: ModelConfig):
@@ -95,8 +100,11 @@ def train_batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh) -> Dict:
 # serve
 # ---------------------------------------------------------------------------
 
-def make_prefill_step(cfg: ModelConfig, engine: Optional[Dict] = None):
-    engine = engine or DEFAULT_SERVE_ENGINE
+def make_prefill_step(cfg: ModelConfig, engine: Optional[Any] = None):
+    """``engine``: PlacementPlan, legacy engine dict (passed through
+    verbatim so sharding hints like dp_axes survive), or None (uniform
+    l1mram plan)."""
+    engine = engine if engine is not None else DEFAULT_SERVE_PLAN
     if cfg.family == "encdec":
         def prefill(params, frames, tokens, cache):
             enc_out = encdec.encode(params, frames, cfg, engine=engine)
@@ -117,8 +125,11 @@ def make_prefill_step(cfg: ModelConfig, engine: Optional[Dict] = None):
     return prefill
 
 
-def make_decode_step(cfg: ModelConfig, engine: Optional[Dict] = None):
-    engine = engine or DEFAULT_SERVE_ENGINE
+def make_decode_step(cfg: ModelConfig, engine: Optional[Any] = None):
+    """``engine``: PlacementPlan, legacy engine dict (passed through
+    verbatim so sharding hints like dp_axes survive), or None (uniform
+    l1mram plan)."""
+    engine = engine if engine is not None else DEFAULT_SERVE_PLAN
     if cfg.family == "encdec":
         def decode(params, token, cache, pos):
             return encdec.step(params, token, cache, pos, cfg, engine=engine)
@@ -129,9 +140,11 @@ def make_decode_step(cfg: ModelConfig, engine: Optional[Dict] = None):
     return decode
 
 
-def serve_param_specs(cfg: ModelConfig, bits: int = 8) -> Any:
-    """Packed At-MRAM store specs (uint8 carriers + f32 scales)."""
-    return shd.serve_spec_like(param_specs(cfg), bits=bits)
+def serve_param_specs(cfg: ModelConfig, bits: int = 8,
+                      plan: Optional[PlacementPlan] = None) -> Any:
+    """Packed At-MRAM store specs (uint8 carriers + f32 scales); ``plan``
+    overrides bits per parameter path (mixed-precision plans)."""
+    return shd.serve_spec_like(param_specs(cfg), bits=bits, plan=plan)
 
 
 def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Any:
@@ -143,11 +156,12 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Any:
 
 
 def serve_input_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
-                      bits: int = 8) -> Dict[str, Any]:
+                      bits: int = 8,
+                      plan: Optional[PlacementPlan] = None) -> Dict[str, Any]:
     """Specs for prefill/decode cells: params (packed), inputs, cache."""
     b, s = cell.global_batch, cell.seq_len
     dt = jnp.dtype(cfg.dtype)
-    pspecs = serve_param_specs(cfg, bits)
+    pspecs = serve_param_specs(cfg, bits, plan=plan)
     pshard = shd.param_shardings(pspecs, mesh)
     pspecs = shd.with_shardings(pspecs, pshard)
 
@@ -183,9 +197,13 @@ def serve_input_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
 
 def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
                serve_bits: int = 8,
-               engine: Optional[Dict] = None
+               engine: Optional[Any] = None
                ) -> Tuple[Callable, Tuple, Dict[str, Any]]:
-    """Returns (fn, example_args_specs, out_shardings_hint)."""
+    """Returns (fn, example_args_specs, out_shardings_hint).
+
+    ``engine``: for serve cells a PlacementPlan or legacy dict of
+    overrides; for train cells a dict (may carry dp_axes sharding hints).
+    """
     cfg = cfg.replace(dtype="bfloat16")
     if cell.kind == "train":
         pspecs = param_specs(cfg)
@@ -205,11 +223,16 @@ def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
         fn = make_train_step(cfg, opt, engine=train_engine)
         return fn, (pspecs_sh, ospecs_sh, batch), {}
 
-    serve_engine = dict(DEFAULT_SERVE_ENGINE)
-    serve_engine["bits"] = serve_bits
-    if engine:
-        serve_engine.update(engine)
-    specs = serve_input_specs(cfg, cell, mesh, bits=serve_bits)
+    if isinstance(engine, PlacementPlan):
+        # the plan owns the bit widths; specs mirror it per parameter
+        serve_engine: Any = engine
+        specs = serve_input_specs(cfg, cell, mesh, plan=engine)
+    else:
+        serve_engine = dict(DEFAULT_SERVE_ENGINE)
+        serve_engine["bits"] = serve_bits
+        if engine:
+            serve_engine.update(engine)
+        specs = serve_input_specs(cfg, cell, mesh, bits=serve_bits)
     if cell.kind == "prefill":
         fn = make_prefill_step(cfg, engine=serve_engine)
         if cfg.family == "encdec":

@@ -65,29 +65,35 @@ def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
 
 def _mha(x: jax.Array, kv_src: jax.Array, p: Dict[str, Any],
          cfg: ModelConfig, *, causal: bool,
-         engine: Optional[Dict] = None) -> jax.Array:
+         engine: Optional[Dict] = None,
+         path: Optional[str] = None) -> jax.Array:
     b, s, _ = x.shape
     sk = kv_src.shape[1]
     hd = cfg.hd
-    q = L.linear(x, p["wq"], engine=engine).reshape(
+    sub = L._subpath
+    q = L.linear(x, p["wq"], engine=engine, path=sub(path, "wq")).reshape(
         b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
-    k = L.linear(kv_src, p["wk"], engine=engine).reshape(
+    k = L.linear(kv_src, p["wk"], engine=engine,
+                 path=sub(path, "wk")).reshape(
         b, sk, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
-    v = L.linear(kv_src, p["wv"], engine=engine).reshape(
+    v = L.linear(kv_src, p["wv"], engine=engine,
+                 path=sub(path, "wv")).reshape(
         b, sk, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
     o = attn_lib.chunked_attention(q, k, v, causal=causal,
                                    q_offset=sk - s if causal else 0,
                                    block=cfg.attn_block)
     return L.linear(o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim),
-                    p["wo"], engine=engine)
+                    p["wo"], engine=engine, path=sub(path, "wo"))
 
 
 def enc_layer_apply(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig, *,
                     engine: Optional[Dict] = None) -> jax.Array:
     h = L.apply_norm(x, p.get("attn_norm"), cfg.norm_type)
-    x = x + _mha(h, h, p["attn"], cfg, causal=False, engine=engine)
+    x = x + _mha(h, h, p["attn"], cfg, causal=False, engine=engine,
+                 path="enc_layers/attn")
     h = L.apply_norm(x, p.get("mlp_norm"), cfg.norm_type)
-    return x + L.mlp(h, p["mlp"], cfg.mlp_act, engine=engine)
+    return x + L.mlp(h, p["mlp"], cfg.mlp_act, engine=engine,
+                     path="enc_layers/mlp")
 
 
 def dec_train_layer_apply(x: jax.Array, enc_out: jax.Array,
@@ -97,11 +103,14 @@ def dec_train_layer_apply(x: jax.Array, enc_out: jax.Array,
     + cross-attn to the encoder states + MLP.  Used by decode() and by the
     roofline microbench."""
     h = L.apply_norm(x, p.get("attn_norm"), cfg.norm_type)
-    x = x + _mha(h, h, p["attn"], cfg, causal=True, engine=engine)
+    x = x + _mha(h, h, p["attn"], cfg, causal=True, engine=engine,
+                 path="dec_layers/attn")
     h = L.apply_norm(x, p.get("xattn_norm"), cfg.norm_type)
-    x = x + _mha(h, enc_out, p["xattn"], cfg, causal=False, engine=engine)
+    x = x + _mha(h, enc_out, p["xattn"], cfg, causal=False, engine=engine,
+                 path="dec_layers/xattn")
     h = L.apply_norm(x, p.get("mlp_norm"), cfg.norm_type)
-    return x + L.mlp(h, p["mlp"], cfg.mlp_act, engine=engine)
+    return x + L.mlp(h, p["mlp"], cfg.mlp_act, engine=engine,
+                     path="dec_layers/mlp")
 
 
 def encode(params: Dict[str, Any], frames: jax.Array, cfg: ModelConfig, *,
@@ -161,9 +170,11 @@ def precompute_cross_kv(params: Dict[str, Any], enc_out: jax.Array,
     b, t, _ = enc_out.shape
 
     def body(_, p):
-        k = L.linear(enc_out, p["xattn"]["wk"], engine=engine).reshape(
+        k = L.linear(enc_out, p["xattn"]["wk"], engine=engine,
+                     path="dec_layers/xattn/wk").reshape(
             b, t, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
-        v = L.linear(enc_out, p["xattn"]["wv"], engine=engine).reshape(
+        v = L.linear(enc_out, p["xattn"]["wv"], engine=engine,
+                     path="dec_layers/xattn/wv").reshape(
             b, t, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
         return None, (k, v)
 
@@ -180,11 +191,14 @@ def dec_layer_apply(x: jax.Array, p: Dict[str, Any],
     b, s, _ = x.shape
     hd = cfg.hd
     h = L.apply_norm(x, p.get("attn_norm"), cfg.norm_type)
-    q = L.linear(h, p["attn"]["wq"], engine=engine).reshape(
+    q = L.linear(h, p["attn"]["wq"], engine=engine,
+                 path="dec_layers/attn/wq").reshape(
         b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
-    k = L.linear(h, p["attn"]["wk"], engine=engine).reshape(
+    k = L.linear(h, p["attn"]["wk"], engine=engine,
+                 path="dec_layers/attn/wk").reshape(
         b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
-    v = L.linear(h, p["attn"]["wv"], engine=engine).reshape(
+    v = L.linear(h, p["attn"]["wv"], engine=engine,
+                 path="dec_layers/attn/wv").reshape(
         b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
     kv = attn_lib.update_cache(layer_cache, k, v, pos)
     if s == 1:
@@ -193,17 +207,21 @@ def dec_layer_apply(x: jax.Array, p: Dict[str, Any],
         o = attn_lib.chunked_attention(q, k, v, causal=True,
                                        block=cfg.attn_block)
     x = x + L.linear(o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim),
-                     p["attn"]["wo"], engine=engine)
+                     p["attn"]["wo"], engine=engine,
+                     path="dec_layers/attn/wo")
     # cross attention over precomputed encoder KV
     h = L.apply_norm(x, p.get("xattn_norm"), cfg.norm_type)
-    q = L.linear(h, p["xattn"]["wq"], engine=engine).reshape(
+    q = L.linear(h, p["xattn"]["wq"], engine=engine,
+                 path="dec_layers/xattn/wq").reshape(
         b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
     o = attn_lib.chunked_attention(q, xk, xv, causal=False,
                                    block=cfg.attn_block)
     x = x + L.linear(o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim),
-                     p["xattn"]["wo"], engine=engine)
+                     p["xattn"]["wo"], engine=engine,
+                     path="dec_layers/xattn/wo")
     h = L.apply_norm(x, p.get("mlp_norm"), cfg.norm_type)
-    x = x + L.mlp(h, p["mlp"], cfg.mlp_act, engine=engine)
+    x = x + L.mlp(h, p["mlp"], cfg.mlp_act, engine=engine,
+                  path="dec_layers/mlp")
     return x, kv
 
 

@@ -14,7 +14,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import scenarios
+from repro.core import placement, scenarios
 from repro.kernels import ops as kops
 
 
@@ -22,18 +22,22 @@ from repro.kernels import ops as kops
 # linear dispatch
 # ---------------------------------------------------------------------------
 
-def linear(x: jax.Array, w, *, engine: Optional[Dict[str, Any]] = None,
-           bias: Optional[jax.Array] = None) -> jax.Array:
+def _subpath(prefix: Optional[str], leaf: str) -> str:
+    return f"{prefix}/{leaf}" if prefix else leaf
+
+
+def linear(x: jax.Array, w, *, engine: Optional[Any] = None,
+           bias: Optional[jax.Array] = None,
+           path: Optional[str] = None) -> jax.Array:
     """y = x @ W^T (+ bias).  W: dense (N, K) array or packed dict.
 
-    ``engine``: {"scenario": ..., "mode": ..., "bits": ...} for packed
-    weights (defaults: l1mram / xla).
+    ``engine`` selects the weight path for packed weights: a
+    :class:`~repro.core.placement.PlacementPlan` (per-parameter dispatch
+    keyed by ``path``) or the legacy {"scenario", "mode", "bits"} dict
+    (one global answer).  Defaults: l1mram / xla / 8-bit.
     """
     if isinstance(w, dict) and "packed" in w:
-        eng = engine or {}
-        scenario = eng.get("scenario", "l1mram")
-        mode = eng.get("mode", "xla")
-        bits = int(eng.get("bits", 8))
+        scenario, mode, bits = placement.linear_dispatch(engine, path)
         k_orig = x.shape[-1]
         if scenario == "l1mram":
             out = kops.quant_matmul(x, w["packed"], w["scale"], bits=bits,
@@ -121,19 +125,24 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def mlp(x: jax.Array, p: Dict[str, Any], act: str,
-        engine: Optional[Dict[str, Any]] = None) -> jax.Array:
-    """Gated (swiglu/geglu) or plain (gelu) MLP."""
+        engine: Optional[Any] = None,
+        path: Optional[str] = None) -> jax.Array:
+    """Gated (swiglu/geglu) or plain (gelu) MLP.  ``path`` is the placement
+    prefix for the weights (e.g. "mlp" -> "mlp/w_down")."""
     if act in ("swiglu", "geglu"):
-        g = linear(x, p["w_gate"], engine=engine)
-        u = linear(x, p["w_up"], engine=engine)
+        g = linear(x, p["w_gate"], engine=engine,
+                   path=_subpath(path, "w_gate"))
+        u = linear(x, p["w_up"], engine=engine, path=_subpath(path, "w_up"))
         h = (jax.nn.silu(g) if act == "swiglu"
              else jax.nn.gelu(g, approximate=True)) * u
     elif act == "gelu":
         h = jax.nn.gelu(linear(x, p["w_up"], engine=engine,
+                               path=_subpath(path, "w_up"),
                                bias=p.get("b_up")), approximate=True)
     else:
         raise ValueError(f"unknown mlp act {act!r}")
-    return linear(h, p["w_down"], engine=engine, bias=p.get("b_down"))
+    return linear(h, p["w_down"], engine=engine,
+                  path=_subpath(path, "w_down"), bias=p.get("b_down"))
 
 
 # ---------------------------------------------------------------------------

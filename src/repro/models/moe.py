@@ -22,6 +22,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.placement import dp_axes_of
 from repro.models import layers
 
 
@@ -99,7 +100,7 @@ def expert_ffn(buf: jax.Array, p: Dict[str, Any], act: str = "swiglu",
             pe = dict(w_gate=dict(packed=wg, scale=sg),
                       w_up=dict(packed=wu, scale=su),
                       w_down=dict(packed=wd, scale=sd))
-            return layers.mlp(b, pe, act, engine=engine)
+            return layers.mlp(b, pe, act, engine=engine, path="layers/moe")
         return jax.vmap(one)(buf, p["w_gate"]["packed"], p["w_up"]["packed"],
                              p["w_down"]["packed"], p["w_gate"]["scale"],
                              p["w_up"]["scale"], p["w_down"]["scale"])
@@ -135,16 +136,16 @@ def moe_apply(x: jax.Array, p: Dict[str, Any], *, n_experts: int, k: int,
         from jax.sharding import PartitionSpec as P
         tg = t // groups
         xg = xf.reshape(groups, tg, d)
-        if engine and engine.get("dp_axes"):
+        if dp_axes_of(engine):
             xg = jax.lax.with_sharding_constraint(
-                xg, P(tuple(engine["dp_axes"]), None, None))
+                xg, P(dp_axes_of(engine), None, None))
         gates, idx = jax.vmap(lambda xx: route(xx, p["router"], k))(xg)
         cap = capacity(tg, n_experts, k, capacity_factor)
         buf, aux = jax.vmap(
             lambda xx, gg, ii: dispatch(xx, gg, ii, n_experts, cap))(
             xg, gates, idx)
-        if engine and engine.get("dp_axes"):
-            dp = tuple(engine["dp_axes"])
+        if dp_axes_of(engine):
+            dp = dp_axes_of(engine)
             # keep the dispatch buffer group-sharded and the expert hidden
             # dim TP'd — vmap otherwise loses the F-sharding and GSPMD
             # replicates the expert einsums (measured: 3x compute blowup).
@@ -172,9 +173,11 @@ def moe_apply(x: jax.Array, p: Dict[str, Any], *, n_experts: int, k: int,
         y = combine(expert_out, aux, t).astype(x.dtype)
 
     if "shared" in p:
-        y = y + layers.mlp(xf, p["shared"], act, engine=engine)
+        y = y + layers.mlp(xf, p["shared"], act, engine=engine,
+                           path="layers/moe/shared")
     if "dense" in p:
-        y = y + layers.mlp(xf, p["dense"], act, engine=engine)
+        y = y + layers.mlp(xf, p["dense"], act, engine=engine,
+                           path="layers/moe/dense")
     return y.reshape(*lead, d)
 
 

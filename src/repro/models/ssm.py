@@ -13,6 +13,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.placement import dp_axes_of
 from repro.models import layers
 
 
@@ -126,22 +127,25 @@ def mamba_mixer(x: jax.Array, p: Dict[str, Any], *, d_inner: int,
     """
     decode = state is not None and x.shape[1] == 1
 
-    xz = layers.linear(x, p["in_proj"], engine=engine)        # (B,S,2*Di)
-    if shard_inner and engine and engine.get("dp_axes"):
+    xz = layers.linear(x, p["in_proj"], engine=engine,
+                       path="layers/ssm/in_proj")                    # (B,S,2*Di)
+    if shard_inner and dp_axes_of(engine):
         from jax.sharding import PartitionSpec as P
         xz = jax.lax.with_sharding_constraint(
-            xz, P(tuple(engine["dp_axes"]), None, "model"))
+            xz, P(dp_axes_of(engine), None, "model"))
     xs, z = jnp.split(xz, 2, axis=-1)
 
     conv_state = state["conv"] if state is not None else None
     xc, new_conv = causal_conv1d(xs, p["conv_w"], p.get("conv_b"), conv_state)
     xc = jax.nn.silu(xc)
 
-    dbc = layers.linear(xc, p["x_proj"], engine=engine)       # (B,S,R+2N)
+    dbc = layers.linear(xc, p["x_proj"], engine=engine,
+                        path="layers/ssm/x_proj")                    # (B,S,R+2N)
     dt_in = dbc[..., :dt_rank]
     B = dbc[..., dt_rank:dt_rank + ssm_state]
     C = dbc[..., dt_rank + ssm_state:]
-    dt = jax.nn.softplus(layers.linear(dt_in, p["dt_proj"], engine=engine)
+    dt = jax.nn.softplus(layers.linear(dt_in, p["dt_proj"], engine=engine,
+                                       path="layers/ssm/dt_proj")
                          + p["dt_bias"])
     A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (Di, N)
 
@@ -158,7 +162,8 @@ def mamba_mixer(x: jax.Array, p: Dict[str, Any], *, d_inner: int,
         new_state = dict(h=h_last, conv=new_conv) if state is not None else None
 
     y = y.astype(x.dtype) * jax.nn.silu(z)
-    out = layers.linear(y, p["out_proj"], engine=engine)
+    out = layers.linear(y, p["out_proj"], engine=engine,
+                        path="layers/ssm/out_proj")
     return out, new_state
 
 

@@ -168,9 +168,9 @@ def _attn_apply(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig, *,
                 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     b, s, _ = x.shape
     hd = cfg.hd
-    q = L.linear(x, p["wq"], engine=engine, bias=p.get("bq"))
-    k = L.linear(x, p["wk"], engine=engine, bias=p.get("bk"))
-    v = L.linear(x, p["wv"], engine=engine, bias=p.get("bv"))
+    q = L.linear(x, p["wq"], engine=engine, path="layers/attn/wq", bias=p.get("bq"))
+    k = L.linear(x, p["wk"], engine=engine, path="layers/attn/wk", bias=p.get("bk"))
+    v = L.linear(x, p["wv"], engine=engine, path="layers/attn/wv", bias=p.get("bv"))
     q = q.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
     k = k.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
     v = v.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
@@ -212,7 +212,7 @@ def _attn_apply(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig, *,
                                        block=cfg.attn_block,
                                        compute_dtype=adt)
     o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
-    return L.linear(o, p["wo"], engine=engine), cache
+    return L.linear(o, p["wo"], engine=engine, path="layers/attn/wo"), cache
 
 
 def _layer_apply(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig, *,
@@ -263,7 +263,7 @@ def _layer_apply(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig, *,
             groups=max(cfg.moe_groups, 1), engine=engine)
     elif "mlp" in p:
         h = L.apply_norm(x, p.get("mlp_norm"), cfg.norm_type)
-        x = x + L.mlp(h, p["mlp"], cfg.mlp_act, engine=engine)
+        x = x + L.mlp(h, p["mlp"], cfg.mlp_act, engine=engine, path="layers/mlp")
     return x, (new_cache if cache is not None else None)
 
 

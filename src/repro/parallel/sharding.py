@@ -199,17 +199,23 @@ def with_shardings(spec_tree: Any, shard_tree: Any) -> Any:
 # packed-store spec (At-MRAM serving parameters)
 # ---------------------------------------------------------------------------
 
-def freeze_for_serving(params: Any, bits: int = 8) -> Any:
-    """Quantize+pack every PACKABLE matmul leaf (real arrays)."""
+def freeze_for_serving(params: Any, bits: int = 8, plan: Any = None) -> Any:
+    """Quantize+pack every PACKABLE matmul leaf (real arrays).
+
+    ``plan`` (a :class:`repro.core.placement.PlacementPlan`) overrides
+    ``bits`` per parameter path so the packed precision matches what the
+    plan's dispatch will later assume.
+    """
     from repro.core import packing, quantize
 
     def per_leaf(path, leaf):
         keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
                      for p in path)
         if keys[-1] in PACKABLE and leaf.ndim >= 2:
+            b = plan.bits_for("/".join(keys)) if plan is not None else bits
             flat = leaf.reshape(-1, leaf.shape[-1])
-            qt = quantize.quantize_weights(flat, bits, channel_axis=0)
-            packed = packing.pack(qt.values, bits).reshape(
+            qt = quantize.quantize_weights(flat, b, channel_axis=0)
+            packed = packing.pack(qt.values, b).reshape(
                 *leaf.shape[:-1], -1)
             scale = qt.scale.reshape(leaf.shape[:-1])
             return dict(packed=packed, scale=scale)
@@ -220,14 +226,20 @@ def freeze_for_serving(params: Any, bits: int = 8) -> Any:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def serve_spec_like(params_spec: Any, bits: int = 8) -> Any:
-    """ShapeDtypeStruct tree of the packed store (no allocation)."""
-    f = 8 // bits
+def serve_spec_like(params_spec: Any, bits: int = 8, plan: Any = None) -> Any:
+    """ShapeDtypeStruct tree of the packed store (no allocation).
+
+    ``plan`` (PlacementPlan) overrides ``bits`` per parameter path, exactly
+    mirroring :func:`freeze_for_serving` so specs and real packed arrays
+    stay layout-consistent under mixed-precision plans.
+    """
 
     def per_leaf(path, leaf):
         keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
                      for p in path)
         if keys[-1] in PACKABLE and len(leaf.shape) >= 2:
+            b = plan.bits_for("/".join(keys)) if plan is not None else bits
+            f = 8 // b
             k = leaf.shape[-1]
             return dict(
                 packed=jax.ShapeDtypeStruct(

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.placement import PlacementPlan, as_plan
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
 
@@ -54,14 +55,26 @@ class Request:
 
 
 class ServingEngine:
+    """``plan`` is the per-parameter weight placement
+    (:class:`~repro.core.placement.PlacementPlan`); the legacy ``engine``
+    dict ({"scenario", "mode", "bits"}) is still accepted and is converted
+    to a uniform plan.  A mixed plan serves hot parameters over the fused
+    At-MRAM path and cold parameters through the background scenarios in
+    the SAME jitted step."""
+
     def __init__(self, cfg: ModelConfig, params: Any, *, batch_slots: int = 4,
                  max_len: int = 512, engine: Optional[Dict] = None,
-                 seed: int = 0):
+                 plan: Optional[PlacementPlan] = None, seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
-        self.engine = engine or dict(scenario="l1mram", mode="xla", bits=8)
+        if plan is not None and engine is not None:
+            raise ValueError("pass either plan= or the legacy engine=, "
+                             "not both")
+        self.plan = plan if plan is not None else as_plan(engine)
+        # kept for backward compatibility with callers poking .engine
+        self.engine = self.plan
         self.key = jax.random.PRNGKey(seed)
 
         self.cache = tfm.init_serve_cache(cfg, batch_slots, max_len)
@@ -78,7 +91,7 @@ class ServingEngine:
         # batched decode with PER-SLOT positions (continuous batching):
         # rope, cache insert and attention masks all take the (B,) vector.
         logits, cache = tfm.step(params, tokens, cache, pos_vec, self.cfg,
-                                 engine=self.engine)
+                                 engine=self.plan)
         return logits, cache
 
     def _prefill_for_len(self, s: int):
@@ -91,7 +104,7 @@ class ServingEngine:
                     cache)
                 logits, sub = tfm.step(params, tokens[None], sub,
                                        jnp.int32(0), self.cfg,
-                                       engine=self.engine)
+                                       engine=self.plan)
                 cache = jax.tree_util.tree_map(
                     lambda c, s_: jax.lax.dynamic_update_slice_in_dim(
                         c, s_.astype(c.dtype), slot, 1),

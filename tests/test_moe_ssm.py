@@ -4,6 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# optional test dependency (declared as the [test] extra in pyproject.toml):
+# without it the property tests are skipped, not a collection error
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models import moe, ssm

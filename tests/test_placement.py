@@ -1,0 +1,368 @@
+"""The unified per-layer weight-placement subsystem (core/placement).
+
+Covers the four consumers of a PlacementPlan: the executable linear
+dispatch (models/layers + serving), the analytical memsys walk, the
+paging split, and the greedy hot-set budget solver.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import memsys, placement, scenarios
+from repro.core.memsys import NOMINAL, network_walk, scenario_costs
+from repro.core.paging import HostPagedStore, build_pages
+from repro.core.perf_model import mnv2_budget_plan, mnv2_plan_walk, \
+    mnv2_scenario_table, mobilenet_v2_jobs
+from repro.core.placement import (Placement, PlacementPlan, SCENARIOS,
+                                  as_plan, linear_dispatch, plan_for_budget)
+from repro.core.weight_store import freeze, pack_param, uniform_policy
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import freeze_for_serving
+from repro.serving import Request, ServingEngine
+
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16, remat=False)
+
+# hot attention projections stream fused At-MRAM; cold MLP weights are
+# paged through the background path (l3flash degrades to l3mram semantics
+# inside jit — same numerics, different byte accounting)
+MIXED = (PlacementPlan(default=Placement("l1mram", 8, "resident"))
+         .with_rule("mlp/*", Placement("l3flash", 8, "paged")))
+
+
+# ---------------------------------------------------------------------------
+# the scenario vocabulary has exactly one home
+# ---------------------------------------------------------------------------
+
+def test_single_scenario_definition_site():
+    # the analytical and executable stacks share the placement tuple
+    assert memsys.SCENARIOS is placement.SCENARIOS
+    assert scenarios.SCENARIOS is placement.SCENARIOS
+    # the analytical cost table covers exactly the same set
+    assert set(scenario_costs(NOMINAL).keys()) == set(SCENARIOS)
+    # and every scenario has an executable weight path
+    x = jnp.ones((2, 16), jnp.float32)
+    p = pack_param(jnp.ones((8, 16), jnp.float32), 8)
+    for sc in SCENARIOS:
+        assert scenarios.linear_apply(x, p, scenario=sc).shape == (2, 8)
+
+
+def test_placement_validation():
+    with pytest.raises(ValueError):
+        Placement("l9mram")
+    with pytest.raises(ValueError):
+        Placement("l1mram", residency="floating")
+    with pytest.raises(ValueError):
+        Placement("l1mram", weight_bits=3)
+
+
+def test_rule_matching_paths():
+    plan = (PlacementPlan(default=Placement("l1mram"))
+            .with_rule("mlp/*", Placement("l3mram"))
+            .with_rule("layers/attn/wq", Placement("l2mram")))
+    # short suffix rules match any store prefix (stacked or per-layer)
+    assert plan.scenario_for("mlp/w_down") == "l3mram"
+    assert plan.scenario_for("layers/mlp/w_down") == "l3mram"
+    assert plan.scenario_for("layer07/mlp/w_down") == "l3mram"
+    # exact store-path rules (plan_for_budget output) match exactly: the
+    # model call sites pass the same canonical "layers/..." path, and a
+    # per-layer store path never collides with a stacked-store rule
+    assert plan.scenario_for("layers/attn/wq") == "l2mram"
+    assert plan.scenario_for("layer00/attn/wq") == "l1mram"
+    # everything else falls back to the default
+    assert plan.scenario_for("layers/attn/wk") == "l1mram"
+    assert plan.scenario_for(None) == "l1mram"
+    assert plan.scenarios_used() == ("l3mram", "l2mram", "l1mram")
+
+
+def test_legacy_engine_interop():
+    legacy = dict(scenario="l2mram", mode="xla", bits=4)
+    plan = as_plan(legacy)
+    assert plan.default == Placement("l2mram", 4, "resident")
+    assert linear_dispatch(legacy, "anything") == ("l2mram", "xla", 4)
+    assert linear_dispatch(plan, "anything") == ("l2mram", "xla", 4)
+    assert linear_dispatch(None, None) == ("l1mram", "xla", 8)
+    # plans are hashable (closed over inside jit) and idempotent
+    assert as_plan(plan) is plan
+    hash(MIXED)
+
+
+# ---------------------------------------------------------------------------
+# executable path: mixed plans through the real model
+# ---------------------------------------------------------------------------
+
+def test_uniform_plan_matches_legacy_dict(rng):
+    params = tfm.init_params(CFG, jax.random.PRNGKey(0))
+    packed = freeze_for_serving(params, bits=8)
+    tokens = jnp.asarray(rng.integers(0, 256, (1, 8)), jnp.int32)
+    legacy = tfm.forward(packed, tokens, CFG,
+                         engine=dict(scenario="l1mram", mode="xla", bits=8))
+    plan = tfm.forward(packed, tokens, CFG, engine=PlacementPlan.uniform())
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(plan))
+
+
+def test_mixed_plan_bit_exact_vs_uniform(rng):
+    """All scenarios share the same math (tested in test_paging_store);
+    a mixed plan must therefore be bit-exact against uniform l1mram."""
+    params = tfm.init_params(CFG, jax.random.PRNGKey(0))
+    packed = freeze_for_serving(params, bits=8)
+    tokens = jnp.asarray(rng.integers(0, 256, (2, 10)), jnp.int32)
+    uniform = tfm.forward(packed, tokens, CFG, engine=PlacementPlan.uniform())
+    mixed = tfm.forward(packed, tokens, CFG, engine=MIXED)
+    np.testing.assert_array_equal(np.asarray(uniform), np.asarray(mixed))
+
+
+def test_all_placements_equivalent_through_model(rng):
+    """Per-scenario uniform plans all agree on one model (numerical
+    equivalence of the four weight paths at model scale)."""
+    params = tfm.init_params(CFG, jax.random.PRNGKey(0))
+    packed = freeze_for_serving(params, bits=8)
+    tokens = jnp.asarray(rng.integers(0, 256, (1, 8)), jnp.int32)
+    outs = {sc: np.asarray(tfm.forward(packed, tokens, CFG,
+                                       engine=PlacementPlan.uniform(sc)))
+            for sc in SCENARIOS}
+    for sc in SCENARIOS:
+        np.testing.assert_allclose(outs[sc], outs["l1mram"], rtol=2e-4,
+                                   atol=2e-4)
+
+
+def test_serving_engine_mixed_plan_matches_uniform(rng):
+    """A mixed plan (hot attn resident/l1mram, cold mlp paged/l3flash)
+    serves end-to-end through ServingEngine with the same tokens as the
+    uniform l1mram plan."""
+    params = tfm.init_params(CFG, jax.random.PRNGKey(0))
+    packed = freeze_for_serving(params, bits=8)
+    prompts = [rng.integers(0, 256, 4 + i).astype(np.int32) for i in range(4)]
+
+    def serve(plan):
+        eng = ServingEngine(CFG, packed, batch_slots=2, max_len=64, plan=plan)
+        for uid, prompt in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=6))
+        return {r.uid: r.generated for r in eng.run_until_done()}
+
+    uniform = serve(PlacementPlan.uniform())
+    mixed = serve(MIXED)
+    assert uniform == mixed
+    # legacy engine dict still supported and agrees
+    eng = ServingEngine(CFG, packed, batch_slots=2, max_len=64,
+                        engine=dict(scenario="l1mram", mode="xla", bits=8))
+    for uid, prompt in enumerate(prompts):
+        eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=6))
+    legacy = {r.uid: r.generated for r in eng.run_until_done()}
+    assert legacy == uniform
+
+
+def test_per_param_bits_from_plan(rng):
+    """freeze_for_serving(plan=...) packs each parameter at the plan's
+    bits, and the dispatch reads them back consistently: the plan-frozen
+    store behaves bit-identically to a hand-spliced mixed-precision one."""
+    plan = (PlacementPlan(default=Placement("l1mram", 8))
+            .with_rule("mlp/*", Placement("l1mram", 4)))
+    params = tfm.init_params(CFG, jax.random.PRNGKey(0))
+    packed = freeze_for_serving(params, bits=8, plan=plan)
+    w8 = params["layers"]["attn"]["wq"]
+    w4 = params["layers"]["mlp"]["w_down"]
+    p8 = packed["layers"]["attn"]["wq"]["packed"]
+    p4 = packed["layers"]["mlp"]["w_down"]["packed"]
+    assert p8.shape[-1] == w8.shape[-1]          # 8-bit: 1 byte/weight
+    assert p4.shape[-1] == w4.shape[-1] // 2     # 4-bit: 2 weights/byte
+    # splice a reference store by hand: mlp subtree from a uniform 4-bit
+    # freeze, everything else uniform 8-bit — must match the plan freeze
+    spliced = freeze_for_serving(params, bits=8)
+    spliced["layers"]["mlp"] = freeze_for_serving(
+        params, bits=4)["layers"]["mlp"]
+    tokens = jnp.asarray(rng.integers(0, 256, (1, 8)), jnp.int32)
+    out = tfm.forward(packed, tokens, CFG, engine=plan)
+    ref = tfm.forward(spliced, tokens, CFG, engine=plan)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_engineconfig_plan_and_plan_apply(rng):
+    """The typed EngineConfig front-end and scenarios.plan_apply resolve
+    the same per-path placement as the layers.linear dispatch."""
+    from repro.core import engine as core_engine
+    from repro.core.scenarios import plan_apply
+
+    x = jnp.asarray(rng.normal(size=(3, 32)), jnp.float32)
+    p = pack_param(jnp.asarray(rng.normal(size=(16, 32)), jnp.float32), 8)
+    plan = (PlacementPlan.uniform("l1mram")
+            .with_rule("cold/*", Placement("l3mram")))
+    cfg = core_engine.EngineConfig.from_plan(plan)
+    assert cfg.plan is plan and cfg.mode == "xla"
+    assert cfg.scenario_for("cold/w") == "l3mram"
+    assert cfg.scenario_for("hot/w") == "l1mram"
+    assert cfg.scenario_for(None) == "l1mram"
+    ref = np.asarray(scenarios.linear_apply(x, p, scenario="l1mram"))
+    for out in (core_engine.linear(x, p, cfg, path="hot/w"),
+                core_engine.linear(x, p, cfg, path="cold/w"),
+                plan_apply(x, p, plan, "cold/w")):
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_serve_specs_match_frozen_layout_under_plan():
+    """serve_spec_like(plan=...) mirrors freeze_for_serving(plan=...) so
+    dry-run specs and real packed arrays stay layout-consistent under
+    mixed-precision plans."""
+    from repro.launch.steps import serve_param_specs
+
+    plan = (PlacementPlan(default=Placement("l1mram", 8))
+            .with_rule("mlp/*", Placement("l1mram", 4)))
+    params = tfm.init_params(CFG, jax.random.PRNGKey(0))
+    packed = freeze_for_serving(params, bits=8, plan=plan)
+    specs = serve_param_specs(CFG, plan=plan)
+    real = {placement.path_key(p): l for p, l
+            in jax.tree_util.tree_flatten_with_path(packed)[0]}
+    spec = {placement.path_key(p): l for p, l
+            in jax.tree_util.tree_flatten_with_path(specs)[0]}
+    assert real.keys() == spec.keys()
+    for k in real:
+        assert tuple(real[k].shape) == tuple(spec[k].shape), k
+    # packed_sizes reads exactly the dispatchable packed leaves
+    sizes = placement.packed_sizes(packed)
+    assert all(k.endswith(tuple(
+        ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"))) for k in sizes)
+    assert sizes["layers/mlp/w_down"] == real["layers/mlp/w_down/packed"].size
+
+
+def test_encdec_mixed_plan_matches_uniform(rng):
+    """The enc-dec zoo threads placement paths too: a plan that cools the
+    cross-attention weights is bit-exact vs the uniform plan."""
+    from repro.configs import get_config
+    from repro.models import encdec
+
+    cfg = get_config("whisper-tiny").smoke()
+    params = encdec.init_params(cfg, jax.random.PRNGKey(0))
+    packed = freeze_for_serving(params, bits=8)
+    frames = jnp.asarray(rng.normal(size=(1, cfg.n_audio_frames,
+                                          cfg.d_model)), jnp.float32)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 6)), jnp.int32)
+    mixed = (PlacementPlan.uniform("l1mram")
+             .with_rule("dec_layers/xattn/*", Placement("l3mram", 8,
+                                                        "paged")))
+    outs = {}
+    for name, plan in (("uniform", PlacementPlan.uniform()),
+                       ("mixed", mixed)):
+        enc_out = encdec.encode(packed, frames, cfg, engine=plan)
+        outs[name] = np.asarray(encdec.decode(packed, tokens, enc_out, cfg,
+                                              engine=plan))
+    np.testing.assert_array_equal(outs["uniform"], outs["mixed"])
+
+
+def test_freeze_policy_takes_bits_from_plan(rng):
+    plan = (PlacementPlan(default=Placement("l1mram", 8))
+            .with_rule("layer00/*", Placement("l3flash", 4, "paged")))
+    params = {f"layer{i:02d}": dict(w=jnp.asarray(rng.normal(size=(32, 32)),
+                                                  jnp.float32))
+              for i in range(2)}
+    store = freeze(params, placement.freeze_policy(plan, min_size=16))
+    assert store.params["layer00/w"].bits == 4
+    assert store.params["layer01/w"].bits == 8
+    assert (store.params["layer00/w"].nbytes_packed * 2
+            == store.params["layer01/w"].nbytes_packed)
+
+
+# ---------------------------------------------------------------------------
+# budget solver + paging split
+# ---------------------------------------------------------------------------
+
+def _store(rng, n=8, d=32):
+    params = {f"layer{i:02d}": dict(w=jnp.asarray(rng.normal(size=(d, d)),
+                                                  jnp.float32))
+              for i in range(n)}
+    return freeze(params, uniform_policy(8, min_size=16))
+
+
+def test_plan_for_budget_respects_budget(rng):
+    store = _store(rng)                          # 8 equal 1 KiB params
+    per = 32 * 32
+    for k in range(9):
+        plan = plan_for_budget(store, budget_bytes=k * per)
+        assert plan.resident_bytes(store) <= k * per
+        assert len(plan.rules) == k
+        assert plan.fits(store, k * per)
+        assert (plan.resident_bytes(store) + plan.paged_bytes(store)
+                == store.packed_bytes)
+    # zero budget: everything paged, default is the cold scenario
+    plan0 = plan_for_budget(store, budget_bytes=0)
+    assert plan0.default.paged and plan0.default.scenario == "l3flash"
+
+
+def test_plan_for_budget_pins_highest_traffic(rng):
+    sizes = {"big": 1000, "mid": 500, "small": 100}
+    plan = plan_for_budget(sizes, budget_bytes=1100)
+    resident, paged = plan.split_names(list(sizes))
+    assert resident == ["big", "small"]          # big first, mid won't fit
+    assert paged == ["mid"]
+    # `uses` weighting flips the order: small is read 20x per inference
+    plan = plan_for_budget(sizes, budget_bytes=600,
+                           uses={"small": 20.0})
+    resident, _ = plan.split_names(list(sizes))
+    assert resident == ["mid", "small"]          # scores: 2000, 1000, 500
+
+
+def test_build_pages_and_store_honour_plan(rng):
+    store = _store(rng, n=6)
+    per = 32 * 32
+    plan = plan_for_budget(store, budget_bytes=2 * per)
+    pages = build_pages(store, page_bytes=2 * per, plan=plan)
+    paged_names = [n for p in pages for n in p.param_names]
+    resident, paged = plan.split_names(list(store.params.keys()))
+    assert paged_names == paged and len(resident) == 2
+
+    hps = HostPagedStore(store, page_bytes=2 * per, plan=plan)
+    assert sorted(hps.resident) == sorted(resident)
+    streamed = dict(hps.resident)
+    for page, dev_params in hps.stream():
+        streamed.update(dev_params)
+    assert sorted(streamed) == sorted(store.params)
+    for name, p in store.params.items():
+        np.testing.assert_array_equal(np.asarray(streamed[name].packed),
+                                      np.asarray(p.packed))
+    hps.close()
+
+
+def test_weight_path_bytes_is_static_int():
+    p = pack_param(jnp.ones((16, 32), jnp.float32), 8)
+    for sc in SCENARIOS:
+        b = scenarios.weight_path_bytes(p, sc)
+        assert type(b) is int                    # no device round-trip
+
+
+# ---------------------------------------------------------------------------
+# analytical model: per-layer scenario walks
+# ---------------------------------------------------------------------------
+
+def test_uniform_plan_walk_matches_uniform_scenario():
+    jobs = mobilenet_v2_jobs()
+    for sc in SCENARIOS:
+        t_str, e_str, _ = network_walk(jobs, sc)
+        t_pln, e_pln, _ = network_walk(jobs, PlacementPlan.uniform(sc))
+        assert t_pln == pytest.approx(t_str)
+        assert e_pln == pytest.approx(e_str)
+
+
+def test_per_layer_sequence_walk():
+    jobs = mobilenet_v2_jobs()
+    seq = ["l1mram"] * len(jobs)
+    t_seq, e_seq, _ = network_walk(jobs, seq)
+    t_uni, e_uni, _ = network_walk(jobs, "l1mram")
+    assert t_seq == pytest.approx(t_uni) and e_seq == pytest.approx(e_uni)
+    with pytest.raises(ValueError):
+        network_walk(jobs, ["l1mram"] * (len(jobs) - 1))
+
+
+def test_mixed_plan_walk_between_extremes():
+    """The 2 MiB-budget mixed plan lands strictly between uniform l3flash
+    and uniform l1mram on both latency and energy (Fig 10 interpolation)."""
+    tab = mnv2_scenario_table()
+    plan = mnv2_budget_plan(2 * 1024 * 1024)
+    assert 0 < len(plan.rules) < len(mobilenet_v2_jobs())
+    tm, em, _ = mnv2_plan_walk(plan)
+    assert tab["l1mram"][0] < tm < tab["l3flash"][0]
+    assert tab["l1mram"][1] < em < tab["l3flash"][1]

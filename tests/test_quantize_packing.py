@@ -4,6 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# optional test dependency (the [test] extra in pyproject.toml): skip the
+# property-test module instead of erroring the whole collection
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import packing, quantize
