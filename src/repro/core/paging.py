@@ -24,7 +24,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tupl
 import jax
 import numpy as np
 
-from repro.core.placement import PlacementPlan
+from repro.core.placement import PlacementPlan, path_key
 from repro.core.weight_store import WeightStore, PackedParam, SIRACUSA_MRAM_BYTES
 
 
@@ -179,26 +179,169 @@ class HostPagedStore:
         self.swap_count += 1
         return out
 
-    def stream(self, resident_slots: int = 2) -> Iterable[Tuple[Page, Dict[str, PackedParam]]]:
-        """Yield (page, device params) in order with proactive prefetch."""
-        sched = make_schedule(len(self.pages), resident_slots)
-        inflight: Dict[int, Future] = {}
-        for e in sched:
-            if e.page in self._live:
-                page_params = self._live[e.page]
-            elif e.page in inflight:
-                page_params = inflight.pop(e.page).result()
-                self._live[e.page] = page_params
-            else:
-                self.miss_count += 1          # demand miss (cold start)
-                page_params = self._fetch_page(e.page)
-                self._live[e.page] = page_params
-            if e.prefetch_next is not None and e.prefetch_next not in self._live:
-                inflight[e.prefetch_next] = self._pool.submit(
-                    self._fetch_page, e.prefetch_next)
-            if e.evicts is not None:
-                self._live.pop(e.evicts, None)
-            yield self.pages[e.page], page_params
+    def stream(self, resident_slots: int = 2) -> "PageStream":
+        """(page, device params) in access order with proactive prefetch.
+
+        Returns a :class:`PageStream` — iterate it directly, or use it as a
+        context manager so breaking out mid-pass cancels/drains in-flight
+        swaps instead of leaking them past interpreter teardown.  Each pass
+        reclaims the live page slots on completion (the next inference
+        starts from a cold page cache — what the 2-slot budget dictates for
+        any network with more than ``resident_slots`` pages), so per-pass
+        counters follow the static :func:`pass_counters` prediction.
+        """
+        return PageStream(self, resident_slots)
+
+    def close(self, wait: bool = True):
+        """Shut the prefetch worker down.  ``wait=True`` (default) blocks
+        until in-flight swaps finish — never leak a ``_fetch_page`` past
+        interpreter teardown; ``wait=False`` cancels what it can instead."""
+        self._pool.shutdown(wait=wait, cancel_futures=not wait)
+
+    def __enter__(self) -> "HostPagedStore":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+class PageStream:
+    """One streaming pass over a :class:`HostPagedStore` — an iterable of
+    ``(Page, {name: PackedParam})`` that is also a context manager.
+
+    Closing (explicitly, via ``with``, or by exhausting the iterator)
+    cancels or drains in-flight prefetches and reclaims the live page
+    slots, so a consumer that stops early cannot leak a worker-thread
+    fetch past teardown."""
+
+    def __init__(self, store: HostPagedStore, resident_slots: int = 2):
+        self._store = store
+        self._sched = make_schedule(len(store.pages), resident_slots)
+        self._inflight: Dict[int, Future] = {}
+        self._gen = self._iterate()
+
+    def __iter__(self):
+        return self._gen
+
+    def __enter__(self) -> "PageStream":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     def close(self):
-        self._pool.shutdown(wait=False)
+        for fut in self._inflight.values():
+            if not fut.cancel():
+                fut.result()        # already running: drain, don't leak
+        self._inflight.clear()
+        self._store._live.clear()   # slots reclaimed between passes
+        self._gen.close()
+
+    def _iterate(self):
+        st = self._store
+        try:
+            for e in self._sched:
+                if e.page in st._live:
+                    page_params = st._live[e.page]
+                elif e.page in self._inflight:
+                    page_params = self._inflight.pop(e.page).result()
+                    st._live[e.page] = page_params
+                else:
+                    st.miss_count += 1    # demand miss (cold start)
+                    page_params = st._fetch_page(e.page)
+                    st._live[e.page] = page_params
+                if (e.prefetch_next is not None
+                        and e.prefetch_next not in st._live):
+                    self._inflight[e.prefetch_next] = st._pool.submit(
+                        st._fetch_page, e.prefetch_next)
+                if e.evicts is not None:
+                    st._live.pop(e.evicts, None)
+                yield st.pages[e.page], page_params
+        finally:
+            for fut in self._inflight.values():
+                if not fut.cancel():
+                    fut.result()
+            self._inflight.clear()
+            st._live.clear()
+
+
+def pass_counters(n_pages: int, resident_slots: int = 2) -> Dict[str, int]:
+    """Static swap/miss counts for ONE full streaming pass starting from a
+    cold page cache — the closed-form prediction the runtime counters of
+    :class:`HostPagedStore` must match pass for pass (every page is fetched
+    exactly once; only the first is a demand miss, the rest ride the
+    proactive prefetch)."""
+    live: set = set()
+    inflight: set = set()
+    swaps = misses = 0
+    for e in make_schedule(n_pages, resident_slots):
+        if e.page in live:
+            pass
+        elif e.page in inflight:
+            inflight.discard(e.page)
+            live.add(e.page)
+        else:
+            misses += 1
+            swaps += 1
+            live.add(e.page)
+        if e.prefetch_next is not None and e.prefetch_next not in live:
+            inflight.add(e.prefetch_next)
+            swaps += 1
+        if e.evicts is not None:
+            live.discard(e.evicts)
+    return dict(swaps=swaps, misses=misses)
+
+
+def thread_packed(tree: Any, params: "Dict[str, PackedParam]") -> Any:
+    """Return ``tree`` with each packed leaf group named in ``params``
+    replaced by that PackedParam's packed/scale arrays — the inverse of
+    :func:`packed_tree_store` for a subset of groups.  The serving runtime
+    uses this to thread freshly streamed device pages (and the pinned
+    resident set) into the tree its jitted step consumes; shapes and
+    dtypes are unchanged, so the jit cache is stable across ticks."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = path_key(path)
+        if key.endswith("/packed") and key[:-len("/packed")] in params:
+            out.append(params[key[:-len("/packed")]].packed)
+        elif key.endswith("/scale") and key[:-len("/scale")] in params:
+            out.append(params[key[:-len("/scale")]].scale)
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def packed_tree_store(tree: Any, plan: Optional[PlacementPlan] = None
+                      ) -> WeightStore:
+    """:class:`WeightStore` view over a ``freeze_for_serving`` packed tree.
+
+    Every packable leaf group (a ``{"packed", "scale"}`` dict at path P)
+    becomes one :class:`PackedParam` entry keyed by P — for the stacked LM
+    tree that is one entry per parameter *group* across all depths, the
+    exact granularity of ``placement.packed_sizes``/``plan_for_budget``.
+    Non-packed leaves (embeddings, norms) are exposed as passthrough.
+    This is the bridge the serving runtime uses to put a serve tree behind
+    a :class:`HostPagedStore`."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    leaves = {path_key(p): leaf for p, leaf in flat}
+    params: Dict[str, PackedParam] = {}
+    passthrough: Dict[str, Any] = {}
+    for key, leaf in leaves.items():
+        if key.endswith("/packed"):
+            base = key[:-len("/packed")]
+            bits = plan.bits_for(base) if plan is not None else 8
+            factor = 8 // bits
+            orig_shape = (tuple(leaf.shape[:-1])
+                          + (int(leaf.shape[-1]) * factor,))
+            params[base] = PackedParam(packed=leaf,
+                                       scale=leaves[base + "/scale"],
+                                       bits=bits, orig_shape=orig_shape)
+        elif (key.endswith("/scale")
+                and key[:-len("/scale")] + "/packed" in leaves):
+            continue
+        else:
+            passthrough[key] = leaf
+    return WeightStore(params=params, passthrough=passthrough)

@@ -1,28 +1,59 @@
-"""Serving launcher: batched requests over the packed At-MRAM store.
+"""Serving launcher: deadline-aware scheduling over the packed At-MRAM store.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-        --requests 8 --bits 4 --budget-mb 2
+        --requests 8 --bits 4 --budget-mb 2 --deadline-ms 20
 
 Freezes trained/random params into the packed WeightStore (the "MRAM
-programming" step) and runs the continuous-batching engine under a
-PlacementPlan: ``--scenario`` gives the legacy uniform placement,
+programming" step) and serves through the deadline-aware Scheduler
+(repro.serving.sched): ``--scenario`` gives the legacy uniform placement,
 ``--budget-mb`` runs the greedy hot-set solver instead (hot params pinned
-l1mram-resident, the rest paged l3flash — §II-B2 against the budget).
+l1mram-resident, the rest paged l3flash — §II-B2 against the budget) and
+attaches the live HostPagedStore so the cold pages stream host->device
+between ticks, swap/miss counters included.
+
+When the plan pages, the run is verified bit-exact against the fully
+resident uniform plan (disable with ``--no-verify``).  Metrics are
+emitted as the ``repro.serving.metrics/v1`` JSON (stdout, and
+``--metrics-json PATH`` to persist).
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import sys
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.placement import PlacementPlan, packed_sizes, plan_for_budget
+from repro.core.placement import (Placement, PlacementPlan, packed_sizes,
+                                  plan_for_budget)
 from repro.models import transformer as tfm
 from repro.parallel.sharding import freeze_for_serving
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, Scheduler, ServingEngine
+
+
+def _requests(cfg, n, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=uid,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        8 + uid % 5).astype(np.int32),
+                    max_new_tokens=max_new)
+            for uid in range(n)]
+
+
+def _serve(cfg, packed, plan, args, paged: bool):
+    eng = ServingEngine(cfg, packed, batch_slots=args.slots,
+                        max_len=args.max_len, plan=plan, seed=args.seed)
+    if paged:
+        eng.attach_paging()
+    sched = Scheduler(eng, prefill_chunk=args.prefill_chunk)
+    sched.add_stream("xr", priority=1, deadline_ms=args.deadline_ms)
+    sched.add_stream("background")
+    for req in _requests(cfg, args.requests, args.max_new, seed=args.seed):
+        sched.submit(req, stream="xr" if req.uid % 2 == 0 else "background")
+    done = sched.run_until_done()
+    return done, sched, eng
 
 
 def main(argv=None):
@@ -38,13 +69,31 @@ def main(argv=None):
                     choices=("l1mram", "l2mram", "l3mram", "l3flash"))
     ap.add_argument("--budget-mb", type=float, default=None,
                     help="resident MRAM budget in MiB; enables the greedy "
-                         "hot-set plan (mixed placement) instead of the "
-                         "uniform --scenario")
+                         "hot-set plan (mixed placement) and live paged-"
+                         "weight streaming instead of the uniform "
+                         "--scenario")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline for the 'xr' stream (EDF "
+                         "admission; misses are reported, not dropped)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="max prompt tokens absorbed per tick per slot")
+    ap.add_argument("--metrics-json", default=None,
+                    help="also write the metrics JSON to this path")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the bit-exact check of the paged run "
+                         "against the fully resident plan")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+        if args.budget_mb is not None:
+            # the default smoke net packs < 0.1 MiB — nothing would page.
+            # Scale it so a MiB-order budget genuinely splits the store and
+            # the §II-B2 streaming path is exercised.
+            cfg = cfg.replace(n_layers=6, d_model=256, n_heads=4,
+                              n_kv_heads=2, head_dim=64, d_ff=1024)
     if cfg.family == "encdec":
         raise SystemExit("serve launcher covers decoder-only archs; "
                          "see examples/xr_pipeline.py for enc-dec")
@@ -54,32 +103,55 @@ def main(argv=None):
     if args.budget_mb is not None:
         # greedy hot-set plan over exactly the packed leaves the serving
         # dispatch reads (PACKABLE matmul weights; embed/norms never page)
-        from repro.core.placement import Placement
         sizes = packed_sizes(packed)
         plan = plan_for_budget(
             sizes, int(args.budget_mb * 1024 * 1024),
             hot=Placement("l1mram", args.bits, "resident"),
             cold=Placement("l3flash", args.bits, "paged"))
         print(plan.summary(sizes))
+        paged = plan.paged_bytes(sizes) > 0
     else:
         plan = PlacementPlan.uniform(args.scenario, bits=args.bits)
+        paged = False
 
-    eng = ServingEngine(cfg, packed, batch_slots=args.slots,
-                        max_len=args.max_len, plan=plan)
-    rng = np.random.default_rng(0)
-    t0 = time.time()
-    for uid in range(args.requests):
-        eng.submit(Request(uid=uid,
-                           prompt=rng.integers(0, cfg.vocab_size,
-                                               8 + uid % 5).astype(np.int32),
-                           max_new_tokens=args.max_new))
-    done = eng.run_until_done()
-    dt = time.time() - t0
+    done, sched, eng = _serve(cfg, packed, plan, args, paged)
     total_tokens = sum(len(r.generated) for r in done)
     place = ("mixed:" + "+".join(plan.scenarios_used())
              if not plan.is_uniform else plan.default.scenario)
-    print(f"served {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens / dt:.1f} tok/s) [W{args.bits}, {place}]")
+    summary = sched.metrics.summary(paging=eng.paging_summary())
+    thr = summary["throughput"]
+    print(f"served {len(done)} requests, {total_tokens} tokens in "
+          f"{thr['wall_s']:.2f}s ({thr['tok_per_s']:.1f} tok/s) "
+          f"[W{args.bits}, {place}] over {sched.ticks} ticks")
+    if paged:
+        print(f"live paging: {len(eng.pager.pages)} pages, "
+              f"{eng.swap_count} swaps, {eng.miss_count} demand misses, "
+              f"{eng.paging_stall_s * 1e3:.1f} ms stalled")
+    if args.deadline_ms is not None:
+        dl = summary["deadlines"]
+        print(f"deadlines: {dl['missed']}/{dl['with_deadline']} missed "
+              f"({dl['miss_rate'] * 100:.0f}% at {args.deadline_ms} ms)")
+
+    ok = True
+    if paged and not args.no_verify:
+        ref, _sched2, _eng2 = _serve(
+            cfg, packed,
+            PlacementPlan.uniform("l1mram", bits=args.bits), args,
+            paged=False)
+        got = {r.uid: r.generated for r in done}
+        want = {r.uid: r.generated for r in ref}
+        ok = got == want
+        print("verify: paged tokens "
+              + ("BIT-EXACT vs resident plan" if ok
+                 else "MISMATCH vs resident plan"))
+
+    print(sched.metrics.to_json(paging=eng.paging_summary()))
+    if args.metrics_json:
+        sched.metrics.write(args.metrics_json,
+                            paging=eng.paging_summary())
+        print(f"metrics written to {args.metrics_json}")
+    if not ok:
+        sys.exit(1)
     return done
 
 

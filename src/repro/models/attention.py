@@ -30,13 +30,15 @@ def _fold_gqa(q: jax.Array, n_kv: int) -> jax.Array:
 
 def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       causal: bool = True, window: Optional[int] = None,
-                      q_offset: int = 0, block: int = 1024,
+                      q_offset=0, block: int = 1024,
                       scale: Optional[float] = None,
                       compute_dtype=jnp.float32) -> jax.Array:
     """Blocked online-softmax GQA attention.
 
     q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); Hq % Hkv == 0.
-    q_offset: absolute position of q[0] within the kv sequence.
+    q_offset: absolute position of q[0] within the kv sequence — a python
+    int, a traced scalar, or a (B,) vector for continuous-batching prefill
+    chunks that start at a different cache offset per batch row.
     """
     b, hq, sq, d = q.shape
     hkv, sk = k.shape[1], k.shape[2]
@@ -53,12 +55,17 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kb = jnp.moveaxis(k.reshape(b, hkv, nblk, block, d), 2, 0)
     vb = jnp.moveaxis(v.reshape(b, hkv, nblk, block, d), 2, 0)
 
-    qpos = (q_offset + jnp.arange(sq))[:, None]            # (Sq, 1)
+    q_off = jnp.asarray(q_offset)
+    if q_off.ndim == 1:                                    # (B,) per-batch
+        qpos = (q_off[:, None] + jnp.arange(sq))[..., None]   # (B, Sq, 1)
+    else:
+        qpos = (q_off + jnp.arange(sq))[:, None]           # (Sq, 1)
 
     def step(carry, xs):
         m, l, acc = carry
         idx, kblk, vblk = xs
-        kpos = (idx * block + jnp.arange(block))[None, :]  # (1, block)
+        kpos = idx * block + jnp.arange(block)             # (block,)
+        kpos = kpos[None, None] if qpos.ndim == 3 else kpos[None]
         s_blk = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
                            kblk.astype(compute_dtype),
                            preferred_element_type=jnp.float32)
@@ -67,7 +74,9 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             mask = mask & (kpos <= qpos)
         if window is not None:
             mask = mask & (kpos > qpos - window)
-        s_blk = jnp.where(mask[None, None, None], s_blk, NEG_INF)
+        mask = (mask[:, None, None] if mask.ndim == 3     # (B,1,1,Sq,block)
+                else mask[None, None, None])
+        s_blk = jnp.where(mask, s_blk, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s_blk, axis=-1))
         p = jnp.exp(s_blk - m_new[..., None])
         alpha = jnp.exp(m - m_new)

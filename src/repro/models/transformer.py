@@ -196,9 +196,14 @@ def _attn_apply(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig, *,
                 cache_len=insert_at + 1,
                 window=window if window is not None else None,
                 compute_dtype=adt)
-        else:        # prefill into cache
-            o = attn_lib.chunked_attention(q, k, v, causal=True,
-                                           window=window, q_offset=0,
+        else:        # prefill into cache, possibly mid-sequence (chunked
+            # prefill): attend over the updated cache at the chunk's offset
+            # so earlier chunks' keys are visible; positions beyond the
+            # chunk are causally masked, so unwritten cache rows are inert.
+            o = attn_lib.chunked_attention(q, cache["k"],
+                                           cache["v"], causal=True,
+                                           window=window,
+                                           q_offset=insert_at,
                                            block=cfg.attn_block,
                                            compute_dtype=adt)
     elif static_window is not None:
@@ -397,21 +402,27 @@ def init_serve_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, An
 def step(params: Dict[str, Any], tokens: jax.Array, cache: Dict[str, Any],
          pos: jax.Array, cfg: ModelConfig, *,
          engine: Optional[Dict] = None,
-         extra_embeds: Optional[jax.Array] = None
+         extra_embeds: Optional[jax.Array] = None,
+         add_prefix: bool = True
          ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Serve step: run ``tokens`` (B, S) through the model, reading/writing
-    the stacked cache at position ``pos``.  S == 1 is decode; S > 1 prefill.
+    the stacked cache at position ``pos`` (scalar, or (B,) per-batch for
+    continuous batching).  S == 1 is decode; S > 1 prefill.
 
     On prefill, ``extra_embeds`` (VLM patches) and hymba meta tokens are
     prepended exactly as in :func:`forward`; the returned logits cover only
     the last S (token) positions.  ``pos`` must account for the prefix when
     decoding (first decode pos = prefix_len + prompt_len).
+
+    ``add_prefix=False`` suppresses the prefix build — required for
+    prefill chunks after the first, which continue mid-sequence (the
+    chunked-prefill path of the serving scheduler).
     """
     s_tokens = tokens.shape[1]
     x = L.embed(tokens, params["embed"]).astype(_dtype(cfg))
     if cfg.name.startswith("gemma"):
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
-    if s_tokens > 1:   # prefill: build the prefix exactly like forward()
+    if s_tokens > 1 and add_prefix:   # prefill: prefix exactly as forward()
         prefix = []
         if extra_embeds is not None:
             prefix.append(extra_embeds.astype(x.dtype))

@@ -1,3 +1,7 @@
-from repro.serving.engine import ServingEngine, Request, sample_token
+from repro.serving.engine import (Request, ServingEngine, sample_token,
+                                  sample_token_batch)
+from repro.serving.metrics import MetricsRecorder, RequestRecord
+from repro.serving.sched import Scheduler, StreamSpec
 
-__all__ = ["ServingEngine", "Request", "sample_token"]
+__all__ = ["ServingEngine", "Request", "sample_token", "sample_token_batch",
+           "Scheduler", "StreamSpec", "MetricsRecorder", "RequestRecord"]

@@ -8,19 +8,35 @@ virtual paging, proactive swaps included.
 
 The engine is a continuous-batching loop:
   * requests join a waiting queue and are admitted into free batch slots;
-  * one jitted ``step`` serves the whole batch each tick (prefill for
-    fresh slots via right-aligned prompts, decode for the rest);
-  * finished sequences free their slot immediately (no drain barrier).
+  * prompts prefill in power-of-two **buckets** (left-aligned, padded on
+    the right so the causal mask keeps the pads invisible to real tokens)
+    — the jit cache stays <= log2(max_len) programs instead of one per
+    exact prompt length — and all fresh slots of a tick prefill in ONE
+    batched call (gather slots -> batch-k step -> scatter rows back);
+  * one jitted ``step`` serves the whole batch each tick (decode for the
+    active slots, per-slot sampling at each request's own temperature);
+  * finished sequences free their slot immediately (no drain barrier);
+  * with :meth:`attach_paging`, the plan's cold parameters live on the
+    host and stream device-ward between ticks through the double-buffered
+    ``HostPagedStore`` page cache, so a mixed ``plan_for_budget`` plan is
+    exercised end-to-end at serve time (swap/miss/stall counters kept).
 
-For simplicity prompts are prefilled per-request (prefill_step) into the
-slot's cache region; decode runs batched across all active slots.
+The engine owns *mechanism* only.  Policy — deadlines, priorities,
+chunked prefill pacing, metrics — lives in
+:class:`repro.serving.sched.Scheduler`, which drives the same tick
+primitives (``tick_params`` / ``prefill_tick`` / ``decode_tick``).
+
+Bucketed prefill is enabled for the attention families ("dense", "vlm").
+SSM state and MoE capacity routing are position-history-dependent, so pad
+tokens would perturb real activations there; those families keep the
+exact-length single-shot prefill.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, List, Optional
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,14 +60,48 @@ def sample_token(logits: jax.Array, key: jax.Array, temperature: float = 1.0,
     return jax.random.categorical(key, logits, axis=-1)
 
 
+def sample_token_batch(logits: jax.Array, key: jax.Array,
+                       temperatures: jax.Array) -> jax.Array:
+    """Per-row sampling: logits (B, V) with temperatures (B,).
+
+    Row b is greedy when ``temperatures[b] <= 0`` and otherwise sampled at
+    its OWN temperature.  (The old engine computed one greedy and one
+    temperature-1.0 draw for the whole batch, silently serving every
+    stochastic request at temperature 1.0.)"""
+    temps = jnp.asarray(temperatures, jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1)
+    safe = jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, logits / safe, axis=-1)
+    return jnp.where(temps <= 0.0, greedy, sampled)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (int(n).bit_length() - 1)
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0
+    # deadline-aware scheduling (serving.sched): latency bound in ms from
+    # arrival to the last generated token; None = best effort.  priority
+    # None defers to the stream's default.
+    deadline_ms: Optional[float] = None
+    priority: Optional[int] = None
+    stream: str = "default"
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # runtime bookkeeping (stamped by the engine / scheduler)
+    prefill_pos: int = 0               # prompt tokens already prefilled
+    arrival_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None
 
 
 class ServingEngine:
@@ -64,7 +114,8 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params: Any, *, batch_slots: int = 4,
                  max_len: int = 512, engine: Optional[Dict] = None,
-                 plan: Optional[PlacementPlan] = None, seed: int = 0):
+                 plan: Optional[PlacementPlan] = None, seed: int = 0,
+                 prefill_chunk: int = 64):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
@@ -76,6 +127,11 @@ class ServingEngine:
         # kept for backward compatibility with callers poking .engine
         self.engine = self.plan
         self.key = jax.random.PRNGKey(seed)
+        # pad-safe bucketing needs a causal mask to hide the pads; SSM
+        # state and MoE capacity routing see every token, so those
+        # families keep exact-length prefill.
+        self._bucketed = cfg.family in ("dense", "vlm")
+        self.prefill_chunk = _next_pow2(prefill_chunk)
 
         self.cache = tfm.init_serve_cache(cfg, batch_slots, max_len)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
@@ -83,8 +139,14 @@ class ServingEngine:
         self.waiting: List[Request] = []
         self.finished: List[Request] = []
 
-        self._decode = jax.jit(functools.partial(self._decode_impl))
-        self._prefill_len_cache: Dict[int, Callable] = {}
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill_cache: Dict[Tuple[int, bool], Callable] = {}
+
+        # §II-B2 live paging (attach_paging)
+        self.pager = None
+        self.page_resident_slots = 2
+        self.paging_stall_s = 0.0
+        self.last_stall_s = 0.0
 
     # -- jitted bodies --------------------------------------------------------
     def _decode_impl(self, params, tokens, cache, pos_vec):
@@ -94,74 +156,314 @@ class ServingEngine:
                                  engine=self.plan)
         return logits, cache
 
-    def _prefill_for_len(self, s: int):
-        if s not in self._prefill_len_cache:
-            def impl(params, tokens, cache, slot):
-                # single-sequence prefill into one slot: run batch-1 then
-                # scatter the new cache rows into the slot index.
+    def _prefill_for_bucket(self, bucket: int, add_prefix: bool) -> Callable:
+        """Batched multi-slot prefill for one (bucket, prefix) shape:
+        gather the k slot cache rows, run a batch-k step at per-slot cache
+        offsets, scatter the rows back.  The batch is always padded to the
+        full slot count, so the jit cache is keyed only by the power-of-two
+        bucket (and, for meta-token models, whether the prefix is built).
+        """
+        key = (int(bucket), bool(add_prefix))
+        if key not in self._prefill_cache:
+            def impl(params, tokens, cache, slot_idx, pos_vec):
                 sub = jax.tree_util.tree_map(
-                    lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, 1),
-                    cache)
-                logits, sub = tfm.step(params, tokens[None], sub,
-                                       jnp.int32(0), self.cfg,
-                                       engine=self.plan)
+                    lambda c: jnp.take(c, slot_idx, axis=1), cache)
+                logits, sub = tfm.step(params, tokens, sub, pos_vec,
+                                       self.cfg, engine=self.plan,
+                                       add_prefix=add_prefix)
                 cache = jax.tree_util.tree_map(
-                    lambda c, s_: jax.lax.dynamic_update_slice_in_dim(
-                        c, s_.astype(c.dtype), slot, 1),
+                    lambda c, s_: c.at[:, slot_idx].set(s_.astype(c.dtype)),
                     cache, sub)
-                return logits[0, -1], cache
-            self._prefill_len_cache[s] = jax.jit(impl)
-        return self._prefill_len_cache[s]
+                return logits, cache
+            self._prefill_cache[key] = jax.jit(impl)
+        return self._prefill_cache[key]
 
-    # -- public API -----------------------------------------------------------
+    # -- §II-B2: live paged-weight streaming ---------------------------------
+    def attach_paging(self, page_bytes: Optional[int] = None,
+                      resident_slots: int = 2) -> "ServingEngine":
+        """Put the plan's paged parameters behind a
+        :class:`~repro.core.paging.HostPagedStore`.
+
+        The plan's resident set is pinned on device once; every cold
+        parameter group is evacuated to the host image and re-streamed
+        device-ward each tick through the double-buffered page cache
+        (``tick_params``).  ``page_bytes`` defaults to the largest cold
+        group (page == parameter-group granularity)."""
+        from repro.core.paging import HostPagedStore, packed_tree_store, \
+            thread_packed
+        from repro.core.weight_store import PackedParam
+
+        store = packed_tree_store(self.params, self.plan)
+        paged = [n for n in store.params
+                 if self.plan.placement_for(n).paged]
+        if not paged:
+            raise ValueError("plan has no paged parameters; nothing to "
+                             "stream — use the engine without paging")
+        if page_bytes is None:
+            page_bytes = max(store.params[n].nbytes_packed for n in paged)
+        self.pager = HostPagedStore(store, page_bytes, plan=self.plan)
+        self.page_resident_slots = resident_slots
+        # repoint the template tree: resident groups at the pager's pinned
+        # device copies, cold groups at the HOST image — nothing stays
+        # device-resident behind the pager's back.
+        host_view = {
+            name: PackedParam(packed=hp, scale=hs, bits=proto.bits,
+                              orig_shape=proto.orig_shape)
+            for name, (hp, hs, proto) in self.pager._host.items()}
+        self.params = thread_packed(self.params,
+                                    {**self.pager.resident, **host_view})
+        return self
+
+    def tick_params(self) -> Any:
+        """The params tree for this tick.
+
+        Without paging this is just the packed store.  With paging, the
+        cold pages stream host->device in access order (double-buffered,
+        proactive prefetch) and are threaded into the tree the jitted step
+        consumes; the wall time of the streaming pass is recorded as this
+        tick's paging stall.  The fused step needs every layer resident at
+        once (the stacked scan), so the page cache models the *traffic*
+        (swap/miss counters, stall time) while the tick's working set is
+        materialized in full — the TPU-native reading of the two live MRAM
+        pages."""
+        self.last_stall_s = 0.0
+        if self.pager is None:
+            return self.params
+        from repro.core.paging import thread_packed
+        t0 = time.perf_counter()
+        dev: Dict[str, Any] = {}
+        with self.pager.stream(self.page_resident_slots) as pages:
+            for _page, page_params in pages:
+                dev.update(page_params)
+        jax.block_until_ready([p.packed for p in dev.values()])
+        self.last_stall_s = time.perf_counter() - t0
+        self.paging_stall_s += self.last_stall_s
+        return thread_packed(self.params, dev)
+
+    @property
+    def swap_count(self) -> int:
+        return 0 if self.pager is None else self.pager.swap_count
+
+    @property
+    def miss_count(self) -> int:
+        return 0 if self.pager is None else self.pager.miss_count
+
+    def paging_summary(self) -> Dict[str, Any]:
+        return dict(
+            swap_count=self.swap_count, miss_count=self.miss_count,
+            stall_s=self.paging_stall_s,
+            n_pages=0 if self.pager is None else len(self.pager.pages))
+
+    # -- slot management ------------------------------------------------------
     def submit(self, req: Request) -> None:
+        self._check_fits(req)
+        if req.arrival_s is None:
+            req.arrival_s = time.perf_counter()
         self.waiting.append(req)
 
-    def _admit(self) -> None:
-        for i in range(self.slots):
-            if self.slot_req[i] is None and self.waiting:
-                req = self.waiting.pop(0)
-                s = len(req.prompt)
-                prefill = self._prefill_for_len(s)
-                logits, self.cache = prefill(
-                    self.params, jnp.asarray(req.prompt), self.cache,
-                    jnp.int32(i))
-                self.key, sub = jax.random.split(self.key)
-                tok = int(sample_token(logits, sub, req.temperature))
-                req.generated.append(tok)
-                prefix = self.cfg.n_meta_tokens
-                self.slot_req[i] = req
-                self.slot_pos[i] = s + prefix
+    def _check_fits(self, req: Request) -> None:
+        if len(req.prompt) == 0:
+            raise ValueError("empty prompt: nothing to condition on (and "
+                             "no first token to decode from)")
+        if self.cfg.n_meta_tokens and len(req.prompt) < 2:
+            # a 1-token prompt routes through the decode path (s==1),
+            # which cannot build the meta-token prefix the position
+            # accounting assumes — reject rather than serve garbage
+            raise ValueError("meta-token models need prompts of >= 2 "
+                             "tokens (single-token prefill cannot build "
+                             "the prefix)")
+        prefix = self.cfg.n_meta_tokens
+        if prefix + len(req.prompt) + 1 > self.max_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens (+{prefix} prefix) "
+                f"does not fit max_len={self.max_len}")
 
-    def step(self) -> None:
-        """One engine tick: admit, batched decode, retire."""
-        self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def assign(self, req: Request, slot: int) -> None:
+        """Bind a request to a batch slot (prefill starts next tick pass)."""
+        if self.slot_req[slot] is not None:
+            raise ValueError(f"slot {slot} is occupied")
+        self._check_fits(req)
+        if req.arrival_s is None:
+            req.arrival_s = time.perf_counter()
+        req.prefill_pos = 0
+        if "ssm" in self.cache:
+            # recurrent state is live across the whole row — unlike the kv
+            # cache there is no position mask hiding a predecessor's
+            # leftovers, so a reused slot must start cold
+            self.cache["ssm"] = jax.tree_util.tree_map(
+                lambda c: c.at[:, slot].set(0), self.cache["ssm"])
+        self.slot_req[slot] = req
+
+    @property
+    def pending(self) -> bool:
+        return bool(self.waiting
+                    or any(r is not None for r in self.slot_req))
+
+    # -- tick primitives (driven by step() or by sched.Scheduler) -------------
+    def _chunk_shape(self, req: Request, chunk: Optional[int] = None
+                     ) -> Tuple[int, int, bool, int]:
+        """(n_tokens, bucket, add_prefix, insert_pos) of the next chunk."""
+        prefix = self.cfg.n_meta_tokens
+        remaining = len(req.prompt) - req.prefill_pos
+        if self._bucketed:
+            n = min(chunk if chunk is not None else self.prefill_chunk,
+                    remaining)
+            bucket = _next_pow2(n)
+            # never let the padded window spill past the cache: near the
+            # boundary shrink to the largest power of two that still fits
+            # (the chunk loop absorbs the rest next round), so every
+            # compiled prefill shape stays a power of two even for
+            # non-pow2 max_len
+            avail = self.max_len - prefix - req.prefill_pos
+            if bucket > avail:
+                bucket = _pow2_floor(avail)
+                n = min(bucket, remaining)
+        else:
+            n = remaining          # exact-length single shot (ssm / moe)
+            bucket = n
+        first = req.prefill_pos == 0
+        # prefix is prepended inside the step only on the first chunk; the
+        # flag is pinned True for prefix-free models so it never forks the
+        # jit cache
+        add_prefix = first if prefix else True
+        insert_pos = 0 if first else prefix + req.prefill_pos
+        return n, bucket, add_prefix, insert_pos
+
+    def prefill_tick(self, params: Any, complete: bool = False,
+                     chunk: Optional[int] = None) -> List[Request]:
+        """Advance every prefilling slot by one chunk (``complete=True``
+        loops until all prompts are absorbed — the legacy single-tick
+        prefill).  ``chunk`` overrides the engine's default pacing for
+        this call only (the Scheduler threads its own), and must be a
+        power of two.  Slots whose prompt completes sample their first
+        token at the request's own temperature.  Returns the requests
+        that got their first token this call."""
+        started: List[Request] = []
+        while True:
+            pending = [(i, r) for i, r in enumerate(self.slot_req)
+                       if r is not None and r.prefill_pos < len(r.prompt)]
+            if not pending:
+                break
+            groups: Dict[Tuple[int, bool],
+                         List[Tuple[int, Request, int, int]]] = {}
+            for i, r in pending:
+                n, bucket, add_prefix, pos = self._chunk_shape(r, chunk)
+                groups.setdefault((bucket, add_prefix),
+                                  []).append((i, r, n, pos))
+            for (bucket, add_prefix), rows in groups.items():
+                self._run_prefill_group(params, bucket, add_prefix, rows,
+                                        started)
+            if not complete:
+                break
+        return started
+
+    def _run_prefill_group(self, params: Any, bucket: int, add_prefix: bool,
+                           rows: List[Tuple[int, Request, int, int]],
+                           started: List[Request]) -> None:
+        if self.cfg.family == "moe":
+            # expert capacity is contended across the FLATTENED batch, so
+            # padding rows (or co-batched neighbors) could displace real
+            # tokens' routing; prefill MoE slots one at a time (batch-1,
+            # the old engine's exact semantics)
+            for row in rows:
+                self._run_prefill_rows(params, bucket, add_prefix, [row],
+                                       1, started)
             return
+        self._run_prefill_rows(params, bucket, add_prefix, rows, self.slots,
+                               started)
+
+    def _run_prefill_rows(self, params: Any, bucket: int, add_prefix: bool,
+                          rows: List[Tuple[int, Request, int, int]],
+                          k: int, started: List[Request]) -> None:
+        tokens = np.zeros((k, bucket), np.int32)
+        slot_idx = np.zeros((k,), np.int32)
+        pos_vec = np.zeros((k,), np.int32)
+        for j in range(k):
+            # rows beyond the group repeat the last row: the duplicate
+            # scatter writes identical values, so padding the batch to a
+            # fixed k keeps the jit cache keyed by bucket alone
+            i, r, n, pos = rows[min(j, len(rows) - 1)]
+            tokens[j, :n] = r.prompt[r.prefill_pos:r.prefill_pos + n]
+            slot_idx[j] = i
+            pos_vec[j] = pos
+        fn = self._prefill_for_bucket(bucket, add_prefix)
+        logits, self.cache = fn(params, jnp.asarray(tokens), self.cache,
+                                jnp.asarray(slot_idx), jnp.asarray(pos_vec))
+        for j, (i, r, n, _pos) in enumerate(rows):
+            r.prefill_pos += n
+            if r.prefill_pos < len(r.prompt):
+                continue                      # more chunks next tick
+            self.key, sub = jax.random.split(self.key)
+            tok = int(sample_token(logits[j, n - 1], sub, r.temperature))
+            r.generated.append(tok)
+            r.first_token_s = time.perf_counter()
+            self.slot_pos[i] = len(r.prompt) + self.cfg.n_meta_tokens
+            started.append(r)
+            if len(r.generated) >= r.max_new_tokens:
+                self._retire(i)
+
+    def decode_tick(self, params: Any) -> List[Request]:
+        """One batched decode step over the decode-ready slots; per-slot
+        sampling at each request's own temperature.  Slots that are empty
+        or still prefilling park their write at the scratch row
+        (max_len - 1), which real decoding never reaches and the cache-
+        length mask never attends.  Returns the requests finished this
+        tick."""
+        active = [i for i, r in enumerate(self.slot_req)
+                  if r is not None and r.prefill_pos >= len(r.prompt)]
+        if not active:
+            return []
         tokens = np.zeros((self.slots, 1), np.int32)
-        for i in active:
-            tokens[i, 0] = self.slot_req[i].generated[-1]
-        pos_vec = jnp.asarray(self.slot_pos)
-        logits, self.cache = self._decode(self.params, jnp.asarray(tokens),
-                                          self.cache, pos_vec)
-        self.key, sub = jax.random.split(self.key)
-        greedy = sample_token(logits[:, -1], sub, temperature=0.0)
-        sampled = sample_token(logits[:, -1], sub, temperature=1.0)
+        temps = np.zeros((self.slots,), np.float32)
+        pos = np.full((self.slots,), self.max_len - 1, np.int32)
         for i in active:
             req = self.slot_req[i]
-            tok = greedy[i] if req.temperature == 0.0 else sampled[i]
-            req.generated.append(int(tok))
+            tokens[i, 0] = req.generated[-1]
+            temps[i] = req.temperature
+            pos[i] = self.slot_pos[i]
+        logits, self.cache = self._decode(params, jnp.asarray(tokens),
+                                          self.cache, jnp.asarray(pos))
+        self.key, sub = jax.random.split(self.key)
+        toks = np.asarray(sample_token_batch(logits[:, -1], sub, temps))
+        finished: List[Request] = []
+        for i in active:
+            req = self.slot_req[i]
+            req.generated.append(int(toks[i]))
             self.slot_pos[i] += 1
             if (len(req.generated) >= req.max_new_tokens
                     or self.slot_pos[i] >= self.max_len - 1):
-                req.done = True
-                self.finished.append(req)
-                self.slot_req[i] = None
+                finished.append(self._retire(i))
+        return finished
+
+    def _retire(self, slot: int) -> Request:
+        req = self.slot_req[slot]
+        req.done = True
+        req.finish_s = time.perf_counter()
+        self.finished.append(req)
+        self.slot_req[slot] = None
+        return req
+
+    # -- legacy FIFO loop -----------------------------------------------------
+    def _admit(self) -> None:
+        for i in self.free_slots():
+            if not self.waiting:
+                break
+            self.assign(self.waiting.pop(0), i)
+
+    def step(self) -> None:
+        """One engine tick: stream pages, admit FIFO, full prefill for the
+        fresh slots, batched decode, retire."""
+        params = self.tick_params()
+        self._admit()
+        self.prefill_tick(params, complete=True)
+        self.decode_tick(params)
 
     def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
         ticks = 0
-        while (self.waiting or any(r is not None for r in self.slot_req)):
+        while self.pending:
             self.step()
             ticks += 1
             if ticks > max_ticks:

@@ -1,0 +1,198 @@
+"""Serving metrics — the observability half of the XR serving scheduler.
+
+The paper's system claim is a *latency bound*, not a throughput number:
+Siracusa must finish the whole heterogeneous workload inside the 10–20 ms
+XR frame budget.  So the serving runtime records exactly the quantities
+that bound makes interesting: per-request time-to-first-token and
+end-to-end latency, per-tick engine latency, paging stalls (the §II-B2
+cost of exceeding on-chip capacity), deadline-miss rate per stream, and
+aggregate token throughput.
+
+Everything is emitted as one JSON document (schema
+``repro.serving.metrics/v1``) so the bench trajectory
+(``benchmarks/serving_load.py`` -> ``BENCH_serving.json``) and the
+launcher (``repro.launch.serve --metrics-json``) share a format:
+
+    {
+      "schema": "repro.serving.metrics/v1",
+      "ticks":      {"count", "latency_ms": {mean,p50,p99,max},
+                     "paging_stall_ms": {mean,p50,p99,max}},
+      "requests":   {"count", "tokens_out",
+                     "ttft_ms": {mean,p50,p99,max},
+                     "latency_ms": {mean,p50,p99,max}},
+      "deadlines":  {"with_deadline", "missed", "miss_rate"},
+      "throughput": {"wall_s", "tok_per_s"},
+      "paging":     {"swap_count", "miss_count", "stall_s", "n_pages"},
+      "streams":    {name: {"count", "missed", "miss_rate", "p99_ttft_ms"}}
+    }
+
+Latencies are milliseconds; a request's deadline is met when its
+*end-to-end* latency (arrival -> last token) is within ``deadline_ms``.
+Requests without a deadline never count toward the miss rate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+SCHEMA = "repro.serving.metrics/v1"
+
+
+def quantiles(xs: List[float]) -> Dict[str, float]:
+    """{mean, p50, p99, max} of a latency sample, in the sample's units."""
+    if not xs:
+        return dict(mean=0.0, p50=0.0, p99=0.0, max=0.0)
+    a = np.asarray(xs, np.float64)
+    return dict(mean=float(a.mean()), p50=float(np.percentile(a, 50)),
+                p99=float(np.percentile(a, 99)), max=float(a.max()))
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Lifecycle timestamps of one finished request (seconds, recorder
+    clock).  Derived metrics are properties so the aggregation below and
+    ad-hoc inspection agree by construction."""
+
+    uid: int
+    stream: str = "default"
+    priority: int = 0
+    deadline_ms: Optional[float] = None
+    arrival_s: float = 0.0
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None
+    n_prompt: int = 0
+    n_generated: int = 0
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finish_s is None:
+            return None
+        return self.finish_s - self.arrival_s
+
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        """None when the request carries no deadline."""
+        if self.deadline_ms is None:
+            return None
+        lat = self.latency_s
+        return lat is not None and lat * 1e3 <= self.deadline_ms
+
+
+class MetricsRecorder:
+    """Accumulates tick- and request-level events; renders the v1 JSON."""
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self.clock = clock
+        self.tick_latency_s: List[float] = []
+        self.tick_stall_s: List[float] = []
+        self.records: List[RequestRecord] = []
+        self._t0: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # -- event intake ---------------------------------------------------------
+    def start(self) -> None:
+        if self._t0 is None:
+            self._t0 = self.clock()
+
+    def record_tick(self, latency_s: float, paging_stall_s: float = 0.0
+                    ) -> None:
+        self.start()
+        self.tick_latency_s.append(float(latency_s))
+        self.tick_stall_s.append(float(paging_stall_s))
+        self._t_last = self.clock()
+
+    def record_request(self, req: Any) -> RequestRecord:
+        """Fold a finished engine Request (duck-typed: uid, prompt,
+        generated, plus the scheduler-stamped fields) into a record."""
+        rec = RequestRecord(
+            uid=req.uid,
+            stream=getattr(req, "stream", "default") or "default",
+            priority=getattr(req, "priority", 0) or 0,
+            deadline_ms=getattr(req, "deadline_ms", None),
+            arrival_s=getattr(req, "arrival_s", 0.0) or 0.0,
+            first_token_s=getattr(req, "first_token_s", None),
+            finish_s=getattr(req, "finish_s", None),
+            n_prompt=len(req.prompt),
+            n_generated=len(req.generated),
+        )
+        self.records.append(rec)
+        return rec
+
+    # -- aggregation ----------------------------------------------------------
+    @property
+    def wall_s(self) -> float:
+        if self._t0 is None or self._t_last is None:
+            return 0.0
+        return self._t_last - self._t0
+
+    def summary(self, paging: Optional[Dict[str, Any]] = None
+                ) -> Dict[str, Any]:
+        ttfts = [r.ttft_s * 1e3 for r in self.records if r.ttft_s is not None]
+        lats = [r.latency_s * 1e3 for r in self.records
+                if r.latency_s is not None]
+        with_dl = [r for r in self.records if r.deadline_ms is not None]
+        missed = [r for r in with_dl if r.deadline_met is False]
+        tokens = sum(r.n_generated for r in self.records)
+        wall = max(self.wall_s, 1e-9)
+
+        streams: Dict[str, Dict[str, Any]] = {}
+        for name in sorted({r.stream for r in self.records}):
+            rs = [r for r in self.records if r.stream == name]
+            rs_dl = [r for r in rs if r.deadline_ms is not None]
+            rs_missed = [r for r in rs_dl if r.deadline_met is False]
+            rs_ttft = [r.ttft_s * 1e3 for r in rs if r.ttft_s is not None]
+            streams[name] = dict(
+                count=len(rs), missed=len(rs_missed),
+                miss_rate=(len(rs_missed) / len(rs_dl)) if rs_dl else 0.0,
+                p99_ttft_ms=quantiles(rs_ttft)["p99"])
+
+        return {
+            "schema": SCHEMA,
+            "ticks": {
+                "count": len(self.tick_latency_s),
+                "latency_ms": quantiles([t * 1e3
+                                         for t in self.tick_latency_s]),
+                "paging_stall_ms": quantiles([t * 1e3
+                                              for t in self.tick_stall_s]),
+            },
+            "requests": {
+                "count": len(self.records),
+                "tokens_out": tokens,
+                "ttft_ms": quantiles(ttfts),
+                "latency_ms": quantiles(lats),
+            },
+            "deadlines": {
+                "with_deadline": len(with_dl),
+                "missed": len(missed),
+                "miss_rate": (len(missed) / len(with_dl)) if with_dl else 0.0,
+            },
+            "throughput": {
+                "wall_s": self.wall_s,
+                "tok_per_s": tokens / wall,
+            },
+            "paging": dict(paging or dict(swap_count=0, miss_count=0,
+                                          stall_s=0.0, n_pages=0)),
+            "streams": streams,
+        }
+
+    def to_json(self, paging: Optional[Dict[str, Any]] = None, **extra
+                ) -> str:
+        doc = self.summary(paging=paging)
+        doc.update(extra)
+        return json.dumps(doc, indent=2, sort_keys=False)
+
+    def write(self, path: str, paging: Optional[Dict[str, Any]] = None,
+              **extra) -> None:
+        with open(path, "w") as fh:
+            fh.write(self.to_json(paging=paging, **extra) + "\n")

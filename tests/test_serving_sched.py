@@ -1,0 +1,466 @@
+"""Deadline-aware serving scheduler (serving/sched) + engine rework.
+
+Covers the tentpole surfaces of the scheduler PR: EDF-with-priority
+admission, chunked/bucketed prefill exactness and its bounded jit cache,
+per-slot temperature sampling, live paged-weight streaming through the
+engine tick (bit-exactness + static counter prediction), the paging
+close/stream lifecycle fixes, and the metrics JSON schema.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.paging import HostPagedStore, pass_counters
+from repro.core.placement import (Placement, PlacementPlan, packed_sizes,
+                                  plan_for_budget)
+from repro.core.weight_store import freeze, uniform_policy
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import freeze_for_serving
+from repro.serving import (MetricsRecorder, Request, Scheduler,
+                           ServingEngine, sample_token, sample_token_batch)
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16, remat=False)
+
+
+@pytest.fixture(scope="module")
+def packed():
+    params = tfm.init_params(CFG, jax.random.PRNGKey(0))
+    return freeze_for_serving(params, bits=8)
+
+
+# ---------------------------------------------------------------------------
+# admission policy
+# ---------------------------------------------------------------------------
+
+def test_edf_with_priority_admission_order(packed):
+    eng = ServingEngine(CFG, packed, batch_slots=1, max_len=64)
+    s = Scheduler(eng)
+    s.add_stream("hand", priority=2, deadline_ms=50.0)
+    s.add_stream("gaze", priority=2, deadline_ms=10.0)
+    s.add_stream("bg", priority=0)
+    p = np.arange(4, dtype=np.int32)
+    s.submit(Request(uid=0, prompt=p), stream="bg")       # first in, low prio
+    s.submit(Request(uid=1, prompt=p), stream="hand")
+    s.submit(Request(uid=2, prompt=p), stream="gaze")     # same prio, tighter
+    s.submit(Request(uid=3, prompt=p,
+                     deadline_ms=5.0, priority=2), stream="hand")
+    order = [r.uid for r in s.admission_order()]
+    # priority class first; EDF inside the class; best-effort last
+    assert order == [3, 2, 1, 0]
+    # requests inherit stream defaults unless they carry their own
+    by_uid = {r.uid: r for r in s.queue}
+    assert by_uid[1].deadline_ms == 50.0 and by_uid[1].priority == 2
+    assert by_uid[3].deadline_ms == 5.0
+    assert by_uid[0].deadline_ms is None
+
+
+def test_single_slot_serves_in_priority_order(packed):
+    eng = ServingEngine(CFG, packed, batch_slots=1, max_len=64)
+    s = Scheduler(eng)
+    s.add_stream("hi", priority=1)
+    p = np.arange(3, dtype=np.int32)
+    for uid in range(4):
+        s.submit(Request(uid=uid, prompt=p, max_new_tokens=2),
+                 stream="hi" if uid >= 2 else "default")
+    done = s.run_until_done()
+    assert [r.uid for r in done] == [2, 3, 0, 1]
+    assert all(r.first_token_s is not None and r.finish_s is not None
+               for r in done)
+
+
+def test_unknown_stream_rejected(packed):
+    s = Scheduler(ServingEngine(CFG, packed, batch_slots=1, max_len=64))
+    with pytest.raises(KeyError):
+        s.submit(Request(uid=0, prompt=np.arange(3, dtype=np.int32)),
+                 stream="nope")
+
+
+# ---------------------------------------------------------------------------
+# chunked + bucketed prefill
+# ---------------------------------------------------------------------------
+
+def test_chunked_prefill_matches_offline(rng, packed):
+    """Prompts longer than the chunk are absorbed over several ticks in
+    power-of-two buckets; the greedy continuation must equal offline
+    full-prompt generation token for token."""
+    prompts = [rng.integers(0, 256, n).astype(np.int32)
+               for n in (1, 5, 19, 40)]
+    eng = ServingEngine(CFG, packed, batch_slots=2, max_len=64,
+                        plan=PlacementPlan.uniform())
+    s = Scheduler(eng, prefill_chunk=8)
+    for uid, p in enumerate(prompts):
+        s.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
+    done = {r.uid: r.generated for r in s.run_until_done()}
+    for uid, p in enumerate(prompts):
+        toks = jnp.asarray(p)[None]
+        for t in range(4):
+            lg = tfm.forward(packed, toks, CFG, engine=PlacementPlan.uniform())
+            nt = jnp.argmax(lg[:, -1], -1)
+            assert done[uid][t] == int(nt[0]), f"uid {uid} tok {t}"
+            toks = jnp.concatenate([toks, nt[:, None]], 1)
+
+
+def test_long_prompt_does_not_monopolize_ticks(rng, packed):
+    """While a 32-token prompt chunk-prefills at 4 tokens/tick, the short
+    co-resident request keeps decoding — the anti-head-of-line property
+    chunked prefill exists for."""
+    eng = ServingEngine(CFG, packed, batch_slots=2, max_len=64)
+    s = Scheduler(eng, prefill_chunk=4)
+    s.submit(Request(uid=0, prompt=rng.integers(0, 256, 32).astype(np.int32),
+                     max_new_tokens=2))
+    s.submit(Request(uid=1, prompt=rng.integers(0, 256, 3).astype(np.int32),
+                     max_new_tokens=3))
+    done = s.run_until_done()
+    # short request finishes strictly before the long one
+    assert [r.uid for r in done] == [1, 0]
+    long_req = next(r for r in done if r.uid == 0)
+    # 32 tokens at 4/tick = 8 prefill ticks before its first token
+    assert s.ticks >= 8
+    assert len(long_req.generated) == 2
+
+
+def test_prefill_jit_cache_bounded(rng, packed):
+    """Randomized prompt lengths compile at most log2(max_len) prefill
+    programs (power-of-two buckets), not one per exact length."""
+    max_len = 128
+    eng = ServingEngine(CFG, packed, batch_slots=4, max_len=max_len,
+                        prefill_chunk=64)
+    lengths = rng.integers(1, 60, 24)
+    for uid, n in enumerate(lengths):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, 256, int(n)).astype(np.int32),
+                           max_new_tokens=2))
+    done = eng.run_until_done()
+    assert len(done) == len(lengths)
+    assert len({len(r.prompt) for r in done}) > 7   # genuinely varied
+    assert len(eng._prefill_cache) <= math.log2(max_len)
+
+
+def test_prefill_buckets_stay_pow2_for_non_pow2_max_len(rng, packed):
+    """Near the cache boundary the bucket shrinks to the largest power of
+    two that fits (instead of falling back to the exact tail length), so
+    the compiled-shape set stays O(log) even for non-pow2 max_len."""
+    eng = ServingEngine(CFG, packed, batch_slots=2, max_len=100,
+                        prefill_chunk=64)
+    for uid, n in enumerate(rng.integers(60, 98, 8)):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, 256,
+                                               int(n)).astype(np.int32),
+                           max_new_tokens=1))
+    done = eng.run_until_done()
+    assert len(done) == 8
+    buckets = [b for b, _pfx in eng._prefill_cache]
+    assert all(b & (b - 1) == 0 for b in buckets)   # powers of two only
+    assert len(buckets) <= math.log2(128)
+
+
+def test_scheduler_threads_chunk_without_mutating_engine(rng, packed):
+    eng = ServingEngine(CFG, packed, batch_slots=2, max_len=64,
+                        prefill_chunk=64)
+    s = Scheduler(eng, prefill_chunk=4)
+    assert eng.prefill_chunk == 64         # engine pacing untouched
+    assert s.prefill_chunk == 4
+    s.submit(Request(uid=0, prompt=rng.integers(0, 256, 16).astype(np.int32),
+                     max_new_tokens=1))
+    s.run_until_done()
+    assert s.ticks >= 4                    # scheduler pacing still applies
+
+
+def test_ssm_slot_reuse_starts_cold(rng):
+    """Reusing a batch slot must not leak the previous request's SSM
+    recurrent state (h / conv) into the next prefill."""
+    from repro.configs import get_config
+
+    cfg = get_config("falcon-mamba-7b").smoke()
+    packed = freeze_for_serving(tfm.init_params(cfg, jax.random.PRNGKey(0)),
+                                bits=8)
+    a = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+    b = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+
+    def serve(prompts):
+        eng = ServingEngine(cfg, packed, batch_slots=1, max_len=64)
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
+        return {r.uid: r.generated for r in eng.run_until_done()}
+
+    after_a = serve([a, b])[1]
+    alone = serve([b])[0]
+    assert after_a == alone
+
+
+def test_moe_prefill_first_token_matches_offline(rng):
+    """MoE prefill stays batch-1 (expert capacity is contended across the
+    flattened batch, so padding rows could displace real routing): the
+    PREFILL token of a lone request on a many-slot engine must equal
+    offline forward.  (Decode-side capacity contention with empty batch
+    rows is pre-existing engine semantics, so only token 1 is exact.)"""
+    from repro.configs import get_config
+
+    cfg = get_config("qwen2-moe-a2.7b").smoke()
+    packed = freeze_for_serving(tfm.init_params(cfg, jax.random.PRNGKey(0)),
+                                bits=8)
+    prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    eng = ServingEngine(cfg, packed, batch_slots=4, max_len=64)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=2))
+    got = eng.run_until_done()[0].generated
+    lg = tfm.forward(packed, jnp.asarray(prompt)[None], cfg)
+    assert got[0] == int(jnp.argmax(lg[0, -1]))
+
+
+def test_meta_token_single_prompt_rejected():
+    """s==1 routes through decode and can never build the meta-token
+    prefix the position accounting assumes; reject instead of serving
+    garbage conditioning."""
+    from repro.configs import get_config
+
+    cfg = get_config("hymba-1.5b").smoke()
+    assert cfg.n_meta_tokens > 0
+    packed = freeze_for_serving(tfm.init_params(cfg, jax.random.PRNGKey(0)),
+                                bits=8)
+    eng = ServingEngine(cfg, packed, batch_slots=1, max_len=64)
+    with pytest.raises(ValueError, match="meta-token"):
+        eng.submit(Request(uid=0, prompt=np.asarray([5], np.int32)))
+    eng.submit(Request(uid=1, prompt=np.asarray([5, 6], np.int32),
+                       max_new_tokens=2))
+    assert len(eng.run_until_done()) == 1
+
+
+def test_scheduler_adopts_engine_submissions(rng, packed):
+    """Requests pushed through the still-public engine.submit() must be
+    served by the scheduler, not spin `pending` forever."""
+    eng = ServingEngine(CFG, packed, batch_slots=1, max_len=64)
+    eng.submit(Request(uid=0, prompt=rng.integers(0, 256, 4).astype(np.int32),
+                       max_new_tokens=2))
+    s = Scheduler(eng)
+    done = s.run_until_done(max_ticks=50)
+    assert [r.uid for r in done] == [0]
+    assert not eng.waiting
+
+
+def test_empty_prompt_rejected(packed):
+    eng = ServingEngine(CFG, packed, batch_slots=1, max_len=64)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(uid=0, prompt=np.zeros((0,), np.int32)))
+    s = Scheduler(ServingEngine(CFG, packed, batch_slots=1, max_len=64))
+    with pytest.raises(ValueError, match="empty prompt"):
+        s.submit(Request(uid=0, prompt=np.zeros((0,), np.int32)))
+
+
+def test_scheduler_rejects_oversized_prompt_at_submit(rng, packed):
+    s = Scheduler(ServingEngine(CFG, packed, batch_slots=1, max_len=32))
+    with pytest.raises(ValueError, match="does not fit"):
+        s.submit(Request(uid=0,
+                         prompt=rng.integers(0, 256, 100).astype(np.int32)))
+    assert not s.queue                     # nothing half-enqueued
+
+
+# ---------------------------------------------------------------------------
+# per-slot temperature sampling (satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_sample_token_batch_semantics(rng):
+    logits = jnp.asarray(rng.normal(size=(3, 32)), jnp.float32)
+    key = jax.random.PRNGKey(7)
+    # temp<=0 rows are greedy regardless of the others
+    out = np.asarray(sample_token_batch(logits, key,
+                                        jnp.asarray([0.0, 0.0, 0.0])))
+    np.testing.assert_array_equal(out, np.asarray(jnp.argmax(logits, -1)))
+    # a uniform-temperature batch matches the scalar sampler exactly
+    for temp in (0.5, 2.0):
+        batch = sample_token_batch(logits, key,
+                                   jnp.full((3,), temp))
+        scalar = sample_token(logits, key, temperature=temp)
+        np.testing.assert_array_equal(np.asarray(batch), np.asarray(scalar))
+
+
+def test_decode_uses_request_temperature(rng, packed, monkeypatch):
+    """The engine must thread each request's OWN temperature into the
+    batched sampler (the old engine sampled every stochastic slot at
+    temperature 1.0)."""
+    seen = []
+    import repro.serving.engine as eng_mod
+    real = eng_mod.sample_token_batch
+
+    def spy(logits, key, temperatures):
+        seen.append(np.asarray(temperatures).copy())
+        return real(logits, key, temperatures)
+
+    monkeypatch.setattr(eng_mod, "sample_token_batch", spy)
+    eng = ServingEngine(CFG, packed, batch_slots=2, max_len=64)
+    eng.submit(Request(uid=0, prompt=rng.integers(0, 256, 4).astype(np.int32),
+                       max_new_tokens=3, temperature=0.0))
+    eng.submit(Request(uid=1, prompt=rng.integers(0, 256, 4).astype(np.int32),
+                       max_new_tokens=3, temperature=0.7))
+    eng.run_until_done()
+    assert seen, "decode never sampled"
+    temps = np.stack([t for t in seen if t.shape == (2,)])
+    assert (temps[:, 0] == 0.0).all()
+    assert (temps[:, 1] == np.float32(0.7)).all()
+
+
+def test_greedy_request_unaffected_by_sampled_neighbor(rng, packed):
+    """Co-batching a stochastic request must not perturb the greedy one."""
+    prompt = rng.integers(0, 256, 6).astype(np.int32)
+
+    def serve(extra_temp):
+        eng = ServingEngine(CFG, packed, batch_slots=2, max_len=64, seed=3)
+        eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=5))
+        eng.submit(Request(uid=1, prompt=prompt[::-1].copy(),
+                           max_new_tokens=5, temperature=extra_temp))
+        return {r.uid: r.generated for r in eng.run_until_done()}
+
+    a, b = serve(0.0), serve(2.5)
+    assert a[0] == b[0]
+
+
+# ---------------------------------------------------------------------------
+# live paged-weight streaming through the engine tick (satellite test)
+# ---------------------------------------------------------------------------
+
+def test_paged_serving_bit_exact_and_counters(rng, packed):
+    """A mixed plan_for_budget plan served with live HostPagedStore
+    streaming is (a) bit-exact vs the fully resident plan, (b) its
+    swap/miss counters equal ticks x the static make_schedule
+    prediction."""
+    sizes = packed_sizes(packed)
+    plan = plan_for_budget(sizes, sum(sizes.values()) // 2)
+    assert plan.paged_bytes(sizes) > 0
+    prompts = [rng.integers(0, 256, 3 + 5 * uid).astype(np.int32)
+               for uid in range(4)]
+
+    def serve(plan, paged):
+        eng = ServingEngine(CFG, packed, batch_slots=2, max_len=64,
+                            plan=plan)
+        if paged:
+            eng.attach_paging()
+        s = Scheduler(eng, prefill_chunk=8)
+        for uid, p in enumerate(prompts):
+            s.submit(Request(uid=uid, prompt=p, max_new_tokens=6))
+        done = s.run_until_done()
+        return {r.uid: r.generated for r in done}, s, eng
+
+    mixed, s, eng = serve(plan, paged=True)
+    resident, _, _ = serve(PlacementPlan.uniform(), paged=False)
+    assert mixed == resident
+    # every tick streams one full pass over the cold pages
+    assert eng.pager is not None and len(eng.pager.pages) >= 2
+    per_pass = pass_counters(len(eng.pager.pages),
+                             eng.page_resident_slots)
+    assert eng.swap_count == s.ticks * per_pass["swaps"]
+    assert eng.miss_count == s.ticks * per_pass["misses"]
+    assert eng.paging_stall_s > 0.0
+    eng.pager.close()
+
+
+def test_attach_paging_requires_paged_params(packed):
+    eng = ServingEngine(CFG, packed, batch_slots=2, max_len=64,
+                        plan=PlacementPlan.uniform())
+    with pytest.raises(ValueError):
+        eng.attach_paging()
+
+
+# ---------------------------------------------------------------------------
+# paging store lifecycle (satellite fix)
+# ---------------------------------------------------------------------------
+
+def _store(rng, n=6, d=32):
+    params = {f"layer{i:02d}": dict(w=jnp.asarray(rng.normal(size=(d, d)),
+                                                  jnp.float32))
+              for i in range(n)}
+    return freeze(params, uniform_policy(8, min_size=16))
+
+
+def test_stream_is_context_manager_and_early_exit_cleans_up(rng):
+    store = _store(rng)
+    paged = HostPagedStore(store, page_bytes=2 * 32 * 32)
+    with paged.stream() as pages:
+        for i, (page, _params) in enumerate(pages):
+            if i == 0:
+                break                      # bail out mid-pass
+    assert not paged._live                 # live slots reclaimed
+    # the store remains usable: a fresh full pass still streams everything
+    seen = [n for page, ps in paged.stream() for n in ps]
+    assert seen == [n for p in paged.pages for n in p.param_names]
+    assert not paged._live                 # exhaustion also reclaims
+    paged.close()                          # close waits by default
+
+
+def test_close_waits_and_is_reentrant(rng):
+    store = _store(rng, n=4)
+    with HostPagedStore(store, page_bytes=2 * 32 * 32) as paged:
+        for _ in paged.stream():
+            break
+    # __exit__ already closed (wait=True drains in-flight fetches);
+    # closing again in either mode must not raise
+    paged.close()
+    paged.close(wait=False)
+
+
+def test_pass_counters_prediction():
+    for n_pages in range(1, 8):
+        for slots in (2, 3):
+            pc = pass_counters(n_pages, slots)
+            assert pc["swaps"] == n_pages       # each page fetched once
+            assert pc["misses"] == 1            # only the cold start
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_schema_and_deadlines():
+    rec = MetricsRecorder(clock=lambda: 0.0)
+    rec.record_tick(latency_s=0.002, paging_stall_s=0.0005)
+    rec.record_tick(latency_s=0.004, paging_stall_s=0.0)
+    met = Request(uid=0, prompt=np.arange(3, dtype=np.int32),
+                  deadline_ms=20.0, stream="xr")
+    met.arrival_s, met.first_token_s, met.finish_s = 0.0, 0.005, 0.015
+    missed = Request(uid=1, prompt=np.arange(3, dtype=np.int32),
+                     deadline_ms=10.0, stream="xr")
+    missed.arrival_s, missed.first_token_s, missed.finish_s = 0.0, 0.02, 0.05
+    best_effort = Request(uid=2, prompt=np.arange(3, dtype=np.int32))
+    best_effort.arrival_s, best_effort.finish_s = 0.0, 1.0
+    for r in (met, missed, best_effort):
+        r.generated = [1, 2]
+        rec.record_request(r)
+    doc = rec.summary(paging=dict(swap_count=6, miss_count=2,
+                                  stall_s=0.001, n_pages=3))
+    assert doc["schema"] == "repro.serving.metrics/v1"
+    assert doc["deadlines"] == dict(with_deadline=2, missed=1,
+                                    miss_rate=0.5)
+    assert doc["requests"]["count"] == 3
+    assert doc["requests"]["tokens_out"] == 6
+    assert doc["ticks"]["count"] == 2
+    assert doc["ticks"]["latency_ms"]["max"] == pytest.approx(4.0)
+    assert doc["paging"]["swap_count"] == 6
+    assert doc["streams"]["xr"]["miss_rate"] == 0.5
+    assert doc["streams"]["default"]["count"] == 1
+    # TTFT of the met request: 5 ms
+    assert doc["requests"]["ttft_ms"]["p50"] == pytest.approx(
+        (0.005 + 0.02) / 2 * 1e3)
+    import json
+    json.loads(rec.to_json())              # serializable end to end
+
+
+def test_scheduler_records_metrics(rng, packed):
+    eng = ServingEngine(CFG, packed, batch_slots=2, max_len=64)
+    s = Scheduler(eng)
+    s.add_stream("xr", priority=1, deadline_ms=1e6)   # generous: all met
+    for uid in range(3):
+        s.submit(Request(uid=uid,
+                         prompt=rng.integers(0, 256, 4).astype(np.int32),
+                         max_new_tokens=2), stream="xr")
+    s.run_until_done()
+    doc = s.metrics.summary(paging=eng.paging_summary())
+    assert doc["requests"]["count"] == 3
+    assert doc["deadlines"] == dict(with_deadline=3, missed=0,
+                                    miss_rate=0.0)
+    assert doc["ticks"]["count"] == s.ticks
+    assert doc["throughput"]["tok_per_s"] > 0
