@@ -1,5 +1,6 @@
 """Serving-load benchmark: the deadline-aware scheduler under mixed XR
-traffic, with live paged-weight streaming.
+traffic, with live paged-weight streaming — single-model AND
+multi-tenant.
 
 Three request streams model the paper's concurrent XR workload (§V):
 a high-priority hand-tracking stream on a 15 ms deadline, a gaze stream
@@ -7,9 +8,20 @@ on 10 ms, and a best-effort background assistant.  The packed store is
 split by ``plan_for_budget`` so the cold half pages through the
 double-buffered HostPagedStore every tick.
 
-Emits the ``repro.serving.metrics/v1`` JSON (default
-``BENCH_serving.json``) — tok/s, p99 tick latency, TTFT, deadline-miss
-rate, paging stalls — the bench-trajectory artefact for serving PRs.
+The multi-tenant section then serves TWO models (``--arch`` plus
+``--arch2``, a dense LM and an SSM by default) through one
+``MultiScheduler`` with all cold pages contending for one
+``SharedPagePool`` budget (``--shared-budget-frac`` of the combined cold
+bytes), asserts the pool counters against the static
+``shared_pass_counters`` prediction and — under ``--smoke`` — each
+tenant's tokens bit-exact versus serving that model alone on a private
+pager.
+
+Emits the ``repro.serving.metrics/v2`` multi document (default
+``BENCH_serving.json``; the single-model summary rides along under
+``single_model``) — tok/s, p99 tick latency, TTFT, deadline-miss rate,
+paging stalls, shared-pool contention — the bench-trajectory artefact
+for serving PRs.
 
 Run:  PYTHONPATH=src python benchmarks/serving_load.py --smoke
 """
@@ -22,10 +34,12 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.paging import SharedPagePool, shared_pass_counters
 from repro.core.placement import packed_sizes, plan_for_budget
 from repro.models import transformer as tfm
 from repro.parallel.sharding import freeze_for_serving
-from repro.serving import Request, Scheduler, ServingEngine
+from repro.serving import (MultiScheduler, Request, Scheduler,
+                           ServingEngine, validate)
 
 STREAMS = (
     ("hand_tracking", dict(priority=2, deadline_ms=15.0)),
@@ -34,9 +48,103 @@ STREAMS = (
 )
 
 
+def _build(arch, smoke, budget_frac, seed):
+    cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.smoke()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
+    packed = freeze_for_serving(params, bits=8)
+    sizes = packed_sizes(packed)
+    plan = plan_for_budget(sizes, int(sum(sizes.values()) * budget_frac))
+    return cfg, packed, plan
+
+
+def _tenant_reqs(cfg, args, salt):
+    rng = np.random.default_rng(args.seed + salt)
+    out = []
+    for uid in range(args.requests):
+        hi = max(3, min(48, args.max_len - args.max_new - 2))
+        prompt_len = int(rng.integers(2, hi))
+        out.append(Request(uid=uid,
+                           prompt=rng.integers(0, cfg.vocab_size,
+                                               prompt_len).astype(np.int32),
+                           max_new_tokens=args.max_new))
+    return out
+
+
+def _bench_multi(args):
+    """Two tenants, one MultiScheduler, one SharedPagePool budget."""
+    tenants = {args.arch: _build(args.arch, args.smoke,
+                                 args.budget_frac, seed=0)}
+    name2 = args.arch2 if args.arch2 != args.arch else args.arch2 + "#2"
+    tenants[name2] = _build(args.arch2, args.smoke, args.budget_frac,
+                            seed=1)
+    cold = sum(plan.paged_bytes(packed_sizes(packed))
+               for _c, packed, plan in tenants.values())
+    budget = max(int(cold * args.shared_budget_frac), 1)
+    ms = MultiScheduler(pool=SharedPagePool(budget) if cold else None)
+    for name, (cfg, packed, plan) in tenants.items():
+        eng = ServingEngine(cfg, packed, batch_slots=args.slots,
+                            max_len=args.max_len, plan=plan,
+                            seed=args.seed)
+        ms.add_model(name, eng, prefill_chunk=args.prefill_chunk)
+        for sname, kw in STREAMS:
+            ms.add_stream(name, sname, **kw)
+    names = [s[0] for s in STREAMS]
+    for salt, (name, (cfg, _p, _pl)) in enumerate(tenants.items()):
+        for req in _tenant_reqs(cfg, args, salt):
+            ms.submit(name, req, stream=names[req.uid % len(names)])
+    done = ms.run_until_done()
+    doc = validate(ms.summary())
+
+    pred_ok = True
+    if ms.pool is not None:
+        pred = shared_pass_counters(
+            {name: [p.nbytes for p in ms.model(name).engine.pager.pages]
+             for name in tenants
+             if ms.model(name).engine.pager is not None},
+            ms.pool.budget_bytes, passes=ms.pass_log)
+        pred_ok = all(
+            all(doc["shared_pool"]["models"][m][k] == pred[m][k]
+                for k in ("swaps", "misses", "pool_hits", "evicted"))
+            for m in pred)
+
+    exact_ok = True
+    if args.smoke:
+        # bit-exactness vs solo private pagers (smoke only: 2 extra runs)
+        for salt, (name, (cfg, packed, plan)) in enumerate(tenants.items()):
+            eng = ServingEngine(cfg, packed, batch_slots=args.slots,
+                                max_len=args.max_len, plan=plan,
+                                seed=args.seed)
+            if plan.paged_bytes(packed_sizes(packed)) > 0:
+                eng.attach_paging()
+            solo = Scheduler(eng, prefill_chunk=args.prefill_chunk)
+            for sname, kw in STREAMS:
+                solo.add_stream(sname, **kw)
+            for req in _tenant_reqs(cfg, args, salt):
+                solo.submit(req, stream=names[req.uid % len(names)])
+            want = {r.uid: r.generated for r in solo.run_until_done()}
+            got = {r.uid: r.generated for r in done.get(name, [])}
+            exact_ok = exact_ok and (got == want)
+            if eng.pager is not None:
+                eng.pager.close()
+
+    ms.close()
+    if not (pred_ok and exact_ok):
+        raise SystemExit(
+            f"multi-tenant bench invariants violated: "
+            f"counters_match={pred_ok} bit_exact={exact_ok}")
+    return doc, dict(tenants=list(tenants), shared_budget_bytes=budget,
+                     counters_match=pred_ok,
+                     bit_exact_vs_solo=exact_ok if args.smoke else None)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--arch2", default="falcon-mamba-7b",
+                    help="second tenant for the multi-model section "
+                         "(dense LM + SSM tracker by default)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--slots", type=int, default=4)
@@ -46,18 +154,18 @@ def main(argv=None):
     ap.add_argument("--budget-frac", type=float, default=0.5,
                     help="resident budget as a fraction of the packed "
                          "store (the §II-B2 pressure knob)")
+    ap.add_argument("--shared-budget-frac", type=float, default=0.6,
+                    help="SharedPagePool budget as a fraction of the "
+                         "tenants' combined cold bytes (the cross-model "
+                         "contention knob)")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = cfg.smoke()
-    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
-    packed = freeze_for_serving(params, bits=8)
+    cfg, packed, plan = _build(args.arch, args.smoke, args.budget_frac,
+                               seed=0)
     sizes = packed_sizes(packed)
     budget = int(sum(sizes.values()) * args.budget_frac)
-    plan = plan_for_budget(sizes, budget)
     print(plan.summary(sizes))
 
     eng = ServingEngine(cfg, packed, batch_slots=args.slots,
@@ -68,26 +176,27 @@ def main(argv=None):
     for name, kw in STREAMS:
         sched.add_stream(name, **kw)
 
-    rng = np.random.default_rng(args.seed)
     names = [s[0] for s in STREAMS]
-    for uid in range(args.requests):
-        hi = max(3, min(48, args.max_len - args.max_new - 2))
-        prompt_len = int(rng.integers(2, hi))
-        sched.submit(
-            Request(uid=uid,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        prompt_len).astype(np.int32),
-                    max_new_tokens=args.max_new),
-            stream=names[uid % len(names)])
+    for req in _tenant_reqs(cfg, args, 0):
+        sched.submit(req, stream=names[req.uid % len(names)])
 
     done = sched.run_until_done()
-    summary = sched.metrics.summary(paging=eng.paging_summary())
-    sched.metrics.write(args.out, paging=eng.paging_summary(),
-                        config=dict(arch=cfg.name, smoke=args.smoke,
-                                    requests=args.requests,
-                                    slots=args.slots,
-                                    budget_bytes=budget,
-                                    prefill_chunk=sched.prefill_chunk))
+    summary = validate(sched.metrics.summary(paging=eng.paging_summary()))
+    if eng.pager is not None:
+        eng.pager.close()
+
+    multi_doc, multi_cfg = _bench_multi(args)
+    multi_doc["single_model"] = summary
+    multi_doc["config"] = dict(arch=cfg.name, smoke=args.smoke,
+                               requests=args.requests, slots=args.slots,
+                               budget_bytes=budget,
+                               prefill_chunk=sched.prefill_chunk,
+                               multi=multi_cfg)
+    validate(multi_doc)
+    import json
+    with open(args.out, "w") as fh:
+        json.dump(multi_doc, fh, indent=2)
+        fh.write("\n")
 
     thr, dl, ticks = (summary["throughput"], summary["deadlines"],
                       summary["ticks"])
@@ -98,9 +207,17 @@ def main(argv=None):
           f"tok_per_s={thr['tok_per_s']:.1f}"
           f";miss_rate={dl['miss_rate']:.3f}"
           f";swaps={summary['paging']['swap_count']}")
-    print(f"served {len(done)} requests over {sched.ticks} ticks; "
-          f"metrics -> {args.out}")
-    return summary
+    tot = multi_doc["totals"]
+    pool = multi_doc["shared_pool"]
+    print(f"serving_tenancy,{1e6 / max(tot['tok_per_s'], 1e-9):.2f},"
+          f"tok_per_s={tot['tok_per_s']:.1f}"
+          f";models={len(multi_doc['models'])}"
+          f";evictions={pool.get('evictions', 0)}"
+          f";counters_match={multi_cfg['counters_match']}"
+          f";bit_exact={multi_cfg['bit_exact_vs_solo']}")
+    print(f"served {len(done)} single-model + {tot['requests']} tenant "
+          f"requests over {sched.ticks} ticks; metrics -> {args.out}")
+    return multi_doc
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -104,8 +105,24 @@ class StallModel:
 
 
 def make_schedule(n_pages: int, resident_slots: int = 2) -> List[PageScheduleEntry]:
-    """Static proactive-prefetch schedule over a linear page access order."""
+    """Static proactive-prefetch schedule over a linear page access order.
+
+    With a single live slot there is nowhere to double-buffer: prefetching
+    page k+1 would evict the in-use page k (the schedule the old code
+    emitted, which ``validate_schedule`` rightly rejects).  Single-slot
+    passes therefore disable proactive prefetch and demand-fetch every
+    page, evicting the previous one first — ``pass_counters`` then
+    predicts ``swaps == misses == n_pages``.
+    """
+    if resident_slots < 1:
+        raise ValueError(f"resident_slots must be >= 1, got {resident_slots}")
     entries: List[PageScheduleEntry] = []
+    if resident_slots == 1:
+        for k in range(n_pages):
+            entries.append(PageScheduleEntry(
+                page=k, prefetch_next=None,
+                evicts=k - 1 if k > 0 else None))
+        return entries
     for k in range(n_pages):
         nxt = k + 1 if k + 1 < n_pages else None
         # with S slots, prefetching page k+1 evicts page k+1-S
@@ -134,6 +151,191 @@ def validate_schedule(entries: Sequence[PageScheduleEntry],
                 f"residency {resident} exceeds {resident_slots} slots")
 
 
+class SharedPagePool:
+    """One device-bytes budget shared by every tenant's paged store.
+
+    The §V concurrent-workload story: N models (hand tracking, gaze, an
+    assistant LM) share ONE memory hierarchy, so their cold pages must
+    contend for one pool of device bytes rather than each model assuming
+    a private cache.  Members are :class:`HostPagedStore` instances that
+    register under a model name; every page any member fetches is admitted
+    here, and admission evicts least-recently-used pages of *other* models
+    until the new page fits (the fetching model's own pages are never
+    evicted mid-pass — its live window must survive).  A page still cached
+    from an earlier pass satisfies a re-fetch without a host->device swap
+    (a *pool hit*), so the counters expose exactly the cross-model
+    contention: a tenant that fits alone starts thrashing when a
+    co-tenant's working set squeezes it out.
+
+    All bookkeeping is deterministic for a given pass order (the
+    MultiScheduler ticks tenants sequentially and each store's prefetch
+    worker fetches pages in schedule order), so the per-model counters
+    follow the static :func:`shared_pass_counters` prediction exactly.
+    """
+
+    def __init__(self, budget_bytes: int):
+        if budget_bytes <= 0:
+            raise ValueError(f"budget_bytes must be > 0, got {budget_bytes}")
+        self.budget_bytes = int(budget_bytes)
+        self.members: "OrderedDict[str, HostPagedStore]" = OrderedDict()
+        self._lock = threading.RLock()
+        # (model, page) -> (nbytes, {name: PackedParam}); insertion/touch
+        # order IS the LRU order (front = coldest)
+        self._cache: "OrderedDict[Tuple[str, int], Tuple[int, Dict[str, PackedParam]]]" = OrderedDict()
+        self.live_bytes = 0
+        self.counters: Dict[str, Dict[str, Any]] = {}
+
+    def register(self, name: str, store: "HostPagedStore") -> None:
+        with self._lock:
+            if name in self.members:
+                raise ValueError(f"model {name!r} already joined this pool")
+            self.members[name] = store
+            self.counters[name] = dict(pool_hits=0, evicted=0, stall_s=0.0)
+
+    def lookup(self, name: str, page_idx: int
+               ) -> Optional[Dict[str, PackedParam]]:
+        """Device params for a page still cached from an earlier fetch, or
+        None (the caller must then swap host->device and :meth:`admit`)."""
+        with self._lock:
+            key = (name, page_idx)
+            entry = self._cache.get(key)
+            if entry is None:
+                return None
+            self._cache.move_to_end(key)
+            self.counters[name]["pool_hits"] += 1
+            return entry[1]
+
+    def admit(self, name: str, page_idx: int, nbytes: int,
+              params: Dict[str, PackedParam]) -> None:
+        """Cache a freshly swapped page under the shared budget, evicting
+        other models' LRU pages to make room.  If the budget cannot fit
+        the page even after evicting every foreign page (the fetching
+        model's own pages are protected), the page is simply not cached —
+        it lives only as long as the pass's live window references it, and
+        the next access swaps again."""
+        with self._lock:
+            if nbytes > self.budget_bytes:
+                return              # can NEVER fit: don't flush co-tenants
+            for key in list(self._cache.keys()):
+                if self.live_bytes + nbytes <= self.budget_bytes:
+                    break
+                victim_model, _victim_page = key
+                if victim_model == name:
+                    continue
+                freed, _ = self._cache.pop(key)
+                self.live_bytes -= freed
+                self.counters[victim_model]["evicted"] += 1
+            if self.live_bytes + nbytes <= self.budget_bytes:
+                self._cache[(name, page_idx)] = (nbytes, params)
+                self.live_bytes += nbytes
+
+    def add_stall(self, name: str, seconds: float) -> None:
+        with self._lock:
+            self.counters[name]["stall_s"] += float(seconds)
+
+    def summary(self) -> Dict[str, Any]:
+        """Per-model swap/miss/pool-hit/evict/stall counters + pool state
+        — the ``shared_pool`` section of the metrics/v2 JSON."""
+        with self._lock:
+            models = {}
+            for name, store in self.members.items():
+                c = self.counters[name]
+                models[name] = dict(
+                    swaps=store.swap_count, misses=store.miss_count,
+                    pool_hits=c["pool_hits"], evicted=c["evicted"],
+                    stall_s=c["stall_s"], n_pages=len(store.pages))
+            return dict(
+                budget_bytes=self.budget_bytes,
+                live_bytes=self.live_bytes,
+                cached_pages=len(self._cache),
+                evictions=sum(c["evicted"] for c in self.counters.values()),
+                models=models)
+
+    def close(self, wait: bool = True) -> None:
+        with self._lock:
+            members = list(self.members.values())
+            self._cache.clear()
+            self.live_bytes = 0
+        for store in members:
+            store.close(wait=wait)
+
+    def __enter__(self) -> "SharedPagePool":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+def shared_pass_counters(page_nbytes: Dict[str, Sequence[int]],
+                         budget_bytes: int, resident_slots: int = 2,
+                         passes: Optional[Sequence[str]] = None,
+                         ticks: int = 1) -> Dict[str, Dict[str, int]]:
+    """Static per-model counter prediction for SharedPagePool streaming.
+
+    ``page_nbytes`` maps each model name to its page sizes in access
+    order; ``passes`` is the exact sequence of full streaming passes (one
+    entry per model tick, e.g. ``MultiScheduler.pass_log``), defaulting to
+    ``ticks`` round-robin rounds over the models in dict order.  Replays
+    the same deterministic logic as the runtime — demand/prefetch fetch
+    order per :func:`make_schedule`, pool lookup before swap, LRU
+    admission that never evicts the fetching model's pages — so the
+    runtime ``SharedPagePool.summary()`` counters must match this
+    closed-form prediction pass for pass (the multi-tenant analogue of
+    :func:`pass_counters`)."""
+    order = list(page_nbytes.keys())
+    if passes is None:
+        passes = [m for _ in range(ticks) for m in order]
+    cache: "OrderedDict[Tuple[str, int], int]" = OrderedDict()
+    live_bytes = 0
+    out = {m: dict(swaps=0, misses=0, pool_hits=0, evicted=0)
+           for m in order}
+
+    def fetch(model: str, idx: int) -> None:
+        nonlocal live_bytes
+        key = (model, idx)
+        if key in cache:
+            cache.move_to_end(key)
+            out[model]["pool_hits"] += 1
+            return
+        out[model]["swaps"] += 1
+        nb = int(page_nbytes[model][idx])
+        if nb > budget_bytes:
+            return                  # mirrors admit's never-fits pre-check
+        for victim in list(cache.keys()):
+            if live_bytes + nb <= budget_bytes:
+                break
+            if victim[0] == model:
+                continue
+            live_bytes -= cache.pop(victim)
+            out[victim[0]]["evicted"] += 1
+        if live_bytes + nb <= budget_bytes:
+            cache[key] = nb
+            live_bytes += nb
+
+    for model in passes:
+        live: set = set()
+        inflight: set = set()
+        for e in make_schedule(len(page_nbytes[model]), resident_slots):
+            if e.page in live:
+                pass
+            elif e.page in inflight:
+                inflight.discard(e.page)
+                live.add(e.page)
+            else:
+                out[model]["misses"] += 1
+                fetch(model, e.page)
+                live.add(e.page)
+            if e.prefetch_next is not None and e.prefetch_next not in live:
+                inflight.add(e.prefetch_next)
+                fetch(model, e.prefetch_next)
+            if e.evicts is not None:
+                live.discard(e.evicts)
+        # pass end: the store reclaims its live slots (cold next pass);
+        # pool cache entries persist until evicted by pressure
+    return out
+
+
 class HostPagedStore:
     """Runtime paged weight streaming: host RAM = background flash, device
     HBM = the two live pages.  Double-buffered with a worker thread — the
@@ -142,13 +344,22 @@ class HostPagedStore:
     With a ``plan``, the plan's resident parameters are uploaded once and
     stay pinned in ``self.resident`` (the live MRAM image); only the paged
     parameters flow through the page cache.
+
+    With a ``pool`` (:class:`SharedPagePool`), the store *joins* a shared
+    device-bytes budget under ``name``: every fetched page is admitted to
+    the pool (cross-model LRU eviction), and pages still pooled from an
+    earlier pass are reused without a host->device swap.
     """
 
     def __init__(self, store: WeightStore, page_bytes: int,
                  device: Optional[jax.Device] = None,
-                 plan: Optional[PlacementPlan] = None):
+                 plan: Optional[PlacementPlan] = None,
+                 pool: Optional[SharedPagePool] = None,
+                 name: str = "default"):
         self.store = store
         self.plan = plan
+        self.pool = pool
+        self.name = name
         self.pages = build_pages(store, page_bytes, plan=plan)
         self.device = device or jax.devices()[0]
         # evacuate packed params to host numpy (off-chip flash image)
@@ -167,8 +378,14 @@ class HostPagedStore:
         self.swap_count = 0
         self.miss_count = 0
         self._live: Dict[int, Dict[str, PackedParam]] = {}
+        if pool is not None:
+            pool.register(self.name, self)
 
     def _fetch_page(self, idx: int) -> Dict[str, PackedParam]:
+        if self.pool is not None:
+            cached = self.pool.lookup(self.name, idx)
+            if cached is not None:
+                return cached           # pool hit: no host->device swap
         out = {}
         for name in self.pages[idx].param_names:
             hp, hs, proto = self._host[name]
@@ -177,6 +394,8 @@ class HostPagedStore:
                 scale=jax.device_put(hs, self.device),
                 bits=proto.bits, orig_shape=proto.orig_shape)
         self.swap_count += 1
+        if self.pool is not None:
+            self.pool.admit(self.name, idx, self.pages[idx].nbytes, out)
         return out
 
     def stream(self, resident_slots: int = 2) -> "PageStream":

@@ -11,9 +11,21 @@ l1mram-resident, the rest paged l3flash — §II-B2 against the budget) and
 attaches the live HostPagedStore so the cold pages stream host->device
 between ticks, swap/miss counters included.
 
-When the plan pages, the run is verified bit-exact against the fully
-resident uniform plan (disable with ``--no-verify``).  Metrics are
-emitted as the ``repro.serving.metrics/v1`` JSON (stdout, and
+Multi-model tenancy (the paper's §V concurrent-workload story):
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke \
+        --models qwen3-0.6b,falcon-mamba-7b --shared-budget-mb 0.05
+
+serves every listed model through ONE MultiScheduler — a single
+EDF-with-priority admission loop across tenants — with all models' cold
+pages contending for one SharedPagePool device-bytes budget
+(``--shared-budget-mb``; default 60% of the combined cold bytes, so the
+pool genuinely churns).  Each tenant is verified bit-exact against
+serving that model alone on a private pager.
+
+When a plan pages, single-model runs are verified bit-exact against the
+fully resident uniform plan (disable with ``--no-verify``).  Metrics are
+emitted as the ``repro.serving.metrics/v2`` JSON (stdout, and
 ``--metrics-json PATH`` to persist).
 """
 
@@ -26,11 +38,13 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.paging import SharedPagePool, shared_pass_counters
 from repro.core.placement import (Placement, PlacementPlan, packed_sizes,
                                   plan_for_budget)
 from repro.models import transformer as tfm
 from repro.parallel.sharding import freeze_for_serving
-from repro.serving import Request, Scheduler, ServingEngine
+from repro.serving import (MultiScheduler, Request, Scheduler,
+                           ServingEngine)
 
 
 def _requests(cfg, n, max_new, seed=0):
@@ -56,9 +70,153 @@ def _serve(cfg, packed, plan, args, paged: bool):
     return done, sched, eng
 
 
+def _build_model(arch: str, args):
+    """(cfg, packed, plan) for one tenant: smoke-scaled config, packed
+    store, and a half-resident greedy plan (or --budget-mb's budget)."""
+    cfg = get_config(arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    if cfg.family == "encdec":
+        raise SystemExit(f"{arch}: serve launcher covers decoder-only "
+                         f"archs; see examples/xr_pipeline.py for enc-dec")
+    import zlib
+    params = tfm.init_params(cfg, jax.random.PRNGKey(zlib.crc32(
+        arch.encode()) % (1 << 31)))
+    packed = freeze_for_serving(params, bits=args.bits)
+    sizes = packed_sizes(packed)
+    budget = (int(args.budget_mb * 1024 * 1024)
+              if args.budget_mb is not None else sum(sizes.values()) // 2)
+    plan = plan_for_budget(
+        sizes, budget,
+        hot=Placement("l1mram", args.bits, "resident"),
+        cold=Placement("l3flash", args.bits, "paged"))
+    return cfg, packed, plan
+
+
+def _tenant_requests(cfg, args, salt):
+    return _requests(cfg, args.requests, args.max_new,
+                     seed=args.seed + salt)
+
+
+def _serve_tenants(models, args, pool):
+    """One MultiScheduler pass over every tenant; returns (ms, done)."""
+    ms = MultiScheduler(pool=pool)
+    for name, (cfg, packed, plan) in models.items():
+        eng = ServingEngine(cfg, packed, batch_slots=args.slots,
+                            max_len=args.max_len, plan=plan,
+                            seed=args.seed)
+        ms.add_model(name, eng, prefill_chunk=args.prefill_chunk)
+        ms.add_stream(name, "xr", priority=1, deadline_ms=args.deadline_ms)
+        ms.add_stream(name, "background")
+    for salt, (name, (cfg, _p, _pl)) in enumerate(models.items()):
+        for req in _tenant_requests(cfg, args, salt):
+            ms.submit(name, req,
+                      stream="xr" if req.uid % 2 == 0 else "background")
+    done = ms.run_until_done()
+    return ms, done
+
+
+def _serve_solo(name, cfg, packed, plan, args, salt):
+    """The tenant served ALONE on a private pager — the bit-exactness
+    reference the shared pool must not perturb."""
+    eng = ServingEngine(cfg, packed, batch_slots=args.slots,
+                        max_len=args.max_len, plan=plan, seed=args.seed)
+    sizes = packed_sizes(packed)
+    if plan.paged_bytes(sizes) > 0:
+        eng.attach_paging()
+    sched = Scheduler(eng, prefill_chunk=args.prefill_chunk)
+    sched.add_stream("xr", priority=1, deadline_ms=args.deadline_ms)
+    sched.add_stream("background")
+    for req in _tenant_requests(cfg, args, salt):
+        sched.submit(req, stream="xr" if req.uid % 2 == 0 else "background")
+    done = sched.run_until_done()
+    if eng.pager is not None:
+        eng.pager.close()
+    return {r.uid: r.generated for r in done}
+
+
+def _main_multi(args):
+    archs = [a.strip() for a in args.models.split(",") if a.strip()]
+    if len(archs) < 2:
+        raise SystemExit("--models wants >= 2 comma-separated archs")
+    models = {}
+    for arch in archs:
+        name = arch
+        i = 2
+        while name in models:            # same arch twice = two tenants
+            name = f"{arch}#{i}"
+            i += 1
+        models[name] = _build_model(arch, args)
+
+    cold = {name: plan.paged_bytes(packed_sizes(packed))
+            for name, (_c, packed, plan) in models.items()}
+    total_cold = sum(cold.values())
+    if args.shared_budget_mb is not None:
+        budget = int(args.shared_budget_mb * 1024 * 1024)
+    else:
+        budget = max(int(total_cold * 0.6), 1)
+    print(f"tenants: {', '.join(models)}; cold bytes "
+          f"{ {n: c for n, c in cold.items()} }, shared pool budget "
+          f"{budget} B")
+
+    pool = SharedPagePool(budget) if total_cold > 0 else None
+    ms, done = _serve_tenants(models, args, pool)
+    doc = ms.summary()
+    for name in models:
+        reqs = doc["models"][name]["requests"]
+        dl = doc["models"][name]["deadlines"]
+        print(f"  {name}: {reqs['count']} requests, {reqs['tokens_out']} "
+              f"tokens, deadline misses {dl['missed']}/{dl['with_deadline']}")
+    if pool is not None:
+        ps = doc["shared_pool"]
+        print(f"  shared pool: {ps['cached_pages']} pages cached "
+              f"({ps['live_bytes']}/{ps['budget_bytes']} B), "
+              f"{ps['evictions']} cross-model evictions")
+        pred = shared_pass_counters(
+            {name: [p.nbytes for p in ms.model(name).engine.pager.pages]
+             for name in models
+             if ms.model(name).engine.pager is not None},
+            pool.budget_bytes, passes=ms.pass_log)
+        pred_ok = all(
+            all(ps["models"][m][k] == pred[m][k]
+                for k in ("swaps", "misses", "pool_hits", "evicted"))
+            for m in pred)
+        print("  pool counters " + ("MATCH" if pred_ok else "DIVERGE FROM")
+              + " the static shared_pass_counters prediction")
+    else:
+        pred_ok = True
+
+    ok = pred_ok
+    if not args.no_verify:
+        for salt, (name, (cfg, packed, plan)) in enumerate(models.items()):
+            want = _serve_solo(name, cfg, packed, plan, args, salt)
+            got = {r.uid: r.generated for r in done.get(name, [])}
+            exact = got == want
+            ok = ok and exact
+            print(f"  verify {name}: tokens "
+                  + ("BIT-EXACT vs solo private pager" if exact
+                     else "MISMATCH vs solo private pager"))
+
+    print(ms.to_json())
+    if args.metrics_json:
+        ms.write(args.metrics_json)
+        print(f"metrics written to {args.metrics_json}")
+    ms.close()
+    if not ok:
+        sys.exit(1)
+    return done
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated archs served as tenants of ONE "
+                         "MultiScheduler + SharedPagePool (overrides "
+                         "--arch/--scenario)")
+    ap.add_argument("--shared-budget-mb", type=float, default=None,
+                    help="SharedPagePool device budget in MiB for --models "
+                         "runs; default 60%% of the combined cold bytes")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
@@ -84,6 +242,9 @@ def main(argv=None):
                     help="skip the bit-exact check of the paged run "
                          "against the fully resident plan")
     args = ap.parse_args(argv)
+
+    if args.models is not None:
+        return _main_multi(args)
 
     cfg = get_config(args.arch)
     if args.smoke:

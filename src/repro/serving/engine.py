@@ -97,6 +97,11 @@ class Request:
     stream: str = "default"
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # retired because the KV cache ran out (slot_pos hit max_len - 1)
+    # before max_new_tokens was reached — such a request got *partial*
+    # service, so deadline accounting must not conflate it with natural
+    # completion
+    truncated: bool = False
     # runtime bookkeeping (stamped by the engine / scheduler)
     prefill_pos: int = 0               # prompt tokens already prefilled
     arrival_s: Optional[float] = None
@@ -131,6 +136,11 @@ class ServingEngine:
         # state and MoE capacity routing see every token, so those
         # families keep exact-length prefill.
         self._bucketed = cfg.family in ("dense", "vlm")
+        if prefill_chunk < 1:
+            # _next_pow2 maps 0/negative to 1, which would silently serve
+            # chunk=1 pacing the caller never asked for
+            raise ValueError(f"prefill_chunk must be >= 1, got "
+                             f"{prefill_chunk}")
         self.prefill_chunk = _next_pow2(prefill_chunk)
 
         self.cache = tfm.init_serve_cache(cfg, batch_slots, max_len)
@@ -180,7 +190,9 @@ class ServingEngine:
 
     # -- §II-B2: live paged-weight streaming ---------------------------------
     def attach_paging(self, page_bytes: Optional[int] = None,
-                      resident_slots: int = 2) -> "ServingEngine":
+                      resident_slots: int = 2, *,
+                      pool: Optional[Any] = None,
+                      name: Optional[str] = None) -> "ServingEngine":
         """Put the plan's paged parameters behind a
         :class:`~repro.core.paging.HostPagedStore`.
 
@@ -188,11 +200,20 @@ class ServingEngine:
         parameter group is evacuated to the host image and re-streamed
         device-ward each tick through the double-buffered page cache
         (``tick_params``).  ``page_bytes`` defaults to the largest cold
-        group (page == parameter-group granularity)."""
+        group (page == parameter-group granularity).
+
+        With ``pool`` (a :class:`~repro.core.paging.SharedPagePool`), the
+        store JOINS the pool's shared device-bytes budget under ``name``
+        instead of assuming a private cache — the multi-model tenancy
+        path, where every tenant's cold pages contend for one budget and
+        cross-model eviction is the pool's call."""
         from repro.core.paging import HostPagedStore, packed_tree_store, \
             thread_packed
         from repro.core.weight_store import PackedParam
 
+        if resident_slots < 1:
+            raise ValueError(f"resident_slots must be >= 1, got "
+                             f"{resident_slots}")
         store = packed_tree_store(self.params, self.plan)
         paged = [n for n in store.params
                  if self.plan.placement_for(n).paged]
@@ -201,7 +222,10 @@ class ServingEngine:
                              "stream — use the engine without paging")
         if page_bytes is None:
             page_bytes = max(store.params[n].nbytes_packed for n in paged)
-        self.pager = HostPagedStore(store, page_bytes, plan=self.plan)
+        self.pager = HostPagedStore(store, page_bytes, plan=self.plan,
+                                    pool=pool,
+                                    name=name if name is not None
+                                    else "default")
         self.page_resident_slots = resident_slots
         # repoint the template tree: resident groups at the pager's pinned
         # device copies, cold groups at the HOST image — nothing stays
@@ -238,6 +262,8 @@ class ServingEngine:
         jax.block_until_ready([p.packed for p in dev.values()])
         self.last_stall_s = time.perf_counter() - t0
         self.paging_stall_s += self.last_stall_s
+        if self.pager.pool is not None:
+            self.pager.pool.add_stall(self.pager.name, self.last_stall_s)
         return thread_packed(self.params, dev)
 
     @property
@@ -433,8 +459,13 @@ class ServingEngine:
             req = self.slot_req[i]
             req.generated.append(int(toks[i]))
             self.slot_pos[i] += 1
-            if (len(req.generated) >= req.max_new_tokens
-                    or self.slot_pos[i] >= self.max_len - 1):
+            if len(req.generated) >= req.max_new_tokens:
+                finished.append(self._retire(i))
+            elif self.slot_pos[i] >= self.max_len - 1:
+                # cache exhausted mid-request: partial service, not a
+                # natural completion — flag it so deadline accounting can
+                # tell the two apart
+                req.truncated = True
                 finished.append(self._retire(i))
         return finished
 
@@ -453,19 +484,25 @@ class ServingEngine:
                 break
             self.assign(self.waiting.pop(0), i)
 
-    def step(self) -> None:
+    def step(self) -> List[Request]:
         """One engine tick: stream pages, admit FIFO, full prefill for the
-        fresh slots, batched decode, retire."""
+        fresh slots, batched decode, retire.  Returns the requests that
+        finished this tick."""
+        before = len(self.finished)
         params = self.tick_params()
         self._admit()
         self.prefill_tick(params, complete=True)
         self.decode_tick(params)
+        return self.finished[before:]
 
     def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
+        """Serve until the queue drains; returns the requests completed by
+        THIS call (``self.finished`` keeps the all-time list)."""
+        done: List[Request] = []
         ticks = 0
         while self.pending:
-            self.step()
+            done += self.step()
             ticks += 1
             if ticks > max_ticks:
                 raise RuntimeError("serving loop did not converge")
-        return self.finished
+        return done

@@ -9,26 +9,50 @@ cost of exceeding on-chip capacity), deadline-miss rate per stream, and
 aggregate token throughput.
 
 Everything is emitted as one JSON document (schema
-``repro.serving.metrics/v1``) so the bench trajectory
+``repro.serving.metrics/v2``) so the bench trajectory
 (``benchmarks/serving_load.py`` -> ``BENCH_serving.json``) and the
 launcher (``repro.launch.serve --metrics-json``) share a format:
 
     {
-      "schema": "repro.serving.metrics/v1",
+      "schema": "repro.serving.metrics/v2",
       "ticks":      {"count", "latency_ms": {mean,p50,p99,max},
                      "paging_stall_ms": {mean,p50,p99,max}},
-      "requests":   {"count", "tokens_out",
+      "requests":   {"count", "tokens_out", "truncated",
                      "ttft_ms": {mean,p50,p99,max},
                      "latency_ms": {mean,p50,p99,max}},
-      "deadlines":  {"with_deadline", "missed", "miss_rate"},
+      "deadlines":  {"with_deadline", "missed", "miss_rate", "truncated"},
       "throughput": {"wall_s", "tok_per_s"},
       "paging":     {"swap_count", "miss_count", "stall_s", "n_pages"},
-      "streams":    {name: {"count", "missed", "miss_rate", "p99_ttft_ms"}}
+      "streams":    {name: {"count", "missed", "miss_rate", "truncated",
+                            "p99_ttft_ms"}}
     }
 
 Latencies are milliseconds; a request's deadline is met when its
 *end-to-end* latency (arrival -> last token) is within ``deadline_ms``.
-Requests without a deadline never count toward the miss rate.
+Requests without a deadline never count toward the miss rate, and
+*truncated* requests (retired by KV-cache exhaustion, i.e. partial
+service) are excluded from it and reported under their own counter —
+v1 silently conflated them with natural completions.
+
+Multi-model tenancy (``repro.serving.tenancy.MultiScheduler``) emits the
+v2 *multi* shape instead: per-model sections of the document above plus
+the shared page pool's contention stats::
+
+    {
+      "schema": "repro.serving.metrics/v2",
+      "ticks":       {"count"},                     # MultiScheduler ticks
+      "models":      {name: <single-model document, sans schema>},
+      "shared_pool": {"budget_bytes", "live_bytes", "cached_pages",
+                      "evictions",
+                      "models": {name: {"swaps", "misses", "pool_hits",
+                                        "evicted", "stall_s", "n_pages"}}},
+      "totals":      {"requests", "tokens_out", "truncated",
+                      "with_deadline", "missed", "miss_rate",
+                      "wall_s", "tok_per_s"}
+    }
+
+:func:`validate` checks either shape and is what CI asserts against the
+uploaded ``BENCH_serving.json`` artefact.
 """
 
 from __future__ import annotations
@@ -40,7 +64,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-SCHEMA = "repro.serving.metrics/v1"
+SCHEMA = "repro.serving.metrics/v2"
 
 
 def quantiles(xs: List[float]) -> Dict[str, float]:
@@ -67,6 +91,7 @@ class RequestRecord:
     finish_s: Optional[float] = None
     n_prompt: int = 0
     n_generated: int = 0
+    truncated: bool = False
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -90,7 +115,7 @@ class RequestRecord:
 
 
 class MetricsRecorder:
-    """Accumulates tick- and request-level events; renders the v1 JSON."""
+    """Accumulates tick- and request-level events; renders the v2 JSON."""
 
     def __init__(self, clock: Callable[[], float] = time.perf_counter):
         self.clock = clock
@@ -125,6 +150,7 @@ class MetricsRecorder:
             finish_s=getattr(req, "finish_s", None),
             n_prompt=len(req.prompt),
             n_generated=len(req.generated),
+            truncated=bool(getattr(req, "truncated", False)),
         )
         self.records.append(rec)
         return rec
@@ -141,7 +167,12 @@ class MetricsRecorder:
         ttfts = [r.ttft_s * 1e3 for r in self.records if r.ttft_s is not None]
         lats = [r.latency_s * 1e3 for r in self.records
                 if r.latency_s is not None]
-        with_dl = [r for r in self.records if r.deadline_ms is not None]
+        # truncated requests got partial service (KV cache ran out): they
+        # are excluded from the miss rate and labeled under their own key
+        with_dl = [r for r in self.records
+                   if r.deadline_ms is not None and not r.truncated]
+        trunc_dl = [r for r in self.records
+                    if r.deadline_ms is not None and r.truncated]
         missed = [r for r in with_dl if r.deadline_met is False]
         tokens = sum(r.n_generated for r in self.records)
         wall = max(self.wall_s, 1e-9)
@@ -149,12 +180,14 @@ class MetricsRecorder:
         streams: Dict[str, Dict[str, Any]] = {}
         for name in sorted({r.stream for r in self.records}):
             rs = [r for r in self.records if r.stream == name]
-            rs_dl = [r for r in rs if r.deadline_ms is not None]
+            rs_dl = [r for r in rs
+                     if r.deadline_ms is not None and not r.truncated]
             rs_missed = [r for r in rs_dl if r.deadline_met is False]
             rs_ttft = [r.ttft_s * 1e3 for r in rs if r.ttft_s is not None]
             streams[name] = dict(
                 count=len(rs), missed=len(rs_missed),
                 miss_rate=(len(rs_missed) / len(rs_dl)) if rs_dl else 0.0,
+                truncated=sum(1 for r in rs if r.truncated),
                 p99_ttft_ms=quantiles(rs_ttft)["p99"])
 
         return {
@@ -169,6 +202,7 @@ class MetricsRecorder:
             "requests": {
                 "count": len(self.records),
                 "tokens_out": tokens,
+                "truncated": sum(1 for r in self.records if r.truncated),
                 "ttft_ms": quantiles(ttfts),
                 "latency_ms": quantiles(lats),
             },
@@ -176,6 +210,7 @@ class MetricsRecorder:
                 "with_deadline": len(with_dl),
                 "missed": len(missed),
                 "miss_rate": (len(missed) / len(with_dl)) if with_dl else 0.0,
+                "truncated": len(trunc_dl),
             },
             "throughput": {
                 "wall_s": self.wall_s,
@@ -196,3 +231,107 @@ class MetricsRecorder:
               **extra) -> None:
         with open(path, "w") as fh:
             fh.write(self.to_json(paging=paging, **extra) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# multi-model tenancy (metrics/v2 multi shape)
+# ---------------------------------------------------------------------------
+
+def multi_summary(models: Dict[str, Dict[str, Any]],
+                  shared_pool: Optional[Dict[str, Any]] = None,
+                  ticks: int = 0) -> Dict[str, Any]:
+    """Assemble the v2 multi-model document from per-model single-model
+    summaries (as produced by :meth:`MetricsRecorder.summary`) plus the
+    shared pool's :meth:`~repro.core.paging.SharedPagePool.summary`."""
+    sections = {}
+    for name, doc in models.items():
+        doc = dict(doc)
+        doc.pop("schema", None)
+        sections[name] = doc
+    n_req = sum(d["requests"]["count"] for d in sections.values())
+    tokens = sum(d["requests"]["tokens_out"] for d in sections.values())
+    trunc = sum(d["requests"]["truncated"] for d in sections.values())
+    with_dl = sum(d["deadlines"]["with_deadline"] for d in sections.values())
+    missed = sum(d["deadlines"]["missed"] for d in sections.values())
+    # the tenants share one wall clock window, so aggregate throughput is
+    # total tokens over the longest per-model span, not the sum of spans
+    wall = max((d["throughput"]["wall_s"] for d in sections.values()),
+               default=0.0)
+    return {
+        "schema": SCHEMA,
+        "ticks": {"count": int(ticks)},
+        "models": sections,
+        "shared_pool": dict(shared_pool) if shared_pool else {},
+        "totals": {
+            "requests": n_req,
+            "tokens_out": tokens,
+            "truncated": trunc,
+            "with_deadline": with_dl,
+            "missed": missed,
+            "miss_rate": (missed / with_dl) if with_dl else 0.0,
+            "wall_s": wall,
+            "tok_per_s": tokens / max(wall, 1e-9),
+        },
+    }
+
+
+_SINGLE_KEYS = {
+    "ticks": ("count", "latency_ms", "paging_stall_ms"),
+    "requests": ("count", "tokens_out", "truncated", "ttft_ms",
+                 "latency_ms"),
+    "deadlines": ("with_deadline", "missed", "miss_rate", "truncated"),
+    "throughput": ("wall_s", "tok_per_s"),
+    "paging": ("swap_count", "miss_count", "stall_s", "n_pages"),
+}
+
+
+def _validate_single(doc: Dict[str, Any], where: str) -> None:
+    for section, keys in _SINGLE_KEYS.items():
+        if section not in doc:
+            raise ValueError(f"{where}: missing section {section!r}")
+        for k in keys:
+            if k not in doc[section]:
+                raise ValueError(f"{where}: missing {section}.{k}")
+    if "streams" not in doc:
+        raise ValueError(f"{where}: missing section 'streams'")
+    for name, s in doc["streams"].items():
+        for k in ("count", "missed", "miss_rate", "truncated",
+                  "p99_ttft_ms"):
+            if k not in s:
+                raise ValueError(f"{where}: missing streams.{name}.{k}")
+
+
+def validate(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Assert ``doc`` is a well-formed ``repro.serving.metrics/v2``
+    document (either the single-model or the multi-model shape); returns
+    the document unchanged so it can be used inline.  Raises ValueError
+    naming the first missing piece."""
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"schema is {doc.get('schema')!r}, want {SCHEMA!r}")
+    if "models" in doc:
+        if not doc["models"]:
+            raise ValueError("multi document with an empty 'models' map")
+        for section in ("shared_pool", "totals", "ticks"):
+            if section not in doc:
+                raise ValueError(f"multi document missing {section!r}")
+        for k in ("requests", "tokens_out", "truncated", "with_deadline",
+                  "missed", "miss_rate", "wall_s", "tok_per_s"):
+            if k not in doc["totals"]:
+                raise ValueError(f"multi document missing totals.{k}")
+        for name, sub in doc["models"].items():
+            _validate_single(sub, where=f"models.{name}")
+        pool = doc["shared_pool"]
+        if pool:
+            for k in ("budget_bytes", "live_bytes", "cached_pages",
+                      "evictions", "models"):
+                if k not in pool:
+                    raise ValueError(f"shared_pool missing {k!r}")
+            for name, c in pool["models"].items():
+                for k in ("swaps", "misses", "pool_hits", "evicted",
+                          "stall_s", "n_pages"):
+                    if k not in c:
+                        raise ValueError(
+                            f"shared_pool.models.{name} missing {k!r}")
+    else:
+        _validate_single(doc, where="document")
+    return doc

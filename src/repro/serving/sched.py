@@ -20,7 +20,7 @@ that claim's serving-side analogue:
     HostPagedStore pass) and the stall is accounted against the tick;
   * **metrics**: TTFT / end-to-end latency / p50 / p99 / deadline-miss
     rate / tok/s / paging stalls, recorded per tick and per request and
-    emitted as the ``repro.serving.metrics/v1`` JSON.
+    emitted as the ``repro.serving.metrics/v2`` JSON.
 
 The scheduler owns no jit state — it drives the engine's tick primitives
 (``tick_params`` / ``assign`` / ``prefill_tick`` / ``decode_tick``), so
@@ -67,6 +67,11 @@ class Scheduler:
                  clock=time.perf_counter):
         self.engine = engine
         if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                # _next_pow2 maps 0/negative to 1 — reject instead of
+                # silently pacing at chunk=1
+                raise ValueError(f"prefill_chunk must be >= 1, got "
+                                 f"{prefill_chunk}")
             from repro.serving.engine import _next_pow2
             self.prefill_chunk: Optional[int] = _next_pow2(prefill_chunk)
         else:
@@ -174,15 +179,25 @@ class Scheduler:
         return bool(self.queue or self.engine.pending)
 
     def run_until_done(self, max_ticks: int = 100_000) -> List[Request]:
+        """Serve until the queue drains.  ``max_ticks`` bounds THIS call
+        (a reused scheduler's cumulative ``self.ticks`` must not trip the
+        convergence check early), and the return value is the requests
+        completed by this call — ``self.finished`` keeps the all-time
+        list."""
+        done: List[Request] = []
+        ticks = 0
         while self.pending:
-            self.tick()
-            if self.ticks > max_ticks:
+            done += self.tick()
+            ticks += 1
+            if ticks > max_ticks:
                 raise RuntimeError("scheduler loop did not converge")
-        return self.finished
+        return done
 
     def run_for(self, seconds: float) -> List[Request]:
-        """Serve until the wall budget is spent or the queue drains."""
+        """Serve until the wall budget is spent or the queue drains;
+        returns the requests completed by this call."""
         t0 = self.clock()
+        done: List[Request] = []
         while self.pending and (self.clock() - t0) < seconds:
-            self.tick()
-        return self.finished
+            done += self.tick()
+        return done

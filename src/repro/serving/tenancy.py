@@ -1,0 +1,235 @@
+"""Multi-model tenancy: N serving engines, one scheduler, one page budget.
+
+Siracusa's headline system claim (§V) is *concurrent* heterogeneous
+workloads — hand tracking, gaze and a background assistant sharing ONE
+memory hierarchy inside the 10–20 ms frame budget.  Parmar et al. show
+that exactly this cross-model memory contention dominates XR SoC
+behavior.  This module is that claim's serving-side realization:
+
+  * a :class:`MultiScheduler` multiplexes N :class:`ServingEngine`\\ s
+    (e.g. a small dense assistant LM plus an SSM frame-tracker), each
+    wrapped in its own per-model :class:`Scheduler` for mechanism, but
+    admitted through ONE global EDF-with-priority loop: every tick, all
+    tenants' queued requests are sorted together (priority class first,
+    earliest absolute deadline within a class) and admitted in that order
+    into their own model's free batch slots — a 5 ms-deadline tracker
+    request outranks every queued assistant request, whatever model it
+    belongs to;
+  * all models' cold pages flow through ONE
+    :class:`~repro.core.paging.SharedPagePool` under a single
+    device-bytes budget: each tenant's ``attach_paging`` *joins* the pool
+    instead of constructing a private store, cross-model page eviction is
+    the pool's call, and per-model swap/miss/pool-hit/evict/stall
+    counters expose the contention (and match the static
+    :func:`~repro.core.paging.shared_pass_counters` prediction, because
+    tenants stream sequentially per tick);
+  * per-model deadline accounting lands in the
+    ``repro.serving.metrics/v2`` multi shape (per-model sections plus the
+    shared pool's contention stats) via
+    :func:`~repro.serving.metrics.multi_summary`.
+
+Each tenant's tokens are bit-exact versus serving that model alone on a
+private pager: the pool changes *which* fetches cost a host->device swap,
+never the bytes the jitted step consumes.
+
+Typical use::
+
+    pool = SharedPagePool(budget_bytes=4 << 20)
+    ms = MultiScheduler(pool=pool)
+    ms.add_model("assistant", assistant_engine, prefill_chunk=16)
+    ms.add_model("tracker", tracker_engine)
+    ms.add_stream("tracker", "frames", priority=2, deadline_ms=15.0)
+    ms.submit("tracker", Request(uid=0, prompt=p), stream="frames")
+    done = ms.run_until_done()
+    print(ms.to_json())
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.paging import SharedPagePool
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.metrics import multi_summary
+from repro.serving.sched import Scheduler, StreamSpec
+
+
+class MultiScheduler:
+    """One EDF-with-priority admission loop over N tenant engines.
+
+    ``pool`` (or ``shared_budget_bytes``, which constructs one) is the
+    single device-bytes budget every tenant's cold pages contend for.
+    Without either, tenants serve fully resident (no paging is attached).
+    """
+
+    def __init__(self, *, pool: Optional[SharedPagePool] = None,
+                 shared_budget_bytes: Optional[int] = None,
+                 clock=time.perf_counter):
+        if pool is not None and shared_budget_bytes is not None:
+            raise ValueError("pass either pool= or shared_budget_bytes=, "
+                             "not both")
+        if pool is None and shared_budget_bytes is not None:
+            pool = SharedPagePool(shared_budget_bytes)
+        self.pool = pool
+        self.clock = clock
+        self.models: Dict[str, Scheduler] = {}
+        self.ticks = 0
+        # one entry per full streaming pass, in execution order — the
+        # exact `passes=` argument shared_pass_counters needs to predict
+        # the pool counters of this run
+        self.pass_log: List[str] = []
+
+    # -- tenants --------------------------------------------------------------
+    def add_model(self, name: str, engine: ServingEngine, *,
+                  prefill_chunk: Optional[int] = None,
+                  page_bytes: Optional[int] = None,
+                  resident_slots: int = 2) -> Scheduler:
+        """Register a tenant.  When the MultiScheduler owns a shared pool
+        and the engine's plan pages, the engine's paging is attached
+        JOINED to that pool (an engine arriving with a private pager is
+        rejected — a private cache would dodge the shared budget)."""
+        if name in self.models:
+            raise ValueError(f"model {name!r} already registered")
+        if self.pool is not None and engine.pager is not None:
+            raise ValueError(
+                f"model {name!r} already has a private pager; tenants "
+                f"of a shared pool must attach through it (pass the "
+                f"engine un-attached)")
+        # construct the Scheduler first: it validates prefill_chunk, and a
+        # failure here must not leave the engine half-joined to the pool
+        sched = Scheduler(engine, prefill_chunk=prefill_chunk,
+                          clock=self.clock)
+        if self.pool is not None:
+            from repro.core.placement import packed_sizes
+            sizes = packed_sizes(engine.params)
+            if engine.plan.paged_bytes(sizes) > 0:
+                engine.attach_paging(page_bytes, resident_slots,
+                                     pool=self.pool, name=name)
+        self.models[name] = sched
+        return sched
+
+    def model(self, name: str) -> Scheduler:
+        return self.models[name]
+
+    def add_stream(self, model: str, name: str, *, priority: int = 0,
+                   deadline_ms: Optional[float] = None) -> StreamSpec:
+        return self.models[model].add_stream(name, priority=priority,
+                                             deadline_ms=deadline_ms)
+
+    def submit(self, model: str, req: Request,
+               stream: Optional[str] = None) -> None:
+        self.models[model].submit(req, stream=stream)
+
+    # -- the single admission loop -------------------------------------------
+    def admission_order(self) -> List[Tuple[str, Request]]:
+        """ALL tenants' waiting requests in one service order: priority
+        class first, then earliest absolute deadline (EDF), then arrival —
+        the same key each per-model scheduler uses, applied across
+        models."""
+        waiting = [(sched._admission_key(req), name, req)
+                   for name, sched in self.models.items()
+                   for req in sched.queue]
+        waiting.sort(key=lambda t: t[0])
+        return [(name, req) for _key, name, req in waiting]
+
+    def _admit_global(self) -> None:
+        for sched in self.models.values():
+            sched._adopt_engine_queue()
+        for name, req in self.admission_order():
+            sched = self.models[name]
+            free = sched.engine.free_slots()
+            if not free:
+                continue            # this tenant is full; others may admit
+            # remove by identity: Request's dataclass __eq__ compares the
+            # ndarray prompt, so list.remove would raise on a uid tie
+            idx = next(i for i, r in enumerate(sched.queue) if r is req)
+            del sched.queue[idx]
+            sched.engine.assign(req, free[0])
+
+    # -- ticks ----------------------------------------------------------------
+    @property
+    def pending(self) -> bool:
+        return any(s.pending for s in self.models.values())
+
+    def tick(self) -> Dict[str, List[Request]]:
+        """One tenancy tick: one global EDF-with-priority admission pass,
+        then one scheduler tick per tenant with pending work (each tick
+        streams that tenant's cold pages through the shared pool, then
+        prefills/decodes).  Tenants tick in registration order — the
+        deterministic pass order the pool counter prediction relies on.
+        Returns {model: requests finished this tick}."""
+        self._admit_global()
+        finished: Dict[str, List[Request]] = {}
+        for name, sched in self.models.items():
+            if not sched.pending:
+                continue
+            done = sched.tick()
+            if sched.engine.pager is not None:
+                self.pass_log.append(name)
+            if done:
+                finished[name] = done
+        self.ticks += 1
+        return finished
+
+    def run_until_done(self, max_ticks: int = 100_000
+                       ) -> Dict[str, List[Request]]:
+        """Serve until every tenant's queue drains; ``max_ticks`` bounds
+        this call, and the return value is {model: requests completed by
+        this call}."""
+        done: Dict[str, List[Request]] = {}
+        ticks = 0
+        while self.pending:
+            for name, reqs in self.tick().items():
+                done.setdefault(name, []).extend(reqs)
+            ticks += 1
+            if ticks > max_ticks:
+                raise RuntimeError("tenancy loop did not converge")
+        return done
+
+    def run_for(self, seconds: float) -> Dict[str, List[Request]]:
+        """Serve until the wall budget is spent or every queue drains;
+        returns the per-model requests completed by this call."""
+        t0 = self.clock()
+        done: Dict[str, List[Request]] = {}
+        while self.pending and (self.clock() - t0) < seconds:
+            for name, reqs in self.tick().items():
+                done.setdefault(name, []).extend(reqs)
+        return done
+
+    # -- metrics / lifecycle --------------------------------------------------
+    def summary(self) -> Dict:
+        """The ``repro.serving.metrics/v2`` multi-model document."""
+        models = {name: sched.metrics.summary(
+                      paging=sched.engine.paging_summary())
+                  for name, sched in self.models.items()}
+        return multi_summary(
+            models,
+            shared_pool=self.pool.summary() if self.pool else None,
+            ticks=self.ticks)
+
+    def to_json(self, **extra) -> str:
+        doc = self.summary()
+        doc.update(extra)
+        return json.dumps(doc, indent=2, sort_keys=False)
+
+    def write(self, path: str, **extra) -> None:
+        with open(path, "w") as fh:
+            fh.write(self.to_json(**extra) + "\n")
+
+    def close(self, wait: bool = True) -> None:
+        """Shut every tenant's pager down (through the pool when one is
+        shared)."""
+        if self.pool is not None:
+            self.pool.close(wait=wait)
+        for sched in self.models.values():
+            if sched.engine.pager is not None:
+                sched.engine.pager.close(wait=wait)
+
+    def __enter__(self) -> "MultiScheduler":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False

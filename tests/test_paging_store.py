@@ -57,6 +57,40 @@ def test_schedule_invariants(n_pages, slots):
         assert e.prefetch_next == e.page + 1
 
 
+@pytest.mark.parametrize("n_pages", list(range(1, 13)))
+def test_schedule_single_slot_demand_fetches(n_pages):
+    """Regression: resident_slots=1 used to emit entries whose
+    ``evicts == page`` (prefetching k+1 evicts the in-use page k), which
+    validate_schedule rejects.  A single live slot has nowhere to
+    double-buffer: no prefetch, demand-fetch every page, and the static
+    pass counters predict swaps == misses == n_pages."""
+    sched = paging.make_schedule(n_pages, resident_slots=1)
+    paging.validate_schedule(sched, resident_slots=1)
+    assert [e.page for e in sched] == list(range(n_pages))
+    assert all(e.prefetch_next is None for e in sched)
+    assert all(e.evicts != e.page for e in sched)
+    pc = paging.pass_counters(n_pages, resident_slots=1)
+    assert pc == dict(swaps=n_pages, misses=n_pages)
+
+
+def test_make_schedule_rejects_zero_slots():
+    with pytest.raises(ValueError, match="resident_slots"):
+        paging.make_schedule(4, resident_slots=0)
+
+
+def test_host_paged_store_single_slot_streams_all(rng):
+    """A resident_slots=1 streaming pass serves every page (demand
+    fetches, no prefetch) instead of streaming a broken schedule."""
+    params = _params(rng, n_layers=6, d=32)
+    store = freeze(params, uniform_policy(8, min_size=16))
+    paged = paging.HostPagedStore(store, page_bytes=2 * 32 * 32)
+    seen = [n for _page, ps in paged.stream(resident_slots=1) for n in ps]
+    assert seen == list(store.params.keys())
+    assert paged.miss_count == len(paged.pages)      # every fetch a miss
+    assert paged.swap_count == len(paged.pages)
+    paged.close()
+
+
 def test_build_pages_order_and_limit(rng):
     params = _params(rng, n_layers=8, d=32)
     store = freeze(params, uniform_policy(8, min_size=16))

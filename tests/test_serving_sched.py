@@ -416,6 +416,8 @@ def test_pass_counters_prediction():
 # ---------------------------------------------------------------------------
 
 def test_metrics_schema_and_deadlines():
+    from repro.serving import validate
+
     rec = MetricsRecorder(clock=lambda: 0.0)
     rec.record_tick(latency_s=0.002, paging_stall_s=0.0005)
     rec.record_tick(latency_s=0.004, paging_stall_s=0.0)
@@ -432,11 +434,13 @@ def test_metrics_schema_and_deadlines():
         rec.record_request(r)
     doc = rec.summary(paging=dict(swap_count=6, miss_count=2,
                                   stall_s=0.001, n_pages=3))
-    assert doc["schema"] == "repro.serving.metrics/v1"
+    validate(doc)
+    assert doc["schema"] == "repro.serving.metrics/v2"
     assert doc["deadlines"] == dict(with_deadline=2, missed=1,
-                                    miss_rate=0.5)
+                                    miss_rate=0.5, truncated=0)
     assert doc["requests"]["count"] == 3
     assert doc["requests"]["tokens_out"] == 6
+    assert doc["requests"]["truncated"] == 0
     assert doc["ticks"]["count"] == 2
     assert doc["ticks"]["latency_ms"]["max"] == pytest.approx(4.0)
     assert doc["paging"]["swap_count"] == 6
@@ -447,6 +451,84 @@ def test_metrics_schema_and_deadlines():
         (0.005 + 0.02) / 2 * 1e3)
     import json
     json.loads(rec.to_json())              # serializable end to end
+
+
+def test_metrics_truncated_excluded_from_miss_rate():
+    """A deadline-carrying request retired by cache exhaustion is labeled
+    truncated and EXCLUDED from the miss rate (partial service is neither
+    a met nor a missed deadline)."""
+    rec = MetricsRecorder(clock=lambda: 0.0)
+    trunc = Request(uid=0, prompt=np.arange(3, dtype=np.int32),
+                    deadline_ms=10.0, stream="xr", truncated=True)
+    trunc.arrival_s, trunc.finish_s = 0.0, 0.5     # would have missed
+    met = Request(uid=1, prompt=np.arange(3, dtype=np.int32),
+                  deadline_ms=10.0, stream="xr")
+    met.arrival_s, met.finish_s = 0.0, 0.005
+    for r in (trunc, met):
+        r.generated = [1]
+        rec.record_request(r)
+    doc = rec.summary()
+    assert doc["deadlines"] == dict(with_deadline=1, missed=0,
+                                    miss_rate=0.0, truncated=1)
+    assert doc["requests"]["truncated"] == 1
+    assert doc["streams"]["xr"]["truncated"] == 1
+    assert doc["streams"]["xr"]["miss_rate"] == 0.0
+
+
+def test_metrics_deadline_met_exactly_at_bound():
+    """latency * 1e3 == deadline_ms is a MET deadline (<=, not <)."""
+    rec = MetricsRecorder(clock=lambda: 0.0)
+    r = Request(uid=0, prompt=np.arange(2, dtype=np.int32),
+                deadline_ms=10.0)
+    r.arrival_s, r.finish_s = 0.0, 0.010
+    r.generated = [1]
+    rec_r = rec.record_request(r)
+    assert rec_r.deadline_met is True
+    doc = rec.summary()
+    assert doc["deadlines"] == dict(with_deadline=1, missed=0,
+                                    miss_rate=0.0, truncated=0)
+
+
+def test_metrics_stream_with_only_best_effort_requests():
+    """A stream whose requests all lack deadlines still gets a section —
+    count populated, miss_rate 0.0 (not a division by zero)."""
+    rec = MetricsRecorder(clock=lambda: 0.0)
+    for uid in range(2):
+        r = Request(uid=uid, prompt=np.arange(2, dtype=np.int32),
+                    stream="bg")
+        r.arrival_s, r.first_token_s, r.finish_s = 0.0, 0.001, 0.002
+        r.generated = [1]
+        rec.record_request(r)
+    doc = rec.summary()
+    assert doc["streams"]["bg"] == dict(
+        count=2, missed=0, miss_rate=0.0, truncated=0,
+        p99_ttft_ms=pytest.approx(1.0))
+    assert doc["deadlines"]["with_deadline"] == 0
+
+
+def test_quantiles_single_sample():
+    from repro.serving.metrics import quantiles
+    q = quantiles([7.0])
+    assert q == dict(mean=7.0, p50=7.0, p99=7.0, max=7.0)
+
+
+def test_record_request_engine_only():
+    """An engine-only Request (no scheduler stamps: never admitted through
+    a Scheduler, so priority/deadline/arrival defaults) must fold into a
+    record without blowing up the aggregation."""
+    rec = MetricsRecorder(clock=lambda: 0.0)
+    r = Request(uid=0, prompt=np.arange(4, dtype=np.int32))
+    r.generated = [1, 2, 3]
+    rec_r = rec.record_request(r)
+    assert rec_r.ttft_s is None and rec_r.latency_s is None
+    assert rec_r.deadline_met is None
+    doc = rec.summary()
+    assert doc["requests"]["count"] == 1
+    assert doc["requests"]["tokens_out"] == 3
+    assert doc["requests"]["ttft_ms"] == dict(mean=0.0, p50=0.0, p99=0.0,
+                                              max=0.0)
+    assert doc["deadlines"] == dict(with_deadline=0, missed=0,
+                                    miss_rate=0.0, truncated=0)
 
 
 def test_scheduler_records_metrics(rng, packed):
@@ -461,6 +543,6 @@ def test_scheduler_records_metrics(rng, packed):
     doc = s.metrics.summary(paging=eng.paging_summary())
     assert doc["requests"]["count"] == 3
     assert doc["deadlines"] == dict(with_deadline=3, missed=0,
-                                    miss_rate=0.0)
+                                    miss_rate=0.0, truncated=0)
     assert doc["ticks"]["count"] == s.ticks
     assert doc["throughput"]["tok_per_s"] > 0

@@ -1,0 +1,391 @@
+"""Multi-model tenancy (serving/tenancy + core/paging.SharedPagePool)
+plus the scheduler/paging bugfix sweep that rode along in the same PR:
+single-slot schedules, per-call run loops, truncated-request accounting,
+and non-positive prefill pacing.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.paging import SharedPagePool, pass_counters, \
+    shared_pass_counters
+from repro.core.placement import PlacementPlan, packed_sizes, plan_for_budget
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import freeze_for_serving
+from repro.serving import (MultiScheduler, Request, Scheduler,
+                           ServingEngine, validate)
+
+CFG_A = ModelConfig(name="tinyA", family="dense", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                    head_dim=16, remat=False)
+CFG_B = ModelConfig(name="tinyB", family="dense", n_layers=2, d_model=48,
+                    n_heads=4, n_kv_heads=2, d_ff=96, vocab_size=256,
+                    head_dim=12, remat=False)
+
+
+@pytest.fixture(scope="module")
+def packed_a():
+    return freeze_for_serving(tfm.init_params(CFG_A, jax.random.PRNGKey(0)),
+                              bits=8)
+
+
+@pytest.fixture(scope="module")
+def packed_b():
+    return freeze_for_serving(tfm.init_params(CFG_B, jax.random.PRNGKey(1)),
+                              bits=8)
+
+
+def _half_paged_plan(packed):
+    sizes = packed_sizes(packed)
+    plan = plan_for_budget(sizes, sum(sizes.values()) // 2)
+    assert plan.paged_bytes(sizes) > 0
+    return plan
+
+
+def _prompts(rng, n=4):
+    return [rng.integers(0, 256, 3 + 4 * i).astype(np.int32)
+            for i in range(n)]
+
+
+def _serve_solo(cfg, packed, prompts, *, seed=0, max_new=5):
+    eng = ServingEngine(cfg, packed, batch_slots=2, max_len=64,
+                        plan=_half_paged_plan(packed), seed=seed)
+    eng.attach_paging()
+    s = Scheduler(eng, prefill_chunk=8)
+    for uid, p in enumerate(prompts):
+        s.submit(Request(uid=uid, prompt=p, max_new_tokens=max_new))
+    done = s.run_until_done()
+    out = {r.uid: r.generated for r in done}
+    eng.pager.close()
+    return out
+
+
+def _serve_tenants(packed_a, packed_b, prompts, budget_bytes, *, max_new=5):
+    eng_a = ServingEngine(CFG_A, packed_a, batch_slots=2, max_len=64,
+                          plan=_half_paged_plan(packed_a), seed=0)
+    eng_b = ServingEngine(CFG_B, packed_b, batch_slots=2, max_len=64,
+                          plan=_half_paged_plan(packed_b), seed=1)
+    ms = MultiScheduler(pool=SharedPagePool(budget_bytes))
+    ms.add_model("a", eng_a, prefill_chunk=8)
+    ms.add_model("b", eng_b, prefill_chunk=8)
+    for uid, p in enumerate(prompts):
+        ms.submit("a", Request(uid=uid, prompt=p, max_new_tokens=max_new))
+        ms.submit("b", Request(uid=uid, prompt=p, max_new_tokens=max_new))
+    done = ms.run_until_done()
+    return ms, done
+
+
+def _paged_bytes(packed):
+    sizes = packed_sizes(packed)
+    plan = _half_paged_plan(packed)
+    return sum(v for k, v in sizes.items() if plan.placement_for(k).paged)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: MultiScheduler over a SharedPagePool
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("budget", ["roomy", "tight"])
+def test_tenants_bit_exact_vs_solo_and_counters(rng, packed_a, packed_b,
+                                                budget):
+    """Two ServingEngines under one MultiScheduler and one SharedPagePool
+    budget produce tokens bit-exact vs each model served alone on a
+    private pager, and the per-model pool counters match the static
+    shared_pass_counters prediction — under both a roomy budget (pool
+    hits after the first tick) and a tight one (cross-model eviction
+    churn)."""
+    prompts = _prompts(rng)
+    solo_a = _serve_solo(CFG_A, packed_a, prompts, seed=0)
+    solo_b = _serve_solo(CFG_B, packed_b, prompts, seed=1)
+
+    cold = _paged_bytes(packed_a) + _paged_bytes(packed_b)
+    budget_bytes = (1 << 30) if budget == "roomy" else int(cold * 0.6)
+    ms, done = _serve_tenants(packed_a, packed_b, prompts, budget_bytes)
+
+    assert {r.uid: r.generated for r in done["a"]} == solo_a
+    assert {r.uid: r.generated for r in done["b"]} == solo_b
+
+    pred = shared_pass_counters(
+        {"a": [p.nbytes for p in ms.model("a").engine.pager.pages],
+         "b": [p.nbytes for p in ms.model("b").engine.pager.pages]},
+        budget_bytes, resident_slots=2, passes=ms.pass_log)
+    summ = ms.pool.summary()
+    for m in ("a", "b"):
+        got = {k: summ["models"][m][k]
+               for k in ("swaps", "misses", "pool_hits", "evicted")}
+        assert got == pred[m], (m, got, pred[m])
+    if budget == "tight":
+        assert summ["evictions"] > 0        # contention actually happened
+        assert summ["live_bytes"] <= budget_bytes
+    else:
+        assert summ["evictions"] == 0
+        # after tick 1 every pass rides the pool: swaps stop at one fetch
+        # per page per model
+        assert summ["models"]["a"]["swaps"] == len(
+            ms.model("a").engine.pager.pages)
+    ms.close()
+
+
+def test_pool_rejects_private_pager_and_duplicates(packed_a):
+    eng = ServingEngine(CFG_A, packed_a, batch_slots=1, max_len=64,
+                        plan=_half_paged_plan(packed_a))
+    eng.attach_paging()                     # private pager
+    ms = MultiScheduler(shared_budget_bytes=1 << 20)
+    with pytest.raises(ValueError, match="private pager"):
+        ms.add_model("a", eng)
+    eng.pager.close()
+    eng2 = ServingEngine(CFG_A, packed_a, batch_slots=1, max_len=64,
+                         plan=_half_paged_plan(packed_a))
+    ms.add_model("a", eng2)
+    with pytest.raises(ValueError, match="already registered"):
+        ms.add_model("a", eng2)
+    ms.close()
+
+
+def test_fully_resident_tenant_skips_paging(packed_a, rng):
+    """A tenant whose plan pages nothing serves resident — no pager, no
+    pool membership — alongside a paged co-tenant."""
+    eng_res = ServingEngine(CFG_A, packed_a, batch_slots=1, max_len=64,
+                            plan=PlacementPlan.uniform())
+    eng_paged = ServingEngine(CFG_B,
+                              freeze_for_serving(
+                                  tfm.init_params(CFG_B,
+                                                  jax.random.PRNGKey(1)),
+                                  bits=8),
+                              batch_slots=1, max_len=64, seed=1,
+                              plan=_half_paged_plan(freeze_for_serving(
+                                  tfm.init_params(CFG_B,
+                                                  jax.random.PRNGKey(1)),
+                                  bits=8)))
+    ms = MultiScheduler(shared_budget_bytes=1 << 20)
+    ms.add_model("res", eng_res)
+    ms.add_model("paged", eng_paged)
+    assert eng_res.pager is None and eng_paged.pager is not None
+    p = rng.integers(0, 256, 5).astype(np.int32)
+    ms.submit("res", Request(uid=0, prompt=p, max_new_tokens=2))
+    ms.submit("paged", Request(uid=0, prompt=p, max_new_tokens=2))
+    done = ms.run_until_done()
+    assert len(done["res"]) == 1 and len(done["paged"]) == 1
+    assert ms.pass_log and all(m == "paged" for m in ms.pass_log)
+    ms.close()
+
+
+def test_global_edf_admission_order(packed_a, packed_b):
+    """One admission loop across tenants: priority class first, EDF
+    within a class, regardless of which model a request belongs to."""
+    clock = [0.0]
+    ms = MultiScheduler(clock=lambda: clock[0])
+    ms.add_model("a", ServingEngine(CFG_A, packed_a, batch_slots=1,
+                                    max_len=64))
+    ms.add_model("b", ServingEngine(CFG_B, packed_b, batch_slots=1,
+                                    max_len=64))
+    ms.add_stream("a", "assistant", priority=0)
+    ms.add_stream("b", "tracker", priority=2, deadline_ms=50.0)
+    p = np.arange(4, dtype=np.int32)
+    ms.submit("a", Request(uid=0, prompt=p), stream="assistant")
+    ms.submit("b", Request(uid=1, prompt=p), stream="tracker")
+    ms.submit("b", Request(uid=2, prompt=p, deadline_ms=5.0, priority=2),
+              stream="tracker")
+    ms.submit("a", Request(uid=3, prompt=p, priority=1), stream="assistant")
+    order = [(m, r.uid) for m, r in ms.admission_order()]
+    assert order == [("b", 2), ("b", 1), ("a", 3), ("a", 0)]
+    ms.close()
+
+
+def test_global_admission_survives_duplicate_uids(rng, packed_a):
+    """uid uniqueness is never enforced; global admission must remove the
+    admitted request by IDENTITY (Request's dataclass __eq__ compares the
+    ndarray prompt, so list.remove would raise on a uid tie)."""
+    ms = MultiScheduler()
+    ms.add_model("a", ServingEngine(CFG_A, packed_a, batch_slots=1,
+                                    max_len=64))
+    for p in (rng.integers(0, 256, 3).astype(np.int32),
+              rng.integers(0, 256, 3).astype(np.int32)):
+        ms.submit("a", Request(uid=0, prompt=p, max_new_tokens=2))
+    done = ms.run_until_done()
+    assert len(done["a"]) == 2
+    ms.close()
+
+
+def test_pool_never_fit_page_does_not_flush_cotenants():
+    """A page larger than the whole budget can never be cached — admitting
+    it must not evict co-tenants' pool entries for zero benefit."""
+    pred = shared_pass_counters({"small": [40, 40], "huge": [200]},
+                                budget_bytes=100, ticks=2)
+    # 'small' keeps its pool hits on tick 2; 'huge' never evicts anyone
+    assert pred["small"] == dict(swaps=2, misses=2, pool_hits=2, evicted=0)
+    assert pred["huge"] == dict(swaps=2, misses=2, pool_hits=0, evicted=0)
+    pool = SharedPagePool(100)
+
+    class _Stub:
+        pages = []
+        swap_count = miss_count = 0
+    pool.register("small", _Stub())
+    pool.register("huge", _Stub())
+    pool.admit("small", 0, 40, {})
+    pool.admit("small", 1, 40, {})
+    pool.admit("huge", 0, 200, {})          # never fits: no eviction
+    assert pool.live_bytes == 80
+    assert pool.lookup("small", 0) is not None
+    assert pool.counters["small"]["evicted"] == 0
+
+
+def test_multi_metrics_v2_document(rng, packed_a, packed_b):
+    prompts = _prompts(rng, n=2)
+    cold = _paged_bytes(packed_a) + _paged_bytes(packed_b)
+    ms, done = _serve_tenants(packed_a, packed_b, prompts, int(cold * 0.6),
+                              max_new=3)
+    doc = validate(ms.summary())
+    assert set(doc["models"]) == {"a", "b"}
+    for m in ("a", "b"):
+        assert doc["models"][m]["requests"]["count"] == len(prompts)
+        assert doc["models"][m]["paging"]["swap_count"] > 0
+        assert doc["shared_pool"]["models"][m]["n_pages"] >= 1
+    assert doc["totals"]["requests"] == 2 * len(prompts)
+    assert doc["totals"]["tokens_out"] == sum(
+        len(r.generated) for rs in done.values() for r in rs)
+    assert doc["ticks"]["count"] == ms.ticks
+    import json
+    json.loads(ms.to_json())
+    ms.close()
+
+
+def test_single_slot_paged_serving_bit_exact(rng, packed_a):
+    """attach_paging(resident_slots=1) streams a VALID schedule (the old
+    make_schedule emitted evicts==page and validate_schedule rejected
+    it): demand-fetch every page, tokens bit-exact vs the resident plan,
+    counters == ticks x the single-slot pass prediction."""
+    prompts = _prompts(rng, n=3)
+
+    def serve(plan, paged):
+        eng = ServingEngine(CFG_A, packed_a, batch_slots=2, max_len=64,
+                            plan=plan)
+        if paged:
+            eng.attach_paging(resident_slots=1)
+        s = Scheduler(eng, prefill_chunk=8)
+        for uid, p in enumerate(prompts):
+            s.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
+        done = s.run_until_done()
+        return {r.uid: r.generated for r in done}, s, eng
+
+    mixed, s, eng = serve(_half_paged_plan(packed_a), paged=True)
+    resident, _, _ = serve(PlacementPlan.uniform(), paged=False)
+    assert mixed == resident
+    n_pages = len(eng.pager.pages)
+    per_pass = pass_counters(n_pages, resident_slots=1)
+    assert per_pass == dict(swaps=n_pages, misses=n_pages)
+    assert eng.swap_count == s.ticks * per_pass["swaps"]
+    assert eng.miss_count == s.ticks * per_pass["misses"]
+    eng.pager.close()
+
+
+# ---------------------------------------------------------------------------
+# bugfix sweep: scheduler reuse, truncation, pacing validation
+# ---------------------------------------------------------------------------
+
+def test_scheduler_reuse_counts_ticks_per_call(rng, packed_a):
+    """A reused scheduler must not trip "did not converge" because the
+    cumulative self.ticks crossed max_ticks, and each run returns only
+    the requests completed by THAT call."""
+    eng = ServingEngine(CFG_A, packed_a, batch_slots=1, max_len=64)
+    s = Scheduler(eng)
+    p = rng.integers(0, 256, 4).astype(np.int32)
+    s.submit(Request(uid=0, prompt=p, max_new_tokens=8))
+    first = s.run_until_done(max_ticks=10)
+    assert [r.uid for r in first] == [0]
+    assert s.ticks >= 7                       # cumulative > next call's cap
+    s.submit(Request(uid=1, prompt=p, max_new_tokens=2))
+    second = s.run_until_done(max_ticks=5)    # old code: spurious failure
+    assert [r.uid for r in second] == [1]     # per-call, not all-time
+    assert [r.uid for r in s.finished] == [0, 1]   # all-time list intact
+
+
+def test_run_for_returns_per_call_completions(rng, packed_a):
+    eng = ServingEngine(CFG_A, packed_a, batch_slots=1, max_len=64)
+    s = Scheduler(eng)
+    p = rng.integers(0, 256, 3).astype(np.int32)
+    s.submit(Request(uid=0, prompt=p, max_new_tokens=2))
+    first = s.run_for(seconds=60.0)
+    assert [r.uid for r in first] == [0]
+    s.submit(Request(uid=1, prompt=p, max_new_tokens=2))
+    second = s.run_for(seconds=60.0)
+    assert [r.uid for r in second] == [1]
+
+
+def test_engine_run_until_done_per_call(rng, packed_a):
+    eng = ServingEngine(CFG_A, packed_a, batch_slots=1, max_len=64)
+    p = rng.integers(0, 256, 3).astype(np.int32)
+    eng.submit(Request(uid=0, prompt=p, max_new_tokens=2))
+    assert [r.uid for r in eng.run_until_done()] == [0]
+    eng.submit(Request(uid=1, prompt=p, max_new_tokens=2))
+    assert [r.uid for r in eng.run_until_done()] == [1]
+    assert [r.uid for r in eng.finished] == [0, 1]
+
+
+def test_cache_exhaustion_sets_truncated(rng, packed_a):
+    """A request whose KV cache runs out before max_new_tokens is flagged
+    truncated; a naturally completed one is not."""
+    eng = ServingEngine(CFG_A, packed_a, batch_slots=2, max_len=16)
+    cut = Request(uid=0, prompt=rng.integers(0, 256, 8).astype(np.int32),
+                  max_new_tokens=1000)      # cannot fit: must truncate
+    ok = Request(uid=1, prompt=rng.integers(0, 256, 4).astype(np.int32),
+                 max_new_tokens=2)
+    eng.submit(cut)
+    eng.submit(ok)
+    done = {r.uid: r for r in eng.run_until_done()}
+    assert done[0].truncated and len(done[0].generated) < 1000
+    assert not done[1].truncated and len(done[1].generated) == 2
+
+
+def test_truncated_propagates_through_scheduler_metrics(rng, packed_a):
+    eng = ServingEngine(CFG_A, packed_a, batch_slots=1, max_len=16)
+    s = Scheduler(eng)
+    s.add_stream("xr", priority=1, deadline_ms=1e6)
+    s.submit(Request(uid=0, prompt=rng.integers(0, 256, 8).astype(np.int32),
+                     max_new_tokens=1000), stream="xr")
+    done = s.run_until_done()
+    assert done[0].truncated
+    doc = s.metrics.summary()
+    assert doc["requests"]["truncated"] == 1
+    # the (generous) deadline would have been met, but partial service is
+    # excluded from the rate and labeled instead
+    assert doc["deadlines"] == dict(with_deadline=0, missed=0,
+                                    miss_rate=0.0, truncated=1)
+    assert doc["streams"]["xr"]["truncated"] == 1
+
+
+def test_nonpositive_prefill_chunk_rejected(packed_a):
+    for bad in (0, -4):
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            ServingEngine(CFG_A, packed_a, batch_slots=1, max_len=64,
+                          prefill_chunk=bad)
+        eng = ServingEngine(CFG_A, packed_a, batch_slots=1, max_len=64)
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            Scheduler(eng, prefill_chunk=bad)
+    # None still means "engine default pacing"
+    assert Scheduler(ServingEngine(CFG_A, packed_a, batch_slots=1,
+                                   max_len=64)).prefill_chunk is None
+
+
+def test_shared_pass_counters_roomy_budget_closed_form():
+    """With a budget that fits everything, the prediction reduces to the
+    closed form: per model, first tick swaps == n_pages, later ticks ride
+    the pool (pool_hits == n_pages per pass), misses == passes."""
+    pages = {"a": [100, 100, 100], "b": [80, 80]}
+    pred = shared_pass_counters(pages, budget_bytes=10_000, ticks=3)
+    for m, n in (("a", 3), ("b", 2)):
+        assert pred[m]["swaps"] == n
+        assert pred[m]["misses"] == 3            # one demand miss per pass
+        assert pred[m]["pool_hits"] == 2 * n     # ticks 2..3 fully pooled
+        assert pred[m]["evicted"] == 0
+
+
+def test_shared_pass_counters_starved_budget_closed_form():
+    """A budget smaller than any single page can never cache: every fetch
+    is a host->device swap, no pool hits, no evictions."""
+    pages = {"a": [100, 100], "b": [100]}
+    pred = shared_pass_counters(pages, budget_bytes=50, ticks=2)
+    assert pred["a"] == dict(swaps=4, misses=2, pool_hits=0, evicted=0)
+    assert pred["b"] == dict(swaps=2, misses=2, pool_hits=0, evicted=0)
