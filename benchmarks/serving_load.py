@@ -17,11 +17,21 @@ bytes), asserts the pool counters against the static
 tenant's tokens bit-exact versus serving that model alone on a private
 pager.
 
-Emits the ``repro.serving.metrics/v2`` multi document (default
+Paged weights stream through the **async overlapped pipeline** by
+default: tick t+1's host->device pass is begun while tick t computes and
+fenced at first use, so the metrics split paging stall into *exposed*
+(blocked the tick) and *hidden* (rode behind compute).  ``--sync-io``
+runs the pre-overlap blocking schedule instead — CI runs the smoke bench
+both ways and asserts the async run hides a nonzero fraction
+(``overlap_frac > 0``) while tokens and swap/miss counters stay
+identical.  A micro-bench section times the cached thread-template tick
+threading against the old full-tree rebuild.
+
+Emits the ``repro.serving.metrics/v3`` multi document (default
 ``BENCH_serving.json``; the single-model summary rides along under
 ``single_model``) — tok/s, p99 tick latency, TTFT, deadline-miss rate,
-paging stalls, shared-pool contention — the bench-trajectory artefact
-for serving PRs.
+exposed/hidden paging stalls, shared-pool contention — the
+bench-trajectory artefact for serving PRs.
 
 Run:  PYTHONPATH=src python benchmarks/serving_load.py --smoke
 """
@@ -82,7 +92,8 @@ def _bench_multi(args):
     cold = sum(plan.paged_bytes(packed_sizes(packed))
                for _c, packed, plan in tenants.values())
     budget = max(int(cold * args.shared_budget_frac), 1)
-    ms = MultiScheduler(pool=SharedPagePool(budget) if cold else None)
+    ms = MultiScheduler(pool=SharedPagePool(budget) if cold else None,
+                        async_io=args.async_io)
     for name, (cfg, packed, plan) in tenants.items():
         eng = ServingEngine(cfg, packed, batch_slots=args.slots,
                             max_len=args.max_len, plan=plan,
@@ -118,7 +129,8 @@ def _bench_multi(args):
                                 seed=args.seed)
             if plan.paged_bytes(packed_sizes(packed)) > 0:
                 eng.attach_paging()
-            solo = Scheduler(eng, prefill_chunk=args.prefill_chunk)
+            solo = Scheduler(eng, prefill_chunk=args.prefill_chunk,
+                             async_io=args.async_io)
             for sname, kw in STREAMS:
                 solo.add_stream(sname, **kw)
             for req in _tenant_reqs(cfg, args, salt):
@@ -158,6 +170,13 @@ def main(argv=None):
                     help="SharedPagePool budget as a fraction of the "
                          "tenants' combined cold bytes (the cross-model "
                          "contention knob)")
+    io = ap.add_mutually_exclusive_group()
+    io.add_argument("--async-io", dest="async_io", action="store_true",
+                    default=True,
+                    help="overlapped page streaming (default)")
+    io.add_argument("--sync-io", dest="async_io", action="store_false",
+                    help="blocking stream-then-step ticks (the overlap "
+                         "baseline CI compares against)")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -172,7 +191,8 @@ def main(argv=None):
                         max_len=args.max_len, plan=plan, seed=args.seed)
     if plan.paged_bytes(sizes) > 0:
         eng.attach_paging()
-    sched = Scheduler(eng, prefill_chunk=args.prefill_chunk)
+    sched = Scheduler(eng, prefill_chunk=args.prefill_chunk,
+                      async_io=args.async_io)
     for name, kw in STREAMS:
         sched.add_stream(name, **kw)
 
@@ -182,15 +202,45 @@ def main(argv=None):
 
     done = sched.run_until_done()
     summary = validate(sched.metrics.summary(paging=eng.paging_summary()))
+    if args.async_io and eng.pager is not None:
+        # the overlapped pipeline must actually hide stream time behind
+        # compute (the first tick's demand fence is the only fully
+        # exposed pass) — the CI acceptance gate for the async path
+        assert summary["paging"]["overlap_frac"] > 0.0, \
+            "async run hid no paging stall (overlap_frac == 0)"
+        assert summary["paging"]["hidden_s"] > 0.0
+
+    tick_overhead = None
+    if eng.pager is not None:
+        # satellite micro-bench: cached thread-template threading vs the
+        # old per-tick full-tree rebuild (one extra pass is streamed for
+        # the probe, AFTER the counters above were recorded)
+        import time as _time
+        from repro.core.paging import thread_packed
+        dev = eng.pager.begin_pass(eng.page_resident_slots).fence()
+        reps = 20
+        t0 = _time.perf_counter()
+        for _ in range(reps):
+            eng._thread_tick(dev)
+        cached_us = (_time.perf_counter() - t0) / reps * 1e6
+        t0 = _time.perf_counter()
+        for _ in range(reps):
+            thread_packed(eng.params, dev)
+        rebuild_us = (_time.perf_counter() - t0) / reps * 1e6
+        tick_overhead = dict(thread_cached_us=cached_us,
+                             thread_rebuild_us=rebuild_us,
+                             speedup=rebuild_us / max(cached_us, 1e-9))
     if eng.pager is not None:
         eng.pager.close()
 
     multi_doc, multi_cfg = _bench_multi(args)
     multi_doc["single_model"] = summary
+    multi_doc["tick_overhead"] = tick_overhead
     multi_doc["config"] = dict(arch=cfg.name, smoke=args.smoke,
                                requests=args.requests, slots=args.slots,
                                budget_bytes=budget,
                                prefill_chunk=sched.prefill_chunk,
+                               async_io=args.async_io,
                                multi=multi_cfg)
     validate(multi_doc)
     import json
@@ -203,10 +253,18 @@ def main(argv=None):
     # harness contract: name,us_per_call,derived
     print(f"serving_tick,{ticks['latency_ms']['p50'] * 1e3:.2f},"
           f"p99_ms={ticks['latency_ms']['p99']:.2f}")
+    pg = summary["paging"]
     print(f"serving_load,{1e6 / max(thr['tok_per_s'], 1e-9):.2f},"
           f"tok_per_s={thr['tok_per_s']:.1f}"
           f";miss_rate={dl['miss_rate']:.3f}"
-          f";swaps={summary['paging']['swap_count']}")
+          f";swaps={pg['swap_count']}"
+          f";exposed_ms={pg['exposed_s'] * 1e3:.2f}"
+          f";hidden_ms={pg['hidden_s'] * 1e3:.2f}"
+          f";overlap={pg['overlap_frac']:.3f}")
+    if tick_overhead is not None:
+        print(f"serving_thread_cache,{tick_overhead['thread_cached_us']:.2f},"
+              f"rebuild_us={tick_overhead['thread_rebuild_us']:.2f}"
+              f";speedup={tick_overhead['speedup']:.1f}x")
     tot = multi_doc["totals"]
     pool = multi_doc["shared_pool"]
     print(f"serving_tenancy,{1e6 / max(tot['tok_per_s'], 1e-9):.2f},"

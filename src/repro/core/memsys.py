@@ -284,6 +284,36 @@ def layer_timing(layer: LayerShape, scenario: str,
                        regime)
 
 
+# ---------------------------------------------------------------------------
+# Proactive-swap overlap identity (paper §II-B2).
+#
+# A swap started while independent compute runs hides min(swap, compute) of
+# its latency; only the remainder lands on the critical path:
+#     stall += swap - hidden,   hidden = min(swap, compute)
+# This single identity drives three consumers that must agree: the
+# analytical StallModel walk (core.paging.StallModel), the static schedule
+# prediction, and the *measured* async-paging counters of the serving
+# runtime (AsyncPageStream records swap wall time and the compute window it
+# overlapped; its exposed/hidden split must equal this closed form).
+# ---------------------------------------------------------------------------
+
+def overlap_stall(swap_s: float, compute_s: float) -> Dict[str, float]:
+    """Exposed/hidden split of a ``swap_s`` transfer overlapped with
+    ``compute_s`` of independent compute.
+
+    ``exposed_s`` is the wait actually blocking the critical path,
+    ``hidden_s`` the part absorbed behind the MACs — the At-MRAM reading
+    of §II-B2, and the check the serving runtime's measured per-tick
+    counters are asserted against (predicted-vs-measured agreement)."""
+    swap_s = max(float(swap_s), 0.0)
+    compute_s = max(float(compute_s), 0.0)
+    hidden = min(swap_s, compute_s)
+    exposed = swap_s - hidden
+    return dict(swap_s=swap_s, compute_s=compute_s, hidden_s=hidden,
+                exposed_s=exposed,
+                overlap_frac=(hidden / swap_s) if swap_s > 0 else 0.0)
+
+
 Scenarios = Union[str, Sequence[str], PlacementPlan]
 
 

@@ -12,12 +12,24 @@ TPU-native realization: layer-granular weight pages live in host memory
 ("off-chip flash"); a double-buffered prefetcher moves page k+1 host->HBM
 while page k's layers execute.  The same schedule object also drives the
 analytical stall model used by the memsys benchmarks.
+
+Two streaming modes share one schedule and one set of counters:
+
+  * :meth:`HostPagedStore.stream` — the synchronous pass (iterate pages
+    in access order, prefetch one ahead);
+  * :meth:`HostPagedStore.begin_pass` -> :class:`AsyncPageStream` — the
+    *overlapped* pass: the whole fetch loop is kicked up front and runs
+    while the caller computes; ``fence()`` joins at first use and splits
+    the pass wall into *exposed* wait (blocked the caller) and *hidden*
+    overlap, the measured counterpart of the analytical
+    ``stall += swap - hidden`` identity (:func:`memsys.overlap_stall`).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
@@ -90,6 +102,7 @@ class StallModel:
 
     def run(self, pages: Sequence[Page],
             compute_time_s: Sequence[float]) -> Dict[str, float]:
+        from repro.core.memsys import overlap_stall
         assert len(pages) == len(compute_time_s)
         total_compute = float(sum(compute_time_s))
         stall = 0.0
@@ -97,8 +110,7 @@ class StallModel:
         stall += pages[0].nbytes / self.swap_bandwidth_bytes_per_s
         for k in range(1, len(pages)):
             swap = pages[k].nbytes / self.swap_bandwidth_bytes_per_s
-            hidden = min(swap, compute_time_s[k - 1])
-            stall += swap - hidden
+            stall += overlap_stall(swap, compute_time_s[k - 1])["exposed_s"]
         return dict(total_compute_s=total_compute, stall_s=stall,
                     total_s=total_compute + stall,
                     stall_fraction=stall / max(total_compute + stall, 1e-12))
@@ -167,10 +179,13 @@ class SharedPagePool:
     contention: a tenant that fits alone starts thrashing when a
     co-tenant's working set squeezes it out.
 
-    All bookkeeping is deterministic for a given pass order (the
-    MultiScheduler ticks tenants sequentially and each store's prefetch
-    worker fetches pages in schedule order), so the per-model counters
-    follow the static :func:`shared_pass_counters` prediction exactly.
+    All bookkeeping is deterministic for a given pass order even when the
+    passes are *overlapped* (:meth:`HostPagedStore.begin_pass`): every
+    member store routes its page fetches through the pool's single shared
+    fetch worker, so fetches execute serialized in begin order — the same
+    lookup/admit sequence the sequential sync passes produce, which is why
+    the per-model counters follow the static :func:`shared_pass_counters`
+    prediction exactly with or without async overlap.
     """
 
     def __init__(self, budget_bytes: int):
@@ -184,13 +199,40 @@ class SharedPagePool:
         self._cache: "OrderedDict[Tuple[str, int], Tuple[int, Dict[str, PackedParam]]]" = OrderedDict()
         self.live_bytes = 0
         self.counters: Dict[str, Dict[str, Any]] = {}
+        # every member pass in BEGIN order — which, because all member
+        # fetches funnel through the single worker below, is also the
+        # order the pool actually executes them in.  This is the exact
+        # ``passes=`` sequence :func:`shared_pass_counters` needs, even
+        # when live submissions make tenants begin out of registration
+        # rotation (an idle tenant demand-begins only when it next ticks)
+        self.pass_log: List[str] = []
+        # ONE fetch worker for every member store: overlapped passes of
+        # different tenants serialize here in begin order, keeping the
+        # pool's lookup/admit sequence identical to the sync pass order
+        self._exec = ThreadPoolExecutor(max_workers=1)
+        # models whose pass fetches are still in flight — the async
+        # extension of the "fetcher's own pages are protected" guard:
+        # admit() never evicts pages of a model that is mid-fetch, so an
+        # overlapped pass's live window survives co-tenant admissions
+        self._active_fetch: set = set()
 
     def register(self, name: str, store: "HostPagedStore") -> None:
         with self._lock:
             if name in self.members:
                 raise ValueError(f"model {name!r} already joined this pool")
             self.members[name] = store
-            self.counters[name] = dict(pool_hits=0, evicted=0, stall_s=0.0)
+            self.counters[name] = dict(pool_hits=0, evicted=0,
+                                       exposed_s=0.0, hidden_s=0.0)
+
+    def _pass_begin(self, name: str) -> None:
+        """Mark ``name``'s pass fetches in flight (eviction-protected)."""
+        with self._lock:
+            self._active_fetch.add(name)
+
+    def _pass_end(self, name: str) -> None:
+        """Release the fetch guard (idempotent — also called on cancel)."""
+        with self._lock:
+            self._active_fetch.discard(name)
 
     def lookup(self, name: str, page_idx: int
                ) -> Optional[Dict[str, PackedParam]]:
@@ -220,7 +262,10 @@ class SharedPagePool:
                 if self.live_bytes + nbytes <= self.budget_bytes:
                     break
                 victim_model, _victim_page = key
-                if victim_model == name:
+                if victim_model == name or victim_model in self._active_fetch:
+                    # the fetching model's own pages — and any model whose
+                    # overlapped pass is still mid-fetch — keep their live
+                    # window intact
                     continue
                 freed, _ = self._cache.pop(key)
                 self.live_bytes -= freed
@@ -229,13 +274,22 @@ class SharedPagePool:
                 self._cache[(name, page_idx)] = (nbytes, params)
                 self.live_bytes += nbytes
 
-    def add_stall(self, name: str, seconds: float) -> None:
+    def add_stall(self, name: str, exposed_s: float,
+                  hidden_s: float = 0.0) -> None:
+        """Account one pass's stall split for ``name``: ``exposed_s`` is
+        the wait that actually blocked a tick, ``hidden_s`` the stream
+        time overlapped behind compute (sync passes hide nothing)."""
         with self._lock:
-            self.counters[name]["stall_s"] += float(seconds)
+            self.counters[name]["exposed_s"] += float(exposed_s)
+            self.counters[name]["hidden_s"] += float(hidden_s)
 
     def summary(self) -> Dict[str, Any]:
-        """Per-model swap/miss/pool-hit/evict/stall counters + pool state
-        — the ``shared_pool`` section of the metrics/v2 JSON."""
+        """Per-model swap/miss/pool-hit/evict counters plus the
+        exposed/hidden stall split + pool state — the ``shared_pool``
+        section of the metrics/v3 JSON.  The stall seconds here are the
+        pool's per-model *view* of the same wall time the engines report
+        in their own ``paging`` sections; totals must sum ONE of the two,
+        never both."""
         with self._lock:
             models = {}
             for name, store in self.members.items():
@@ -243,7 +297,8 @@ class SharedPagePool:
                 models[name] = dict(
                     swaps=store.swap_count, misses=store.miss_count,
                     pool_hits=c["pool_hits"], evicted=c["evicted"],
-                    stall_s=c["stall_s"], n_pages=len(store.pages))
+                    exposed_s=c["exposed_s"], hidden_s=c["hidden_s"],
+                    n_pages=len(store.pages))
             return dict(
                 budget_bytes=self.budget_bytes,
                 live_bytes=self.live_bytes,
@@ -258,6 +313,7 @@ class SharedPagePool:
             self.live_bytes = 0
         for store in members:
             store.close(wait=wait)
+        self._exec.shutdown(wait=wait, cancel_futures=not wait)
 
     def __enter__(self) -> "SharedPagePool":
         return self
@@ -381,6 +437,14 @@ class HostPagedStore:
         if pool is not None:
             pool.register(self.name, self)
 
+    @property
+    def _fetch_exec(self) -> ThreadPoolExecutor:
+        """The worker page fetches run on: the shared pool worker for pool
+        members (so overlapped tenant passes serialize in begin order and
+        the pool bookkeeping stays deterministic), the store's private
+        worker otherwise."""
+        return self._pool if self.pool is None else self.pool._exec
+
     def _fetch_page(self, idx: int) -> Dict[str, PackedParam]:
         if self.pool is not None:
             cached = self.pool.lookup(self.name, idx)
@@ -411,6 +475,19 @@ class HostPagedStore:
         """
         return PageStream(self, resident_slots)
 
+    def begin_pass(self, resident_slots: int = 2) -> "AsyncPageStream":
+        """Kick ONE full overlapped streaming pass and return immediately.
+
+        The whole double-buffered fetch loop is submitted to the fetch
+        worker up front (demand/prefetch order and counters identical to
+        :meth:`stream`), so host->device page traffic proceeds while the
+        caller computes; :meth:`AsyncPageStream.fence` joins the futures
+        at first use and splits the pass wall time into the *exposed*
+        wait (time the caller actually blocked) and the *hidden* overlap
+        — the §II-B2 proactive swap, realized across ticks instead of
+        across pages."""
+        return AsyncPageStream(self, resident_slots)
+
     def close(self, wait: bool = True):
         """Shut the prefetch worker down.  ``wait=True`` (default) blocks
         until in-flight swaps finish — never leak a ``_fetch_page`` past
@@ -438,6 +515,8 @@ class PageStream:
         self._store = store
         self._sched = make_schedule(len(store.pages), resident_slots)
         self._inflight: Dict[int, Future] = {}
+        if store.pool is not None:
+            store.pool.pass_log.append(store.name)
         self._gen = self._iterate()
 
     def __iter__(self):
@@ -473,7 +552,7 @@ class PageStream:
                     st._live[e.page] = page_params
                 if (e.prefetch_next is not None
                         and e.prefetch_next not in st._live):
-                    self._inflight[e.prefetch_next] = st._pool.submit(
+                    self._inflight[e.prefetch_next] = st._fetch_exec.submit(
                         st._fetch_page, e.prefetch_next)
                 if e.evicts is not None:
                     st._live.pop(e.evicts, None)
@@ -484,6 +563,156 @@ class PageStream:
                     fut.result()
             self._inflight.clear()
             st._live.clear()
+
+
+class AsyncPageStream:
+    """One *overlapped* streaming pass over a :class:`HostPagedStore`.
+
+    Construction (via :meth:`HostPagedStore.begin_pass`) submits every
+    page fetch of the pass to the fetch worker in the exact order the
+    synchronous :class:`PageStream` would perform them — same demand-miss
+    accounting, same pool lookup/admit sequence, same swap counters; the
+    only thing that changes is *when* the caller waits.  :meth:`fence`
+    joins the futures at first use and records the stall split:
+
+      * ``window_s``  — begin -> fence call: the compute the caller ran
+        while the stream was in flight;
+      * ``exposed_s`` — time the fence actually blocked (critical path);
+      * ``hidden_s``  — stream wall time that genuinely overlapped the
+        window: ``min(begin -> last-fetch-done, window)``;
+      * ``swap_s``    — ``hidden_s + exposed_s``, the pass's full stream
+        wall time, the traffic's cost wherever it lands.
+
+    By construction ``exposed_s``/``hidden_s`` equal the analytical
+    ``stall += swap - hidden`` identity of
+    :func:`repro.core.memsys.overlap_stall` applied to (``swap_s``,
+    ``window_s``) — tests assert the runtime against that closed form.
+
+    For pool members the pass registers with the pool's fetch guard so
+    co-tenant admissions cannot evict its in-flight pages mid-fetch; the
+    guard releases automatically when the last fetch settles (finished OR
+    cancelled), and :meth:`close` cancels/drains an unfenced pass without
+    leaking worker fetches or guard entries.
+    """
+
+    def __init__(self, store: HostPagedStore, resident_slots: int = 2):
+        self._store = store
+        self._result: Optional[Dict[str, PackedParam]] = None
+        self._closed = False
+        self.swap_s = 0.0
+        self.window_s = 0.0
+        self.exposed_s = 0.0
+        self.hidden_s = 0.0
+        pool = store.pool
+        self._t_ready: Optional[float] = None   # last fetch completion
+        self._t_begin = time.perf_counter()
+        # replay the schedule's live/inflight bookkeeping so demand-miss
+        # counting matches the sync pass, then submit EVERY fetch up
+        # front; the single fetch worker executes them in this exact
+        # order, which is the order PageStream fetches in
+        self._futures: List[Tuple[int, Future]] = []
+        self._marks: List[Future] = []
+        if pool is not None:
+            pool.pass_log.append(store.name)
+            # the eviction guard must bracket pass EXECUTION, not pass
+            # submission: marker tasks on the serialized fetch worker set
+            # the guard right before this pass's first fetch runs and
+            # release it right after its last — a begun-but-still-queued
+            # co-tenant pass is NOT yet protected, so eviction decisions
+            # (and counters) stay identical to the sequential sync order
+            self._marks.append(
+                store._fetch_exec.submit(pool._pass_begin, store.name))
+        live: set = set()
+        inflight: set = set()
+        for e in make_schedule(len(store.pages), resident_slots):
+            if e.page in live:
+                pass
+            elif e.page in inflight:
+                inflight.discard(e.page)
+                live.add(e.page)
+            else:
+                store.miss_count += 1        # demand miss (cold start)
+                self._futures.append(
+                    (e.page, store._fetch_exec.submit(store._fetch_page,
+                                                      e.page)))
+                live.add(e.page)
+            if e.prefetch_next is not None and e.prefetch_next not in live:
+                inflight.add(e.prefetch_next)
+                self._futures.append(
+                    (e.prefetch_next,
+                     store._fetch_exec.submit(store._fetch_page,
+                                              e.prefetch_next)))
+            if e.evicts is not None:
+                live.discard(e.evicts)
+        if pool is not None:
+            self._marks.append(
+                store._fetch_exec.submit(pool._pass_end, store.name))
+        if self._futures:
+            # stamp the moment the LAST page lands, so hidden time is
+            # the stream's true wall, never the whole compute window
+            self._futures[-1][1].add_done_callback(self._mark_ready)
+        else:
+            self._t_ready = self._t_begin
+
+    def _mark_ready(self, _fut) -> None:
+        self._t_ready = time.perf_counter()
+
+    @property
+    def done(self) -> bool:
+        """True once fenced (or closed) — the pass can't be consumed twice."""
+        return self._result is not None or self._closed
+
+    def fence(self) -> Dict[str, PackedParam]:
+        """Join the pass: block until every page is device-ready, thread
+        nothing (the caller owns template threading), and record the
+        exposed/hidden stall split.  Idempotent — a second fence returns
+        the same params without re-waiting or re-accounting."""
+        if self._closed:
+            raise RuntimeError("fence() after close(): the pass was "
+                               "cancelled")
+        if self._result is not None:
+            return self._result
+        t_fence = time.perf_counter()
+        dev: Dict[str, PackedParam] = {}
+        for _idx, fut in self._futures:
+            dev.update(fut.result())
+        jax.block_until_ready([p.packed for p in dev.values()])
+        t_join = time.perf_counter()
+        # a result() can return a hair before the completion callback
+        # fires on the worker; fall back to the join timestamp then
+        t_ready = self._t_ready if self._t_ready is not None else t_join
+        self.window_s = t_fence - self._t_begin
+        self.exposed_s = t_join - t_fence
+        self.hidden_s = min(t_ready - self._t_begin, self.window_s)
+        self.swap_s = self.hidden_s + self.exposed_s
+        self._futures.clear()
+        self._result = dev
+        return dev
+
+    def close(self) -> None:
+        """Cancel what hasn't started, drain what has (never leak a fetch
+        past teardown), and release the pool's fetch guard even when its
+        end marker was cancelled.  Safe to call on a fenced pass (no-op)
+        and idempotent."""
+        for fut in [f for _i, f in self._futures] + self._marks:
+            if not fut.cancel():
+                try:
+                    fut.result()
+                except Exception:
+                    pass             # executor already shut down mid-drain
+        self._futures.clear()
+        self._marks.clear()
+        if self._result is None:
+            self._closed = True
+        if self._store.pool is not None:
+            self._store.pool._pass_end(self._store.name)
+
+    def __enter__(self) -> "AsyncPageStream":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
 
 def pass_counters(n_pages: int, resident_slots: int = 2) -> Dict[str, int]:

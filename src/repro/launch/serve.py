@@ -23,9 +23,14 @@ pages contending for one SharedPagePool device-bytes budget
 pool genuinely churns).  Each tenant is verified bit-exact against
 serving that model alone on a private pager.
 
+Paged runs stream **asynchronously** by default (``--async-io``): the
+scheduler begins tick t+1's host->device page stream while tick t
+computes and fences at first use, so only the *exposed* wait lands on
+the tick (``--sync-io`` restores the blocking stream-then-step tick).
 When a plan pages, single-model runs are verified bit-exact against the
-fully resident uniform plan (disable with ``--no-verify``).  Metrics are
-emitted as the ``repro.serving.metrics/v2`` JSON (stdout, and
+fully resident uniform plan AND — in async mode — against the
+synchronous streaming path (disable with ``--no-verify``).  Metrics are
+emitted as the ``repro.serving.metrics/v3`` JSON (stdout, and
 ``--metrics-json PATH`` to persist).
 """
 
@@ -56,12 +61,15 @@ def _requests(cfg, n, max_new, seed=0):
             for uid in range(n)]
 
 
-def _serve(cfg, packed, plan, args, paged: bool):
+def _serve(cfg, packed, plan, args, paged: bool,
+           async_io: bool = None):
     eng = ServingEngine(cfg, packed, batch_slots=args.slots,
                         max_len=args.max_len, plan=plan, seed=args.seed)
     if paged:
         eng.attach_paging()
-    sched = Scheduler(eng, prefill_chunk=args.prefill_chunk)
+    sched = Scheduler(eng, prefill_chunk=args.prefill_chunk,
+                      async_io=args.async_io if async_io is None
+                      else async_io)
     sched.add_stream("xr", priority=1, deadline_ms=args.deadline_ms)
     sched.add_stream("background")
     for req in _requests(cfg, args.requests, args.max_new, seed=args.seed):
@@ -100,7 +108,7 @@ def _tenant_requests(cfg, args, salt):
 
 def _serve_tenants(models, args, pool):
     """One MultiScheduler pass over every tenant; returns (ms, done)."""
-    ms = MultiScheduler(pool=pool)
+    ms = MultiScheduler(pool=pool, async_io=args.async_io)
     for name, (cfg, packed, plan) in models.items():
         eng = ServingEngine(cfg, packed, batch_slots=args.slots,
                             max_len=args.max_len, plan=plan,
@@ -124,7 +132,8 @@ def _serve_solo(name, cfg, packed, plan, args, salt):
     sizes = packed_sizes(packed)
     if plan.paged_bytes(sizes) > 0:
         eng.attach_paging()
-    sched = Scheduler(eng, prefill_chunk=args.prefill_chunk)
+    sched = Scheduler(eng, prefill_chunk=args.prefill_chunk,
+                      async_io=args.async_io)
     sched.add_stream("xr", priority=1, deadline_ms=args.deadline_ms)
     sched.add_stream("background")
     for req in _tenant_requests(cfg, args, salt):
@@ -235,6 +244,15 @@ def main(argv=None):
                          "admission; misses are reported, not dropped)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="max prompt tokens absorbed per tick per slot")
+    io = ap.add_mutually_exclusive_group()
+    io.add_argument("--async-io", dest="async_io", action="store_true",
+                    default=True,
+                    help="overlap the next tick's page stream with this "
+                         "tick's compute, fencing at first use (default)")
+    io.add_argument("--sync-io", dest="async_io", action="store_false",
+                    help="block the tick on the full page stream (the "
+                         "pre-overlap schedule the async path is "
+                         "verified bit-exact against)")
     ap.add_argument("--metrics-json", default=None,
                     help="also write the metrics JSON to this path")
     ap.add_argument("--seed", type=int, default=0)
@@ -285,9 +303,13 @@ def main(argv=None):
           f"{thr['wall_s']:.2f}s ({thr['tok_per_s']:.1f} tok/s) "
           f"[W{args.bits}, {place}] over {sched.ticks} ticks")
     if paged:
-        print(f"live paging: {len(eng.pager.pages)} pages, "
+        pg = summary["paging"]
+        print(f"live paging ({'async' if args.async_io else 'sync'}): "
+              f"{len(eng.pager.pages)} pages, "
               f"{eng.swap_count} swaps, {eng.miss_count} demand misses, "
-              f"{eng.paging_stall_s * 1e3:.1f} ms stalled")
+              f"{pg['exposed_s'] * 1e3:.1f} ms exposed + "
+              f"{pg['hidden_s'] * 1e3:.1f} ms hidden behind compute "
+              f"(overlap {pg['overlap_frac'] * 100:.0f}%)")
     if args.deadline_ms is not None:
         dl = summary["deadlines"]
         print(f"deadlines: {dl['missed']}/{dl['with_deadline']} missed "
@@ -305,6 +327,25 @@ def main(argv=None):
         print("verify: paged tokens "
               + ("BIT-EXACT vs resident plan" if ok
                  else "MISMATCH vs resident plan"))
+        if args.async_io:
+            # the overlapped pipeline must change WHEN pages move, never
+            # what the step computes: re-serve on the blocking sync path
+            sref, ssched, seng = _serve(cfg, packed, plan, args,
+                                        paged=True, async_io=False)
+            sync_tokens = {r.uid: r.generated for r in sref}
+            sync_ok = got == sync_tokens
+            ctr_ok = (seng.swap_count == eng.swap_count
+                      and seng.miss_count == eng.miss_count
+                      and ssched.ticks == sched.ticks)
+            ok = ok and sync_ok and ctr_ok
+            print("verify: async tokens "
+                  + ("BIT-EXACT vs sync streaming" if sync_ok
+                     else "MISMATCH vs sync streaming")
+                  + (", counters unchanged by overlap" if ctr_ok
+                     else f", counters DIVERGED (sync "
+                          f"{seng.swap_count}/{seng.miss_count} vs async "
+                          f"{eng.swap_count}/{eng.miss_count})"))
+            seng.pager.close()
 
     print(sched.metrics.to_json(paging=eng.paging_summary()))
     if args.metrics_json:

@@ -20,6 +20,11 @@ The engine is a continuous-batching loop:
     host and stream device-ward between ticks through the double-buffered
     ``HostPagedStore`` page cache, so a mixed ``plan_for_budget`` plan is
     exercised end-to-end at serve time (swap/miss/stall counters kept).
+    The stream can run *overlapped*: :meth:`begin_tick_params` kicks the
+    next tick's pass while this tick computes and
+    :meth:`fence_tick_params` joins at first use, recording only the
+    exposed wait on the critical path (the scheduler's async pipeline);
+    :meth:`tick_params` remains the blocking begin+fence wrapper.
 
 The engine owns *mechanism* only.  Policy — deadlines, priorities,
 chunked prefill pacing, metrics — lives in
@@ -152,11 +157,24 @@ class ServingEngine:
         self._decode = jax.jit(self._decode_impl)
         self._prefill_cache: Dict[Tuple[int, bool], Callable] = {}
 
-        # §II-B2 live paging (attach_paging)
+        # §II-B2 live paging (attach_paging).  Stall accounting is split
+        # the way the paper's At-MRAM story demands: `exposed` is paging
+        # wait that actually blocked a tick, `hidden` is stream time the
+        # async pipeline absorbed behind compute.  paging_stall_s keeps
+        # its historical name but holds the EXPOSED total (a synchronous
+        # run hides nothing, so its numbers read exactly as before).
         self.pager = None
         self.page_resident_slots = 2
         self.paging_stall_s = 0.0
+        self.paging_hidden_s = 0.0
         self.last_stall_s = 0.0
+        self.last_hidden_s = 0.0
+        # measured split of the LAST fenced pass — swap_s (stream wall),
+        # window_s (begin->fence compute window), exposed_s, hidden_s —
+        # which tests assert against memsys.overlap_stall's closed form
+        self.last_overlap: Optional[Dict[str, float]] = None
+        self._inflight_pass = None        # AsyncPageStream begun, unfenced
+        self._thread_template = None      # (treedef, slots) cache
 
     # -- jitted bodies --------------------------------------------------------
     def _decode_impl(self, params, tokens, cache, pos_vec):
@@ -236,35 +254,138 @@ class ServingEngine:
             for name, (hp, hs, proto) in self.pager._host.items()}
         self.params = thread_packed(self.params,
                                     {**self.pager.resident, **host_view})
+        self._build_thread_template(set(host_view))
         return self
 
-    def tick_params(self) -> Any:
-        """The params tree for this tick.
+    def _build_thread_template(self, paged_names) -> None:
+        """Pre-flatten the repointed template ONCE: each leaf slot either
+        passes through verbatim (resident/pinned) or names the paged
+        group + half ("packed"/"scale") a streamed page must fill.  Ticks
+        then thread fresh pages by list substitution + unflatten instead
+        of re-walking the whole tree with path matching every tick."""
+        from repro.core.placement import path_key
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.params)
+        slots = []
+        for path, leaf in flat:
+            key = path_key(path)
+            if key.endswith("/packed") and key[:-len("/packed")] in paged_names:
+                slots.append(("packed", key[:-len("/packed")]))
+            elif key.endswith("/scale") and key[:-len("/scale")] in paged_names:
+                slots.append(("scale", key[:-len("/scale")]))
+            else:
+                slots.append((None, leaf))
+        self._thread_template = (treedef, slots)
+
+    def _thread_tick(self, dev: Dict[str, Any]) -> Any:
+        """Streamed device pages -> the params tree the jitted step
+        consumes, via the cached template (same result as
+        ``paging.thread_packed(self.params, dev)``, without the per-tick
+        tree rebuild)."""
+        treedef, slots = self._thread_template
+        leaves = [leaf if kind is None
+                  else (dev[leaf].packed if kind == "packed"
+                        else dev[leaf].scale)
+                  for kind, leaf in slots]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def begin_tick_params(self) -> None:
+        """Kick the overlapped host->device page stream for the NEXT
+        fence and return immediately (no-op without paging, or when a
+        pass is already in flight).  The fetch loop runs on the pager's
+        worker while the caller keeps computing — the §II-B2 proactive
+        swap, realized across ticks: tick t's compute hides tick t+1's
+        page traffic."""
+        if self.pager is None or self._inflight_pass is not None:
+            return
+        self._inflight_pass = self.pager.begin_pass(self.page_resident_slots)
+
+    def fence_tick_params(self) -> Any:
+        """The params tree for this tick, fencing at first use.
 
         Without paging this is just the packed store.  With paging, the
-        cold pages stream host->device in access order (double-buffered,
-        proactive prefetch) and are threaded into the tree the jitted step
-        consumes; the wall time of the streaming pass is recorded as this
-        tick's paging stall.  The fused step needs every layer resident at
-        once (the stacked scan), so the page cache models the *traffic*
-        (swap/miss counters, stall time) while the tick's working set is
-        materialized in full — the TPU-native reading of the two live MRAM
-        pages."""
+        in-flight pass (begun by :meth:`begin_tick_params`; demand-begun
+        here if nothing is in flight — the sync fallback and the cold
+        first tick) is joined, the arrived pages are threaded through the
+        cached template, and the stall is split into the *exposed* wait
+        (time this call actually blocked) and the *hidden* overlap.  The
+        fused step needs every layer resident at once (the stacked scan),
+        so the page cache models the *traffic* (swap/miss counters, stall
+        time) while the tick's working set is materialized in full — the
+        TPU-native reading of the two live MRAM pages."""
         self.last_stall_s = 0.0
+        self.last_hidden_s = 0.0
         if self.pager is None:
             return self.params
-        from repro.core.paging import thread_packed
-        t0 = time.perf_counter()
-        dev: Dict[str, Any] = {}
-        with self.pager.stream(self.page_resident_slots) as pages:
-            for _page, page_params in pages:
-                dev.update(page_params)
-        jax.block_until_ready([p.packed for p in dev.values()])
-        self.last_stall_s = time.perf_counter() - t0
-        self.paging_stall_s += self.last_stall_s
+        demand = self._inflight_pass is None
+        if demand:
+            self.begin_tick_params()
+        ps, self._inflight_pass = self._inflight_pass, None
+        dev = ps.fence()
+        exposed, hidden, window = ps.exposed_s, ps.hidden_s, ps.window_s
+        if demand:
+            # the pass was begun INSIDE this call (sync tick_params, or
+            # the cold first tick): its begin->fence window was spent
+            # blocked here, not in caller compute — the whole stream
+            # wall is exposed, nothing was hidden
+            exposed, hidden, window = exposed + hidden, 0.0, 0.0
+        self.last_stall_s = exposed
+        self.last_hidden_s = hidden
+        self.paging_stall_s += exposed
+        self.paging_hidden_s += hidden
+        self.last_overlap = dict(swap_s=ps.swap_s, window_s=window,
+                                 exposed_s=exposed, hidden_s=hidden)
         if self.pager.pool is not None:
-            self.pager.pool.add_stall(self.pager.name, self.last_stall_s)
-        return thread_packed(self.params, dev)
+            self.pager.pool.add_stall(self.pager.name, exposed, hidden)
+        return self._thread_tick(dev)
+
+    def cancel_tick_params(self) -> None:
+        """Cancel/drain an in-flight pass that will never be fenced
+        (early scheduler exit, teardown) without leaking worker fetches
+        or the shared pool's eviction guard."""
+        if self._inflight_pass is not None:
+            self._inflight_pass.close()
+            self._inflight_pass = None
+
+    def tick_params(self) -> Any:
+        """Legacy blocking API: begin + fence back to back (the stream's
+        full wall time lands exposed, hidden ~ 0 — exactly the old
+        synchronous accounting).  Kept as the sync path the async
+        pipeline is verified bit-exact against."""
+        self.begin_tick_params()
+        return self.fence_tick_params()
+
+    def has_tick_after(self, chunk: Optional[int] = None) -> bool:
+        """Will the engine still hold work after ONE more scheduler-paced
+        tick (``complete=False`` prefill at ``chunk`` pacing)?
+
+        Drives the pipeline's begin decision: a pass begun with no tick
+        left to consume it would stream a whole extra pass and skew the
+        swap counters away from ``ticks * pass_counters``.  The predicate
+        mirrors the tick's own retirement rules exactly; when in doubt it
+        must answer False (a missed overlap costs latency, a phantom
+        pass costs determinism)."""
+        if self.waiting:
+            return True
+        prefix = self.cfg.n_meta_tokens
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            remaining = len(r.prompt) - r.prefill_pos
+            if remaining > 0:
+                n, _bucket, _pfx, _pos = self._chunk_shape(r, chunk)
+                if n < remaining:
+                    return True          # more prefill chunks after this
+                # prefill completes THIS tick — and the same tick's
+                # decode_tick already sees it (prefill_pos is bumped
+                # before decode runs), so the slot leaves this tick with
+                # TWO tokens unless max_new retires it at one
+                if (r.max_new_tokens > 2
+                        and prefix + len(r.prompt) + 1 < self.max_len - 1):
+                    return True
+            elif (len(r.generated) + 1 < r.max_new_tokens
+                    and self.slot_pos[i] + 1 < self.max_len - 1):
+                return True              # survives this decode tick
+        return False
 
     @property
     def swap_count(self) -> int:
@@ -275,9 +396,12 @@ class ServingEngine:
         return 0 if self.pager is None else self.pager.miss_count
 
     def paging_summary(self) -> Dict[str, Any]:
+        total = self.paging_stall_s + self.paging_hidden_s
         return dict(
             swap_count=self.swap_count, miss_count=self.miss_count,
-            stall_s=self.paging_stall_s,
+            exposed_s=self.paging_stall_s, hidden_s=self.paging_hidden_s,
+            overlap_frac=(self.paging_hidden_s / total) if total > 0 else 0.0,
+            stall_s=self.paging_stall_s,       # v2 alias: exposed wait
             n_pages=0 if self.pager is None else len(self.pager.pages))
 
     # -- slot management ------------------------------------------------------

@@ -5,24 +5,28 @@ Siracusa must finish the whole heterogeneous workload inside the 10–20 ms
 XR frame budget.  So the serving runtime records exactly the quantities
 that bound makes interesting: per-request time-to-first-token and
 end-to-end latency, per-tick engine latency, paging stalls (the §II-B2
-cost of exceeding on-chip capacity), deadline-miss rate per stream, and
-aggregate token throughput.
+cost of exceeding on-chip capacity) split into *exposed* wait (time that
+actually blocked a tick) and *hidden* overlap (stream time absorbed
+behind compute by the async paging pipeline), deadline-miss rate per
+stream, and aggregate token throughput.
 
 Everything is emitted as one JSON document (schema
-``repro.serving.metrics/v2``) so the bench trajectory
+``repro.serving.metrics/v3``) so the bench trajectory
 (``benchmarks/serving_load.py`` -> ``BENCH_serving.json``) and the
 launcher (``repro.launch.serve --metrics-json``) share a format:
 
     {
-      "schema": "repro.serving.metrics/v2",
+      "schema": "repro.serving.metrics/v3",
       "ticks":      {"count", "latency_ms": {mean,p50,p99,max},
-                     "paging_stall_ms": {mean,p50,p99,max}},
+                     "paging_exposed_ms": {mean,p50,p99,max},
+                     "paging_hidden_ms":  {mean,p50,p99,max}},
       "requests":   {"count", "tokens_out", "truncated",
                      "ttft_ms": {mean,p50,p99,max},
                      "latency_ms": {mean,p50,p99,max}},
       "deadlines":  {"with_deadline", "missed", "miss_rate", "truncated"},
       "throughput": {"wall_s", "tok_per_s"},
-      "paging":     {"swap_count", "miss_count", "stall_s", "n_pages"},
+      "paging":     {"swap_count", "miss_count", "exposed_s", "hidden_s",
+                     "overlap_frac", "stall_s", "n_pages"},
       "streams":    {name: {"count", "missed", "miss_rate", "truncated",
                             "p99_ttft_ms"}}
     }
@@ -31,25 +35,39 @@ Latencies are milliseconds; a request's deadline is met when its
 *end-to-end* latency (arrival -> last token) is within ``deadline_ms``.
 Requests without a deadline never count toward the miss rate, and
 *truncated* requests (retired by KV-cache exhaustion, i.e. partial
-service) are excluded from it and reported under their own counter —
-v1 silently conflated them with natural completions.
+service) are excluded from it and reported under their own counter.
+
+v3 vs v2: the per-tick ``paging_stall_ms`` became the
+``paging_exposed_ms`` / ``paging_hidden_ms`` pair and the ``paging``
+section grew ``exposed_s`` / ``hidden_s`` / ``overlap_frac`` —
+``exposed + hidden`` is the pass's full stream wall time, ``stall_s`` is
+kept as an alias of ``exposed_s`` (a fully synchronous run hides
+nothing, so its v3 numbers read exactly like v2's).
 
 Multi-model tenancy (``repro.serving.tenancy.MultiScheduler``) emits the
-v2 *multi* shape instead: per-model sections of the document above plus
+v3 *multi* shape instead: per-model sections of the document above plus
 the shared page pool's contention stats::
 
     {
-      "schema": "repro.serving.metrics/v2",
+      "schema": "repro.serving.metrics/v3",
       "ticks":       {"count"},                     # MultiScheduler ticks
       "models":      {name: <single-model document, sans schema>},
       "shared_pool": {"budget_bytes", "live_bytes", "cached_pages",
                       "evictions",
                       "models": {name: {"swaps", "misses", "pool_hits",
-                                        "evicted", "stall_s", "n_pages"}}},
+                                        "evicted", "exposed_s",
+                                        "hidden_s", "n_pages"}}},
       "totals":      {"requests", "tokens_out", "truncated",
                       "with_deadline", "missed", "miss_rate",
-                      "wall_s", "tok_per_s"}
+                      "wall_s", "tok_per_s",
+                      "paging_exposed_s", "paging_hidden_s",
+                      "overlap_frac"}
     }
+
+The ``totals`` paging seconds are summed from the per-model ``paging``
+sections ONLY — the ``shared_pool`` per-model stalls are the pool's view
+of the *same* wall time the engines already report, so adding both would
+double-count every pooled pass (the v2-era double-attribution risk).
 
 :func:`validate` checks either shape and is what CI asserts against the
 uploaded ``BENCH_serving.json`` artefact.
@@ -64,7 +82,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-SCHEMA = "repro.serving.metrics/v2"
+SCHEMA = "repro.serving.metrics/v3"
 
 
 def quantiles(xs: List[float]) -> Dict[str, float]:
@@ -74,6 +92,11 @@ def quantiles(xs: List[float]) -> Dict[str, float]:
     a = np.asarray(xs, np.float64)
     return dict(mean=float(a.mean()), p50=float(np.percentile(a, 50)),
                 p99=float(np.percentile(a, 99)), max=float(a.max()))
+
+
+def _empty_paging() -> Dict[str, Any]:
+    return dict(swap_count=0, miss_count=0, exposed_s=0.0, hidden_s=0.0,
+                overlap_frac=0.0, stall_s=0.0, n_pages=0)
 
 
 @dataclasses.dataclass
@@ -115,12 +138,13 @@ class RequestRecord:
 
 
 class MetricsRecorder:
-    """Accumulates tick- and request-level events; renders the v2 JSON."""
+    """Accumulates tick- and request-level events; renders the v3 JSON."""
 
     def __init__(self, clock: Callable[[], float] = time.perf_counter):
         self.clock = clock
         self.tick_latency_s: List[float] = []
-        self.tick_stall_s: List[float] = []
+        self.tick_exposed_s: List[float] = []
+        self.tick_hidden_s: List[float] = []
         self.records: List[RequestRecord] = []
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
@@ -130,11 +154,15 @@ class MetricsRecorder:
         if self._t0 is None:
             self._t0 = self.clock()
 
-    def record_tick(self, latency_s: float, paging_stall_s: float = 0.0
-                    ) -> None:
+    def record_tick(self, latency_s: float, paging_exposed_s: float = 0.0,
+                    paging_hidden_s: float = 0.0) -> None:
+        """One tick: its wall latency, the paging wait that actually
+        blocked it (*exposed*), and the stream time the async pipeline
+        hid behind compute (*hidden*; 0 for synchronous streaming)."""
         self.start()
         self.tick_latency_s.append(float(latency_s))
-        self.tick_stall_s.append(float(paging_stall_s))
+        self.tick_exposed_s.append(float(paging_exposed_s))
+        self.tick_hidden_s.append(float(paging_hidden_s))
         self._t_last = self.clock()
 
     def record_request(self, req: Any) -> RequestRecord:
@@ -196,8 +224,10 @@ class MetricsRecorder:
                 "count": len(self.tick_latency_s),
                 "latency_ms": quantiles([t * 1e3
                                          for t in self.tick_latency_s]),
-                "paging_stall_ms": quantiles([t * 1e3
-                                              for t in self.tick_stall_s]),
+                "paging_exposed_ms": quantiles([t * 1e3
+                                                for t in self.tick_exposed_s]),
+                "paging_hidden_ms": quantiles([t * 1e3
+                                               for t in self.tick_hidden_s]),
             },
             "requests": {
                 "count": len(self.records),
@@ -216,8 +246,7 @@ class MetricsRecorder:
                 "wall_s": self.wall_s,
                 "tok_per_s": tokens / wall,
             },
-            "paging": dict(paging or dict(swap_count=0, miss_count=0,
-                                          stall_s=0.0, n_pages=0)),
+            "paging": dict(paging if paging is not None else _empty_paging()),
             "streams": streams,
         }
 
@@ -234,15 +263,21 @@ class MetricsRecorder:
 
 
 # ---------------------------------------------------------------------------
-# multi-model tenancy (metrics/v2 multi shape)
+# multi-model tenancy (metrics/v3 multi shape)
 # ---------------------------------------------------------------------------
 
 def multi_summary(models: Dict[str, Dict[str, Any]],
                   shared_pool: Optional[Dict[str, Any]] = None,
                   ticks: int = 0) -> Dict[str, Any]:
-    """Assemble the v2 multi-model document from per-model single-model
+    """Assemble the v3 multi-model document from per-model single-model
     summaries (as produced by :meth:`MetricsRecorder.summary`) plus the
-    shared pool's :meth:`~repro.core.paging.SharedPagePool.summary`."""
+    shared pool's :meth:`~repro.core.paging.SharedPagePool.summary`.
+
+    The totals' paging seconds are summed from the per-model ``paging``
+    sections alone; ``shared_pool.models[*].exposed_s/hidden_s`` are the
+    pool's view of the SAME wall time (one pass, two vantage points), so
+    they are deliberately NOT added — that would double-count every
+    pooled pass."""
     sections = {}
     for name, doc in models.items():
         doc = dict(doc)
@@ -253,6 +288,10 @@ def multi_summary(models: Dict[str, Dict[str, Any]],
     trunc = sum(d["requests"]["truncated"] for d in sections.values())
     with_dl = sum(d["deadlines"]["with_deadline"] for d in sections.values())
     missed = sum(d["deadlines"]["missed"] for d in sections.values())
+    exposed = sum(d["paging"].get("exposed_s", 0.0)
+                  for d in sections.values())
+    hidden = sum(d["paging"].get("hidden_s", 0.0)
+                 for d in sections.values())
     # the tenants share one wall clock window, so aggregate throughput is
     # total tokens over the longest per-model span, not the sum of spans
     wall = max((d["throughput"]["wall_s"] for d in sections.values()),
@@ -271,18 +310,28 @@ def multi_summary(models: Dict[str, Dict[str, Any]],
             "miss_rate": (missed / with_dl) if with_dl else 0.0,
             "wall_s": wall,
             "tok_per_s": tokens / max(wall, 1e-9),
+            "paging_exposed_s": exposed,
+            "paging_hidden_s": hidden,
+            "overlap_frac": (hidden / (exposed + hidden)
+                             if (exposed + hidden) > 0 else 0.0),
         },
     }
 
 
 _SINGLE_KEYS = {
-    "ticks": ("count", "latency_ms", "paging_stall_ms"),
+    "ticks": ("count", "latency_ms", "paging_exposed_ms",
+              "paging_hidden_ms"),
     "requests": ("count", "tokens_out", "truncated", "ttft_ms",
                  "latency_ms"),
     "deadlines": ("with_deadline", "missed", "miss_rate", "truncated"),
     "throughput": ("wall_s", "tok_per_s"),
-    "paging": ("swap_count", "miss_count", "stall_s", "n_pages"),
+    "paging": ("swap_count", "miss_count", "exposed_s", "hidden_s",
+               "overlap_frac", "n_pages"),
 }
+
+_TOTALS_KEYS = ("requests", "tokens_out", "truncated", "with_deadline",
+                "missed", "miss_rate", "wall_s", "tok_per_s",
+                "paging_exposed_s", "paging_hidden_s", "overlap_frac")
 
 
 def _validate_single(doc: Dict[str, Any], where: str) -> None:
@@ -302,7 +351,7 @@ def _validate_single(doc: Dict[str, Any], where: str) -> None:
 
 
 def validate(doc: Dict[str, Any]) -> Dict[str, Any]:
-    """Assert ``doc`` is a well-formed ``repro.serving.metrics/v2``
+    """Assert ``doc`` is a well-formed ``repro.serving.metrics/v3``
     document (either the single-model or the multi-model shape); returns
     the document unchanged so it can be used inline.  Raises ValueError
     naming the first missing piece."""
@@ -314,8 +363,7 @@ def validate(doc: Dict[str, Any]) -> Dict[str, Any]:
         for section in ("shared_pool", "totals", "ticks"):
             if section not in doc:
                 raise ValueError(f"multi document missing {section!r}")
-        for k in ("requests", "tokens_out", "truncated", "with_deadline",
-                  "missed", "miss_rate", "wall_s", "tok_per_s"):
+        for k in _TOTALS_KEYS:
             if k not in doc["totals"]:
                 raise ValueError(f"multi document missing totals.{k}")
         for name, sub in doc["models"].items():
@@ -328,7 +376,7 @@ def validate(doc: Dict[str, Any]) -> Dict[str, Any]:
                     raise ValueError(f"shared_pool missing {k!r}")
             for name, c in pool["models"].items():
                 for k in ("swaps", "misses", "pool_hits", "evicted",
-                          "stall_s", "n_pages"):
+                          "exposed_s", "hidden_s", "n_pages"):
                     if k not in c:
                         raise ValueError(
                             f"shared_pool.models.{name} missing {k!r}")

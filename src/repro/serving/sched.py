@@ -15,16 +15,25 @@ that claim's serving-side analogue:
   * **chunked prefill**: a long prompt advances at most ``prefill_chunk``
     tokens per tick, so it cannot monopolize a tick while a 10 ms-deadline
     request sits decoded-starved in the next slot;
-  * **live paged weights**: when the engine has paging attached, every
-    tick first streams the plan's cold pages host->device (double-buffered
-    HostPagedStore pass) and the stall is accounted against the tick;
+  * **overlapped paged weights** (``async_io=True``, the default): the
+    tick loop is a software pipeline — fence the pass begun last tick,
+    admit, *begin* the next tick's page stream, then run this tick's
+    prefill/decode while the stream proceeds in the background.  Only
+    the *exposed* wait (time the fence actually blocked) lands on the
+    tick; the *hidden* remainder rides behind compute, the serving-side
+    realization of the paper's At-MRAM latency hiding.  ``async_io=
+    False`` keeps the fully synchronous stream-then-step tick, which the
+    async path is verified bit-exact against (same tokens, same swap/
+    miss counters — same traffic, different schedule);
   * **metrics**: TTFT / end-to-end latency / p50 / p99 / deadline-miss
-    rate / tok/s / paging stalls, recorded per tick and per request and
-    emitted as the ``repro.serving.metrics/v2`` JSON.
+    rate / tok/s / exposed-vs-hidden paging stalls, recorded per tick
+    and per request and emitted as the ``repro.serving.metrics/v3``
+    JSON.
 
 The scheduler owns no jit state — it drives the engine's tick primitives
-(``tick_params`` / ``assign`` / ``prefill_tick`` / ``decode_tick``), so
-engine mechanism tests and scheduler policy tests stay independent.
+(``begin_tick_params`` / ``fence_tick_params`` / ``assign`` /
+``prefill_tick`` / ``decode_tick``), so engine mechanism tests and
+scheduler policy tests stay independent.
 """
 
 from __future__ import annotations
@@ -64,8 +73,12 @@ class Scheduler:
     def __init__(self, engine: ServingEngine, *,
                  prefill_chunk: Optional[int] = None,
                  metrics: Optional[MetricsRecorder] = None,
+                 async_io: bool = True,
                  clock=time.perf_counter):
         self.engine = engine
+        # overlap the next tick's page stream with this tick's compute;
+        # False = the fully synchronous stream-then-step tick
+        self.async_io = bool(async_io)
         if prefill_chunk is not None:
             if prefill_chunk < 1:
                 # _next_pow2 maps 0/negative to 1 — reject instead of
@@ -147,15 +160,29 @@ class Scheduler:
                 break
             self.engine.assign(self.queue.pop(0), slot)
 
-    # -- the tick -------------------------------------------------------------
-    def tick(self) -> List[Request]:
-        """One scheduler tick: stream pages, admit EDF, advance each
-        prefilling slot by ONE chunk, one batched decode, retire.  Returns
-        the requests that finished this tick."""
+    # -- the tick (a 3-phase software pipeline) -------------------------------
+    def tick_fence(self) -> tuple:
+        """Phase 1: fence the page pass begun last tick (demand-begins a
+        blocking one on the cold first tick / in sync mode) and stamp the
+        tick start.  Returns ``(t0, params)`` for :meth:`tick_compute`."""
         t0 = self.clock()
         self.metrics.start()                     # wall clock spans tick 1
-        params = self.engine.tick_params()       # may stream cold pages
-        self._admit()
+        params = self.engine.fence_tick_params()
+        return t0, params
+
+    def tick_begin(self) -> None:
+        """Phase 2 (after admission): begin the NEXT tick's page stream —
+        only when the engine is certain to tick again, so every begun
+        pass is consumed by exactly one fence and the swap/miss counters
+        stay identical to the synchronous schedule."""
+        if (self.async_io
+                and (self.queue
+                     or self.engine.has_tick_after(self.prefill_chunk))):
+            self.engine.begin_tick_params()
+
+    def tick_compute(self, t0: float, params) -> List[Request]:
+        """Phase 3: one chunk of prefill per slot, one batched decode,
+        retire + metrics — overlapping with the phase-2 stream."""
         started = self.engine.prefill_tick(params, complete=False,
                                            chunk=self.prefill_chunk)
         now = self.clock()
@@ -170,8 +197,19 @@ class Scheduler:
             self.finished.append(req)
         self.ticks += 1
         self.metrics.record_tick(latency_s=now - t0,
-                                 paging_stall_s=self.engine.last_stall_s)
+                                 paging_exposed_s=self.engine.last_stall_s,
+                                 paging_hidden_s=self.engine.last_hidden_s)
         return finished
+
+    def tick(self) -> List[Request]:
+        """One scheduler tick: fence the in-flight pages, admit EDF,
+        begin the next stream, then advance each prefilling slot by ONE
+        chunk and run one batched decode while the stream proceeds.
+        Returns the requests that finished this tick."""
+        t0, params = self.tick_fence()
+        self._admit()
+        self.tick_begin()
+        return self.tick_compute(t0, params)
 
     # -- loops ----------------------------------------------------------------
     @property
@@ -195,9 +233,17 @@ class Scheduler:
 
     def run_for(self, seconds: float) -> List[Request]:
         """Serve until the wall budget is spent or the queue drains;
-        returns the requests completed by this call."""
+        returns the requests completed by this call.  A pass begun for
+        the tick after the budget expired stays in flight — a later run
+        call fences it; call :meth:`close` instead to cancel it."""
         t0 = self.clock()
         done: List[Request] = []
         while self.pending and (self.clock() - t0) < seconds:
             done += self.tick()
         return done
+
+    def close(self) -> None:
+        """Early exit: cancel/drain a page pass begun for a tick that
+        will never run, so nothing leaks past teardown (the engine's
+        pager itself is owned by the caller / pool)."""
+        self.engine.cancel_tick_params()

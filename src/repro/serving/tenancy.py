@@ -24,9 +24,16 @@ behavior.  This module is that claim's serving-side realization:
     :func:`~repro.core.paging.shared_pass_counters` prediction, because
     tenants stream sequentially per tick);
   * per-model deadline accounting lands in the
-    ``repro.serving.metrics/v2`` multi shape (per-model sections plus the
-    shared pool's contention stats) via
-    :func:`~repro.serving.metrics.multi_summary`.
+    ``repro.serving.metrics/v3`` multi shape (per-model sections plus the
+    shared pool's contention stats and the exposed/hidden paging-stall
+    split) via :func:`~repro.serving.metrics.multi_summary`;
+  * the tick loop is the async paging **software pipeline**: per tick,
+    every pending tenant fences the page pass begun last tick, then (in
+    registration order) begins the next tick's stream, then computes —
+    the tenants' weight I/O overlaps the whole tick's compute while the
+    pool's serialized fetch worker keeps the pass order, and therefore
+    every counter, identical to the synchronous schedule
+    (``async_io=False``).
 
 Each tenant's tokens are bit-exact versus serving that model alone on a
 private pager: the pool changes *which* fetches cost a host->device swap,
@@ -66,6 +73,7 @@ class MultiScheduler:
 
     def __init__(self, *, pool: Optional[SharedPagePool] = None,
                  shared_budget_bytes: Optional[int] = None,
+                 async_io: bool = True,
                  clock=time.perf_counter):
         if pool is not None and shared_budget_bytes is not None:
             raise ValueError("pass either pool= or shared_budget_bytes=, "
@@ -73,13 +81,22 @@ class MultiScheduler:
         if pool is None and shared_budget_bytes is not None:
             pool = SharedPagePool(shared_budget_bytes)
         self.pool = pool
+        self.async_io = bool(async_io)
         self.clock = clock
         self.models: Dict[str, Scheduler] = {}
         self.ticks = 0
-        # one entry per full streaming pass, in execution order — the
-        # exact `passes=` argument shared_pass_counters needs to predict
-        # the pool counters of this run
-        self.pass_log: List[str] = []
+
+    @property
+    def pass_log(self) -> List[str]:
+        """One entry per member streaming pass in BEGIN (== execution)
+        order — the exact ``passes=`` argument ``shared_pass_counters``
+        needs.  Owned by the pool, which logs each pass at construction:
+        under the async pipeline a tenant's next pass is begun a tick
+        before it is fenced, and a tenant going idle then receiving live
+        traffic re-enters the rotation out of registration order, so the
+        fence order the scheduler sees is NOT always the order the pool
+        executed."""
+        return [] if self.pool is None else self.pool.pass_log
 
     # -- tenants --------------------------------------------------------------
     def add_model(self, name: str, engine: ServingEngine, *,
@@ -100,7 +117,7 @@ class MultiScheduler:
         # construct the Scheduler first: it validates prefill_chunk, and a
         # failure here must not leave the engine half-joined to the pool
         sched = Scheduler(engine, prefill_chunk=prefill_chunk,
-                          clock=self.clock)
+                          async_io=self.async_io, clock=self.clock)
         if self.pool is not None:
             from repro.core.placement import packed_sizes
             sizes = packed_sizes(engine.params)
@@ -154,20 +171,29 @@ class MultiScheduler:
         return any(s.pending for s in self.models.values())
 
     def tick(self) -> Dict[str, List[Request]]:
-        """One tenancy tick: one global EDF-with-priority admission pass,
-        then one scheduler tick per tenant with pending work (each tick
-        streams that tenant's cold pages through the shared pool, then
-        prefills/decodes).  Tenants tick in registration order — the
-        deterministic pass order the pool counter prediction relies on.
-        Returns {model: requests finished this tick}."""
+        """One tenancy tick, pipelined across tenants: one global
+        EDF-with-priority admission pass, then — for every tenant with
+        pending work, in registration order — phase 1 fences the page
+        pass begun last tick, phase 2 begins the next tick's stream, and
+        phase 3 runs this tick's prefill/decode while those streams
+        proceed.  Keeping the phases tenant-ordered (all fences, then all
+        begins, then all computes) preserves the global A,B,A,B pass
+        order of the synchronous loop, which is what keeps the shared
+        pool's counters on the static ``shared_pass_counters``
+        prediction.  Returns {model: requests finished this tick}."""
         self._admit_global()
+        active = [(name, sched) for name, sched in self.models.items()
+                  if sched.pending]
+        fenced = []
+        for name, sched in active:
+            t0, params = sched.tick_fence()
+            fenced.append((name, sched, t0, params))
+        for _name, sched, _t0, _params in fenced:
+            sched._admit()                 # late engine.submit stragglers
+            sched.tick_begin()
         finished: Dict[str, List[Request]] = {}
-        for name, sched in self.models.items():
-            if not sched.pending:
-                continue
-            done = sched.tick()
-            if sched.engine.pager is not None:
-                self.pass_log.append(name)
+        for name, sched, t0, params in fenced:
+            done = sched.tick_compute(t0, params)
             if done:
                 finished[name] = done
         self.ticks += 1
@@ -200,7 +226,7 @@ class MultiScheduler:
 
     # -- metrics / lifecycle --------------------------------------------------
     def summary(self) -> Dict:
-        """The ``repro.serving.metrics/v2`` multi-model document."""
+        """The ``repro.serving.metrics/v3`` multi-model document."""
         models = {name: sched.metrics.summary(
                       paging=sched.engine.paging_summary())
                   for name, sched in self.models.items()}
@@ -220,7 +246,11 @@ class MultiScheduler:
 
     def close(self, wait: bool = True) -> None:
         """Shut every tenant's pager down (through the pool when one is
-        shared)."""
+        shared).  In-flight overlapped passes are cancelled/drained FIRST
+        so an early exit cannot leak worker fetches or the pool's
+        eviction guard."""
+        for sched in self.models.values():
+            sched.close()                  # cancel unfenced AsyncPageStream
         if self.pool is not None:
             self.pool.close(wait=wait)
         for sched in self.models.values():

@@ -419,8 +419,9 @@ def test_metrics_schema_and_deadlines():
     from repro.serving import validate
 
     rec = MetricsRecorder(clock=lambda: 0.0)
-    rec.record_tick(latency_s=0.002, paging_stall_s=0.0005)
-    rec.record_tick(latency_s=0.004, paging_stall_s=0.0)
+    rec.record_tick(latency_s=0.002, paging_exposed_s=0.0005,
+                    paging_hidden_s=0.001)
+    rec.record_tick(latency_s=0.004, paging_exposed_s=0.0)
     met = Request(uid=0, prompt=np.arange(3, dtype=np.int32),
                   deadline_ms=20.0, stream="xr")
     met.arrival_s, met.first_token_s, met.finish_s = 0.0, 0.005, 0.015
@@ -433,9 +434,11 @@ def test_metrics_schema_and_deadlines():
         r.generated = [1, 2]
         rec.record_request(r)
     doc = rec.summary(paging=dict(swap_count=6, miss_count=2,
-                                  stall_s=0.001, n_pages=3))
+                                  exposed_s=0.001, hidden_s=0.004,
+                                  overlap_frac=0.8, stall_s=0.001,
+                                  n_pages=3))
     validate(doc)
-    assert doc["schema"] == "repro.serving.metrics/v2"
+    assert doc["schema"] == "repro.serving.metrics/v3"
     assert doc["deadlines"] == dict(with_deadline=2, missed=1,
                                     miss_rate=0.5, truncated=0)
     assert doc["requests"]["count"] == 3
