@@ -27,7 +27,12 @@ both ways and asserts the async run hides a nonzero fraction
 identical.  A micro-bench section times the cached thread-template tick
 threading against the old full-tree rebuild.
 
-Emits the ``repro.serving.metrics/v3`` multi document (default
+``--kv-paged`` additionally pages every tenant's per-slot KV cache
+through the SAME budgeted stream (single model: a private
+``KVPageTable``; tenants: ``<name>/kv`` members of the shared pool) and
+asserts the generations bit-exact versus the resident-KV engine.
+
+Emits the ``repro.serving.metrics/v4`` multi document (default
 ``BENCH_serving.json``; the single-model summary rides along under
 ``single_model``) — tok/s, p99 tick latency, TTFT, deadline-miss rate,
 exposed/hidden paging stalls, shared-pool contention — the
@@ -44,7 +49,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.paging import SharedPagePool, shared_pass_counters
+from repro.core.paging import SharedPagePool, kv_pass_counters
 from repro.core.placement import packed_sizes, plan_for_budget
 from repro.models import transformer as tfm
 from repro.parallel.sharding import freeze_for_serving
@@ -98,7 +103,9 @@ def _bench_multi(args):
         eng = ServingEngine(cfg, packed, batch_slots=args.slots,
                             max_len=args.max_len, plan=plan,
                             seed=args.seed)
-        ms.add_model(name, eng, prefill_chunk=args.prefill_chunk)
+        ms.add_model(name, eng, prefill_chunk=args.prefill_chunk,
+                     kv_paged=args.kv_paged and "kv" in eng.cache,
+                     kv_block_rows=args.kv_block)
         for sname, kw in STREAMS:
             ms.add_stream(name, sname, **kw)
     names = [s[0] for s in STREAMS]
@@ -110,11 +117,13 @@ def _bench_multi(args):
 
     pred_ok = True
     if ms.pool is not None:
-        pred = shared_pass_counters(
+        # the unified replay covers weight members AND (under --kv-paged)
+        # the <name>/kv page tables contending for the same budget
+        pred = kv_pass_counters(
             {name: [p.nbytes for p in ms.model(name).engine.pager.pages]
              for name in tenants
              if ms.model(name).engine.pager is not None},
-            ms.pool.budget_bytes, passes=ms.pass_log)
+            ms.pool.budget_bytes, events=ms.pool.events)
         pred_ok = all(
             all(doc["shared_pool"]["models"][m][k] == pred[m][k]
                 for k in ("swaps", "misses", "pool_hits", "evicted"))
@@ -129,6 +138,8 @@ def _bench_multi(args):
                                 seed=args.seed)
             if plan.paged_bytes(packed_sizes(packed)) > 0:
                 eng.attach_paging()
+            if args.kv_paged and "kv" in eng.cache:
+                eng.attach_kv_paging(args.kv_block)
             solo = Scheduler(eng, prefill_chunk=args.prefill_chunk,
                              async_io=args.async_io)
             for sname, kw in STREAMS:
@@ -140,6 +151,8 @@ def _bench_multi(args):
             exact_ok = exact_ok and (got == want)
             if eng.pager is not None:
                 eng.pager.close()
+            if eng.kv_table is not None:
+                eng.kv_table.close()
 
     ms.close()
     if not (pred_ok and exact_ok):
@@ -170,6 +183,12 @@ def main(argv=None):
                     help="SharedPagePool budget as a fraction of the "
                          "tenants' combined cold bytes (the cross-model "
                          "contention knob)")
+    ap.add_argument("--kv-paged", action="store_true",
+                    help="page the per-slot KV cache through the same "
+                         "budgeted stream as the weights (single model: "
+                         "private table; tenants: <name>/kv pool members)")
+    ap.add_argument("--kv-block", type=int, default=16,
+                    help="KV page size in cache rows")
     io = ap.add_mutually_exclusive_group()
     io.add_argument("--async-io", dest="async_io", action="store_true",
                     default=True,
@@ -191,6 +210,8 @@ def main(argv=None):
                         max_len=args.max_len, plan=plan, seed=args.seed)
     if plan.paged_bytes(sizes) > 0:
         eng.attach_paging()
+    if args.kv_paged:
+        eng.attach_kv_paging(args.kv_block)
     sched = Scheduler(eng, prefill_chunk=args.prefill_chunk,
                       async_io=args.async_io)
     for name, kw in STREAMS:
@@ -209,6 +230,29 @@ def main(argv=None):
         assert summary["paging"]["overlap_frac"] > 0.0, \
             "async run hid no paging stall (overlap_frac == 0)"
         assert summary["paging"]["hidden_s"] > 0.0
+    if args.kv_paged:
+        assert summary["paging"]["kv_swaps"] > 0, "no KV blocks streamed"
+        assert summary["paging"]["kv_writebacks"] > 0
+    if args.kv_paged and args.smoke:
+        # KV paging must change WHERE cache rows live, never the tokens:
+        # re-serve the same traffic on the resident-KV engine and compare
+        ref_eng = ServingEngine(cfg, packed, batch_slots=args.slots,
+                                max_len=args.max_len, plan=plan,
+                                seed=args.seed)
+        if plan.paged_bytes(sizes) > 0:
+            ref_eng.attach_paging()
+        ref_sched = Scheduler(ref_eng, prefill_chunk=args.prefill_chunk,
+                              async_io=args.async_io)
+        for name, kw in STREAMS:
+            ref_sched.add_stream(name, **kw)
+        for req in _tenant_reqs(cfg, args, 0):
+            ref_sched.submit(req, stream=names[req.uid % len(names)])
+        ref_done = ref_sched.run_until_done()
+        assert ({r.uid: r.generated for r in done}
+                == {r.uid: r.generated for r in ref_done}), \
+            "kv-paged tokens diverged from the resident-KV engine"
+        if ref_eng.pager is not None:
+            ref_eng.pager.close()
 
     tick_overhead = None
     if eng.pager is not None:
@@ -232,6 +276,8 @@ def main(argv=None):
                              speedup=rebuild_us / max(cached_us, 1e-9))
     if eng.pager is not None:
         eng.pager.close()
+    if eng.kv_table is not None:
+        eng.kv_table.close()
 
     multi_doc, multi_cfg = _bench_multi(args)
     multi_doc["single_model"] = summary
@@ -241,6 +287,8 @@ def main(argv=None):
                                budget_bytes=budget,
                                prefill_chunk=sched.prefill_chunk,
                                async_io=args.async_io,
+                               kv_paged=args.kv_paged,
+                               kv_block=args.kv_block,
                                multi=multi_cfg)
     validate(multi_doc)
     import json
@@ -261,6 +309,13 @@ def main(argv=None):
           f";exposed_ms={pg['exposed_s'] * 1e3:.2f}"
           f";hidden_ms={pg['hidden_s'] * 1e3:.2f}"
           f";overlap={pg['overlap_frac']:.3f}")
+    if args.kv_paged:
+        print(f"serving_kv_paging,{pg['kv_swaps']},"
+              f"kv_pool_hits={pg['kv_pool_hits']}"
+              f";kv_writebacks={pg['kv_writebacks']}"
+              f";kv_dropped={pg['kv_dropped']}"
+              f";kv_exposed_ms={pg['kv_exposed_s'] * 1e3:.2f}"
+              f";kv_hidden_ms={pg['kv_hidden_s'] * 1e3:.2f}")
     if tick_overhead is not None:
         print(f"serving_thread_cache,{tick_overhead['thread_cached_us']:.2f},"
               f"rebuild_us={tick_overhead['thread_rebuild_us']:.2f}"

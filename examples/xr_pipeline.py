@@ -95,7 +95,7 @@ def main():
     # begins the next one, so the tenants' weight I/O streams while the
     # frame loop computes and only the exposed fence wait costs latency.
     from repro.configs import get_config
-    from repro.core.paging import SharedPagePool, shared_pass_counters
+    from repro.core.paging import SharedPagePool, kv_pass_counters
     from repro.core.placement import packed_sizes, plan_for_budget
     from repro.models import transformer as tfm
     from repro.parallel.sharding import freeze_for_serving
@@ -140,7 +140,11 @@ def main():
     for name, (cfg, packed, plan) in tenants.items():
         eng = ServingEngine(cfg, packed, batch_slots=2, max_len=64, seed=0,
                             plan=plan)
-        ms.add_model(name, eng, prefill_chunk=8)
+        # the assistant's long-context KV cache pages through the SAME
+        # pool budget as everyone's weights (one memory hierarchy); the
+        # SSM tracker has recurrent state, not a KV cache
+        ms.add_model(name, eng, prefill_chunk=8,
+                     kv_paged="kv" in eng.cache, kv_block_rows=8)
     ms.add_stream("assistant", "assistant", priority=1, deadline_ms=20.0)
     ms.add_stream("tracker", "tracker", priority=2, deadline_ms=15.0)
     submit_all(ms, is_multi=True)
@@ -172,19 +176,25 @@ def main():
     # what anyone computes — each tenant's tokens are bit-exact vs
     # serving that model alone on a private pager, and the shared-pool
     # counters follow the static prediction.
-    pred = shared_pass_counters(
+    pred = kv_pass_counters(
         {name: [p.nbytes for p in ms.model(name).engine.pager.pages]
          for name in tenants},
-        pool.budget_bytes, passes=ms.pass_log)
-    for name in tenants:
+        pool.budget_bytes, events=pool.events)
+    for name in pred:                       # weight members AND */kv
         got = doc["shared_pool"]["models"][name]
         assert all(got[k] == pred[name][k]
                    for k in ("swaps", "misses", "pool_hits", "evicted")), \
             (name, got, pred[name])
+    kv_pg = doc["models"]["assistant"]["paging"]
+    print(f"  assistant KV paging: {kv_pg['kv_swaps']} block swaps / "
+          f"{kv_pg['kv_pool_hits']} pool hits / "
+          f"{kv_pg['kv_writebacks']} writebacks through the shared pool")
 
     for name, (cfg, packed, plan) in tenants.items():
         eng = ServingEngine(cfg, packed, batch_slots=2, max_len=64, seed=0,
                             plan=plan).attach_paging()
+        if "kv" in eng.cache:
+            eng.attach_kv_paging(8)        # private table: same tokens
         solo = Scheduler(eng, prefill_chunk=8)
         solo.add_stream(name, priority=1, deadline_ms=20.0)
         n, length, max_new = ((3, 20, 4) if name == "assistant"
@@ -195,8 +205,10 @@ def main():
         got = {r.uid: r.generated for r in served[name]}
         assert got == want, f"{name}: tenant tokens diverge from solo"
         eng.pager.close()
+        if eng.kv_table is not None:
+            eng.kv_table.close()
     print("  tenant tokens bit-exact vs solo private pagers; pool "
-          "counters match shared_pass_counters")
+          "counters (weights AND kv) match kv_pass_counters")
     ms.close()
     print("xr_pipeline OK")
 

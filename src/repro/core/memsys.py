@@ -314,6 +314,25 @@ def overlap_stall(swap_s: float, compute_s: float) -> Dict[str, float]:
                 overlap_frac=(hidden / swap_s) if swap_s > 0 else 0.0)
 
 
+def kv_stream_bytes(valid_rows: int, block_rows: int,
+                    row_bytes: int) -> int:
+    """Host->device bytes ONE tick's KV page stream moves for a slot
+    whose valid cache prefix is ``valid_rows`` rows, under the
+    completed-block policy of :class:`repro.core.paging.KVPageTable`:
+    only full blocks stream (the partially written frontier block stays
+    device-resident — it is still being appended to), so the tick's KV
+    traffic is ``floor(valid / block) * block * row_bytes``.  This is
+    the KV analogue of a weight pass's page traffic, and the quantity
+    that contends for the same shared At-MRAM budget in the paper's §V
+    concurrent-workload story — tests assert the runtime's
+    ``kv_swaps * page_nbytes`` against sums of this closed form."""
+    if block_rows < 1:
+        raise ValueError(f"block_rows must be >= 1, got {block_rows}")
+    if valid_rows < 0 or row_bytes < 0:
+        raise ValueError("valid_rows and row_bytes must be >= 0")
+    return (valid_rows // block_rows) * block_rows * row_bytes
+
+
 Scenarios = Union[str, Sequence[str], PlacementPlan]
 
 

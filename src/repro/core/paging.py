@@ -199,13 +199,18 @@ class SharedPagePool:
         self._cache: "OrderedDict[Tuple[str, int], Tuple[int, Dict[str, PackedParam]]]" = OrderedDict()
         self.live_bytes = 0
         self.counters: Dict[str, Dict[str, Any]] = {}
-        # every member pass in BEGIN order — which, because all member
+        # every member event in BEGIN order — which, because all member
         # fetches funnel through the single worker below, is also the
-        # order the pool actually executes them in.  This is the exact
-        # ``passes=`` sequence :func:`shared_pass_counters` needs, even
-        # when live submissions make tenants begin out of registration
-        # rotation (an idle tenant demand-begins only when it next ticks)
-        self.pass_log: List[str] = []
+        # order the pool actually executes them in.  Events are
+        #   ("pass", model)                       one full weight pass
+        #   ("kv", model, ((page, nbytes), ...))  one KV fetch batch
+        #   ("kvdrop", model, (page, ...))        slot-reuse invalidation
+        # — the exact sequence :func:`kv_pass_counters` replays (and,
+        # filtered to weight passes, the ``passes=`` argument
+        # :func:`shared_pass_counters` needs), even when live submissions
+        # make tenants begin out of registration rotation (an idle tenant
+        # demand-begins only when it next ticks)
+        self.events: List[Tuple] = []
         # ONE fetch worker for every member store: overlapped passes of
         # different tenants serialize here in begin order, keeping the
         # pool's lookup/admit sequence identical to the sync pass order
@@ -216,13 +221,29 @@ class SharedPagePool:
         # overlapped pass's live window survives co-tenant admissions
         self._active_fetch: set = set()
 
-    def register(self, name: str, store: "HostPagedStore") -> None:
+    def register(self, name: str, store: Any) -> None:
+        """Join the pool.  ``store`` is a :class:`HostPagedStore` (weight
+        pages) or a :class:`KVPageTable` (KV-cache pages) — both expose
+        ``swap_count`` / ``miss_count`` / ``pages`` / ``close``, and both
+        kinds of page contend for the SAME budget (one eviction domain)."""
         with self._lock:
             if name in self.members:
                 raise ValueError(f"model {name!r} already joined this pool")
             self.members[name] = store
             self.counters[name] = dict(pool_hits=0, evicted=0,
                                        exposed_s=0.0, hidden_s=0.0)
+
+    @property
+    def pass_log(self) -> List[str]:
+        """One entry per full WEIGHT streaming pass in begin order — the
+        ``passes=`` view of :attr:`events` that ``shared_pass_counters``
+        consumes (KV batches carry their own event kind)."""
+        with self._lock:
+            return [m for kind, m, *_rest in self.events if kind == "pass"]
+
+    def log_event(self, *event) -> None:
+        with self._lock:
+            self.events.append(tuple(event))
 
     def _pass_begin(self, name: str) -> None:
         """Mark ``name``'s pass fetches in flight (eviction-protected)."""
@@ -274,6 +295,19 @@ class SharedPagePool:
                 self._cache[(name, page_idx)] = (nbytes, params)
                 self.live_bytes += nbytes
 
+    def invalidate(self, name: str, page_idx: int) -> bool:
+        """Drop ``name``'s cached page (owner-initiated, e.g. a KV block
+        whose batch slot was handed to a new request).  Unlike pressure
+        eviction this does NOT touch the victim's ``evicted`` counter —
+        the owner declared the bytes dead; returns whether the page was
+        present."""
+        with self._lock:
+            entry = self._cache.pop((name, page_idx), None)
+            if entry is None:
+                return False
+            self.live_bytes -= entry[0]
+            return True
+
     def add_stall(self, name: str, exposed_s: float,
                   hidden_s: float = 0.0) -> None:
         """Account one pass's stall split for ``name``: ``exposed_s`` is
@@ -286,7 +320,7 @@ class SharedPagePool:
     def summary(self) -> Dict[str, Any]:
         """Per-model swap/miss/pool-hit/evict counters plus the
         exposed/hidden stall split + pool state — the ``shared_pool``
-        section of the metrics/v3 JSON.  The stall seconds here are the
+        section of the metrics/v4 JSON.  The stall seconds here are the
         pool's per-model *view* of the same wall time the engines report
         in their own ``paging`` sections; totals must sum ONE of the two,
         never both."""
@@ -332,64 +366,26 @@ def shared_pass_counters(page_nbytes: Dict[str, Sequence[int]],
     ``page_nbytes`` maps each model name to its page sizes in access
     order; ``passes`` is the exact sequence of full streaming passes (one
     entry per model tick, e.g. ``MultiScheduler.pass_log``), defaulting to
-    ``ticks`` round-robin rounds over the models in dict order.  Replays
-    the same deterministic logic as the runtime — demand/prefetch fetch
-    order per :func:`make_schedule`, pool lookup before swap, LRU
-    admission that never evicts the fetching model's pages — so the
-    runtime ``SharedPagePool.summary()`` counters must match this
-    closed-form prediction pass for pass (the multi-tenant analogue of
+    ``ticks`` round-robin rounds over the models in dict order.  The
+    actual replay — demand/prefetch fetch order per :func:`make_schedule`,
+    pool lookup before swap, LRU admission that never evicts the fetching
+    model's pages — lives in :func:`kv_pass_counters` (one copy of the
+    admit semantics, shared with the KV event replay); this is its
+    weights-only view, so the runtime ``SharedPagePool.summary()``
+    counters must match it pass for pass (the multi-tenant analogue of
     :func:`pass_counters`)."""
     order = list(page_nbytes.keys())
     if passes is None:
         passes = [m for _ in range(ticks) for m in order]
-    cache: "OrderedDict[Tuple[str, int], int]" = OrderedDict()
-    live_bytes = 0
-    out = {m: dict(swaps=0, misses=0, pool_hits=0, evicted=0)
-           for m in order}
-
-    def fetch(model: str, idx: int) -> None:
-        nonlocal live_bytes
-        key = (model, idx)
-        if key in cache:
-            cache.move_to_end(key)
-            out[model]["pool_hits"] += 1
-            return
-        out[model]["swaps"] += 1
-        nb = int(page_nbytes[model][idx])
-        if nb > budget_bytes:
-            return                  # mirrors admit's never-fits pre-check
-        for victim in list(cache.keys()):
-            if live_bytes + nb <= budget_bytes:
-                break
-            if victim[0] == model:
-                continue
-            live_bytes -= cache.pop(victim)
-            out[victim[0]]["evicted"] += 1
-        if live_bytes + nb <= budget_bytes:
-            cache[key] = nb
-            live_bytes += nb
-
-    for model in passes:
-        live: set = set()
-        inflight: set = set()
-        for e in make_schedule(len(page_nbytes[model]), resident_slots):
-            if e.page in live:
-                pass
-            elif e.page in inflight:
-                inflight.discard(e.page)
-                live.add(e.page)
-            else:
-                out[model]["misses"] += 1
-                fetch(model, e.page)
-                live.add(e.page)
-            if e.prefetch_next is not None and e.prefetch_next not in live:
-                inflight.add(e.prefetch_next)
-                fetch(model, e.prefetch_next)
-            if e.evicts is not None:
-                live.discard(e.evicts)
-        # pass end: the store reclaims its live slots (cold next pass);
-        # pool cache entries persist until evicted by pressure
-    return out
+    out = kv_pass_counters(page_nbytes, budget_bytes,
+                           [("pass", m) for m in passes],
+                           resident_slots=resident_slots)
+    for m in order:
+        out.setdefault(m, dict(swaps=0, misses=0, pool_hits=0, evicted=0,
+                               dropped=0))
+    # weight passes never drop pages; keep the historical key set
+    return {m: {k: n for k, n in c.items() if k != "dropped"}
+            for m, c in out.items()}
 
 
 class HostPagedStore:
@@ -516,7 +512,7 @@ class PageStream:
         self._sched = make_schedule(len(store.pages), resident_slots)
         self._inflight: Dict[int, Future] = {}
         if store.pool is not None:
-            store.pool.pass_log.append(store.name)
+            store.pool.log_event("pass", store.name)
         self._gen = self._iterate()
 
     def __iter__(self):
@@ -613,7 +609,7 @@ class AsyncPageStream:
         self._futures: List[Tuple[int, Future]] = []
         self._marks: List[Future] = []
         if pool is not None:
-            pool.pass_log.append(store.name)
+            pool.log_event("pass", store.name)
             # the eviction guard must bracket pass EXECUTION, not pass
             # submission: marker tasks on the serialized fetch worker set
             # the guard right before this pass's first fetch runs and
@@ -740,6 +736,388 @@ def pass_counters(n_pages: int, resident_slots: int = 2) -> Dict[str, int]:
         if e.evicts is not None:
             live.discard(e.evicts)
     return dict(swaps=swaps, misses=misses)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache paging: the per-slot KV cache flows through the SAME budget
+# ---------------------------------------------------------------------------
+
+class KVPageTable:
+    """Pages a serving engine's per-slot KV cache through the *same*
+    device-bytes budget — and the same begin/fence overlap — the weight
+    pages use (the paper's one-memory-hierarchy constraint: §V's
+    concurrent workloads share ONE At-MRAM, so long-context KV state
+    cannot dodge the budget the weights respect).
+
+    Addressing: a KV *page* is ``block_rows`` consecutive cache rows of
+    one batch slot, across every layer and both k and v — page index
+    ``slot * n_blocks + block`` (vLLM-style fixed-size blocks).  The
+    engine's preallocated device cache stays the compute working buffer
+    (jit shapes never change); the authoritative copy of every
+    *completed* block lives in this table's host image:
+
+      * a block is written back host-ward exactly once, when the
+        prefill/decode frontier crosses its end (KV writes are
+        append-only, so completed blocks are immutable from then on);
+      * each tick the live span's completed blocks stream host->device
+        through the pool and are scattered over the device cache — a
+        pooled block satisfies the fetch without a swap (``pool_hits``),
+        eviction under pressure is the pool's cross-model call, and a
+        pool-less table re-swaps every block every pass (exactly the
+        private ``HostPagedStore`` discipline);
+      * the partially filled *frontier* block stays device-resident — it
+        is still being appended to (vLLM keeps the active block on-GPU
+        for the same reason);
+      * when a batch slot is handed to a new request, the old request's
+        pooled blocks are dropped (``queue_drop`` / ``flush_drops`` — the
+        flush runs at the next fence, after every in-flight fetch has
+        settled, so a late fetch can never resurrect a stale page).
+
+    Counters (``swap_count`` == ``miss_count``: every non-pooled KV fetch
+    is a demand swap), writebacks and drops follow the static
+    :func:`kv_pass_counters` replay of the pool's event log.
+    """
+
+    def __init__(self, cache_kv: Dict[str, Any], *, block_rows: int = 16,
+                 pool: Optional[SharedPagePool] = None,
+                 name: str = "default/kv",
+                 device: Optional[jax.Device] = None):
+        if block_rows < 1:
+            raise ValueError(f"block_rows must be >= 1, got {block_rows}")
+        k = np.asarray(cache_kv["k"])
+        v = np.asarray(cache_kv["v"])
+        # cache layout (n_layers, n_slots, n_kv_heads, max_len, head_dim)
+        self.n_slots = int(k.shape[1])
+        self.max_len = int(k.shape[3])
+        self.block_rows = int(block_rows)
+        self.n_blocks = -(-self.max_len // self.block_rows)
+        self.host = dict(k=k.copy(), v=v.copy())
+        self.row_nbytes = (k.nbytes + v.nbytes) // (self.n_slots
+                                                    * self.max_len)
+        self.page_nbytes = self.block_rows * self.row_nbytes
+        self.name = name
+        self.pool = pool
+        self.device = device or jax.devices()[0]
+        self.swap_count = 0
+        self.miss_count = 0
+        self.pool_hits = 0
+        self.writebacks = 0          # blocks written back host-ward
+        self.dropped = 0             # pooled blocks invalidated (slot reuse)
+        # pool-less prediction log (pooled tables log into pool.events)
+        self.events: List[Tuple] = []
+        self._pending_drops: set = set()
+        self._exec = ThreadPoolExecutor(max_workers=1)
+        if pool is not None:
+            pool.register(name, self)
+
+    @property
+    def pages(self) -> range:
+        return range(self.n_slots * self.n_blocks)
+
+    @property
+    def _fetch_exec(self) -> ThreadPoolExecutor:
+        return self._exec if self.pool is None else self.pool._exec
+
+    def _log(self, *event) -> None:
+        if self.pool is not None:
+            self.pool.log_event(*event)
+        else:
+            self.events.append(tuple(event))
+
+    def page_index(self, slot: int, block: int) -> int:
+        return slot * self.n_blocks + block
+
+    def _block_rows_span(self, page_idx: int) -> Tuple[int, int, int]:
+        slot, blk = divmod(page_idx, self.n_blocks)
+        a = blk * self.block_rows
+        return slot, a, min(a + self.block_rows, self.max_len)
+
+    def _fetch_block(self, page_idx: int) -> Dict[str, Any]:
+        if self.pool is not None:
+            cached = self.pool.lookup(self.name, page_idx)
+            if cached is not None:
+                self.pool_hits += 1
+                return cached            # pool hit: no host->device swap
+        slot, a, b = self._block_rows_span(page_idx)
+        rows = dict(
+            k=jax.device_put(self.host["k"][:, slot, :, a:b], self.device),
+            v=jax.device_put(self.host["v"][:, slot, :, a:b], self.device))
+        self.swap_count += 1
+        self.miss_count += 1
+        if self.pool is not None:
+            self.pool.admit(self.name, page_idx,
+                            (b - a) * self.row_nbytes, rows)
+        return rows
+
+    def writeback(self, slot: int, block_lo: int, block_hi: int,
+                  cache_kv: Dict[str, Any]) -> None:
+        """Completed blocks ``[block_lo, block_hi)`` of ``slot`` move
+        device->host from the engine's cache buffer — each row exactly
+        once, at the moment its block fills (append-only KV means the
+        block is immutable from here on)."""
+        if block_hi <= block_lo:
+            return
+        a = block_lo * self.block_rows
+        b = min(block_hi * self.block_rows, self.max_len)
+        for part in ("k", "v"):
+            self.host[part][:, slot, :, a:b] = np.asarray(
+                cache_kv[part][:, slot, :, a:b])
+        self.writebacks += block_hi - block_lo
+
+    def queue_drop(self, slot: int) -> None:
+        """Mark ``slot``'s pages stale (its request retired / the slot is
+        being reassigned).  The actual pool invalidation is deferred to
+        :meth:`flush_drops` at the next fence — after every in-flight
+        fetch has settled — so a still-executing fetch of the old
+        request's block cannot re-admit a page after the drop."""
+        self._pending_drops.add(int(slot))
+
+    def flush_drops(self) -> None:
+        if not self._pending_drops:
+            return
+        for slot in sorted(self._pending_drops):
+            pages = range(slot * self.n_blocks, (slot + 1) * self.n_blocks)
+            if self.pool is not None:
+                removed = tuple(p for p in pages
+                                if self.pool.invalidate(self.name, p))
+                if removed:
+                    self.pool.log_event("kvdrop", self.name, removed)
+                self.dropped += len(removed)
+            # stale rows must never be served again: zero them so a bug
+            # that fetches a dropped block surfaces as loud wrong bytes
+            self.host["k"][:, slot] = 0
+            self.host["v"][:, slot] = 0
+        self._pending_drops.clear()
+
+    def begin_pass(self, full_blocks: Dict[int, int]) -> "KVPageStream":
+        """Kick one overlapped KV streaming pass: ``full_blocks`` maps
+        each live slot to its completed-block count; every listed block's
+        fetch is submitted up front (slot order, then block order) and
+        runs while the caller computes; blocks that complete between
+        begin and fence are demand-fetched at the fence (that wait lands
+        exposed, exactly where it belongs)."""
+        return KVPageStream(self, full_blocks)
+
+    def close(self, wait: bool = True) -> None:
+        self._exec.shutdown(wait=wait, cancel_futures=not wait)
+
+    def __enter__(self) -> "KVPageTable":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+class KVPageStream:
+    """One overlapped KV streaming pass — the KV counterpart of
+    :class:`AsyncPageStream`, with the same exposed/hidden stall split
+    (and the same ``stall += swap - hidden`` identity against
+    :func:`repro.core.memsys.overlap_stall`).  ``fence(full_blocks)``
+    takes the *current* completed-block spans so blocks that filled
+    during the compute window are demand-fetched before the join."""
+
+    def __init__(self, table: KVPageTable, full_blocks: Dict[int, int]):
+        self._table = table
+        self._begun = {int(s): int(n) for s, n in full_blocks.items()}
+        self._futures: List[Tuple[int, Future]] = []
+        self._marks: List[Future] = []
+        self._result: Optional[Dict[int, Dict[str, Any]]] = None
+        self._closed = False
+        self.swap_s = 0.0
+        self.window_s = 0.0
+        self.exposed_s = 0.0
+        self.hidden_s = 0.0
+        self._t_last_done: Optional[float] = None
+        self._t_begin = time.perf_counter()
+        pages = self._page_list(self._begun)
+        pool = table.pool
+        if pool is not None and pages:
+            # the guard brackets pass EXECUTION on the serialized worker,
+            # exactly like AsyncPageStream's marker tasks
+            self._marks.append(
+                table._fetch_exec.submit(pool._pass_begin, table.name))
+        self._submit(pages)
+        if pool is not None and pages:
+            self._marks.append(
+                table._fetch_exec.submit(pool._pass_end, table.name))
+        if not self._futures:
+            # nothing streamed during the window: an all-demand fence
+            # must read hidden == 0, never the whole compute window
+            self._t_last_done = self._t_begin
+
+    def _page_list(self, full_blocks: Dict[int, int],
+                   already: Optional[Dict[int, int]] = None) -> List[int]:
+        out = []
+        for slot in sorted(full_blocks):
+            lo = 0 if already is None else already.get(slot, 0)
+            for blk in range(lo, full_blocks[slot]):
+                out.append(self._table.page_index(slot, blk))
+        return out
+
+    def _submit(self, pages: List[int], track: bool = True) -> None:
+        t = self._table
+        if not pages:
+            return
+        t._log("kv", t.name, tuple((p, t.page_nbytes) for p in pages))
+        for p in pages:
+            fut = t._fetch_exec.submit(t._fetch_block, p)
+            if track:
+                # only the up-front (begin-batch) futures stamp the
+                # stream-ready time: demand fetches submitted at the
+                # fence complete after it and land wholly in exposed —
+                # letting them stamp would inflate hidden to the entire
+                # compute window (the trap AsyncPageStream avoids by
+                # stamping only the last up-front fetch)
+                fut.add_done_callback(self._mark_done)
+            self._futures.append((p, fut))
+
+    def _mark_done(self, _fut) -> None:
+        self._t_last_done = time.perf_counter()
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None or self._closed
+
+    def fence(self, full_blocks: Optional[Dict[int, int]] = None
+              ) -> Dict[int, Dict[str, Any]]:
+        """Join the pass: demand-fetch blocks completed since begin, wait
+        for every page, and record the exposed/hidden split.  Returns
+        {page_index: {"k": rows, "v": rows}} for the engine to scatter.
+        Idempotent, like :meth:`AsyncPageStream.fence`."""
+        if self._closed:
+            raise RuntimeError("fence() after close(): the pass was "
+                               "cancelled")
+        if self._result is not None:
+            return self._result
+        t_fence = time.perf_counter()
+        if full_blocks is not None:
+            self._submit(self._page_list(full_blocks, already=self._begun),
+                         track=False)
+        out: Dict[int, Dict[str, Any]] = {}
+        for p, fut in self._futures:
+            out[p] = fut.result()
+        jax.block_until_ready([r for rows in out.values()
+                               for r in rows.values()])
+        t_join = time.perf_counter()
+        t_ready = (self._t_last_done if self._t_last_done is not None
+                   else t_join)
+        self.window_s = t_fence - self._t_begin
+        self.exposed_s = t_join - t_fence
+        self.hidden_s = min(max(t_ready - self._t_begin, 0.0),
+                            self.window_s)
+        self.swap_s = self.hidden_s + self.exposed_s
+        self._futures.clear()
+        self._result = out
+        return out
+
+    def close(self) -> None:
+        for fut in [f for _p, f in self._futures] + self._marks:
+            if not fut.cancel():
+                try:
+                    fut.result()
+                except Exception:
+                    pass             # executor already shut down mid-drain
+        self._futures.clear()
+        self._marks.clear()
+        if self._result is None:
+            self._closed = True
+        if self._table.pool is not None:
+            self._table.pool._pass_end(self._table.name)
+
+    def __enter__(self) -> "KVPageStream":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+def kv_pass_counters(page_nbytes: Dict[str, Sequence[int]],
+                     budget_bytes: Optional[int],
+                     events: Sequence[Tuple],
+                     resident_slots: int = 2) -> Dict[str, Dict[str, int]]:
+    """Static per-member counter prediction for a pool whose members mix
+    weight stores AND KV page tables — the unified eviction/accounting
+    domain of KV-cache paging.
+
+    ``events`` is the pool's :attr:`SharedPagePool.events` log (or a
+    pool-less :attr:`KVPageTable.events`); ``page_nbytes`` maps each
+    *weight* member to its page sizes in access order (KV batches carry
+    their sizes inline).  ``budget_bytes=None`` models a pool-less table:
+    no cache, every fetch swaps.  Replays the runtime's exact
+    lookup/admit/evict/invalidate sequence, so
+    :meth:`SharedPagePool.summary` counters (and a private table's
+    ``swap_count``) must match member for member.  On a weights-only
+    event stream this agrees with :func:`shared_pass_counters`."""
+    cache: "OrderedDict[Tuple[str, int], int]" = OrderedDict()
+    live_bytes = 0
+    out: Dict[str, Dict[str, int]] = {}
+
+    def member(m: str) -> Dict[str, int]:
+        return out.setdefault(m, dict(swaps=0, misses=0, pool_hits=0,
+                                      evicted=0, dropped=0))
+
+    def fetch(model: str, idx: int, nb: int) -> None:
+        nonlocal live_bytes
+        key = (model, idx)
+        if budget_bytes is not None and key in cache:
+            cache.move_to_end(key)
+            member(model)["pool_hits"] += 1
+            return
+        member(model)["swaps"] += 1
+        if budget_bytes is None or nb > budget_bytes:
+            return                  # mirrors admit's never-fits pre-check
+        for victim in list(cache.keys()):
+            if live_bytes + nb <= budget_bytes:
+                break
+            if victim[0] == model:
+                continue
+            live_bytes -= cache.pop(victim)
+            member(victim[0])["evicted"] += 1
+        if live_bytes + nb <= budget_bytes:
+            cache[key] = nb
+            live_bytes += nb
+
+    for event in events:
+        kind, model = event[0], event[1]
+        if kind == "pass":
+            m = member(model)
+            sizes = page_nbytes[model]
+            live: set = set()
+            inflight: set = set()
+            for e in make_schedule(len(sizes), resident_slots):
+                if e.page in live:
+                    pass
+                elif e.page in inflight:
+                    inflight.discard(e.page)
+                    live.add(e.page)
+                else:
+                    m["misses"] += 1
+                    fetch(model, e.page, int(sizes[e.page]))
+                    live.add(e.page)
+                if e.prefetch_next is not None and e.prefetch_next not in live:
+                    inflight.add(e.prefetch_next)
+                    fetch(model, e.prefetch_next,
+                          int(sizes[e.prefetch_next]))
+                if e.evicts is not None:
+                    live.discard(e.evicts)
+        elif kind == "kv":
+            m = member(model)
+            for page, nb in event[2]:
+                before = m["pool_hits"]
+                fetch(model, int(page), int(nb))
+                if m["pool_hits"] == before:
+                    m["misses"] += 1     # every non-pooled KV fetch swaps
+        elif kind == "kvdrop":
+            for page in event[2]:
+                nb = cache.pop((model, int(page)), None)
+                if nb is not None:
+                    live_bytes -= nb
+                    member(model)["dropped"] += 1
+        else:
+            raise ValueError(f"unknown pool event kind {kind!r}")
+    return out
 
 
 def thread_packed(tree: Any, params: "Dict[str, PackedParam]") -> Any:

@@ -9,17 +9,32 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """jax.make_mesh across jax versions: AxisType (explicit-sharding API)
+    only exists on newer jax; older releases default every axis to Auto
+    anyway, so omitting the argument is semantically identical there.
+    Releases predating jax.make_mesh itself fall back to constructing
+    jax.sharding.Mesh directly over the device grid."""
+    make = getattr(jax, "make_mesh", None)
+    if make is None:
+        import math
+        import numpy as np
+        n = math.prod(shape)
+        devs = np.asarray(jax.devices()[:n]).reshape(shape)
+        return jax.sharding.Mesh(devs, axes)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return make(shape, axes)
+    return make(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 = one v5e pod (256 chips); multi_pod adds a 2-pod axis (512)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)

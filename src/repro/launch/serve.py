@@ -30,7 +30,7 @@ the tick (``--sync-io`` restores the blocking stream-then-step tick).
 When a plan pages, single-model runs are verified bit-exact against the
 fully resident uniform plan AND — in async mode — against the
 synchronous streaming path (disable with ``--no-verify``).  Metrics are
-emitted as the ``repro.serving.metrics/v3`` JSON (stdout, and
+emitted as the ``repro.serving.metrics/v4`` JSON (stdout, and
 ``--metrics-json PATH`` to persist).
 """
 
@@ -43,7 +43,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.paging import SharedPagePool, shared_pass_counters
+from repro.core.paging import SharedPagePool, kv_pass_counters
 from repro.core.placement import (Placement, PlacementPlan, packed_sizes,
                                   plan_for_budget)
 from repro.models import transformer as tfm
@@ -62,11 +62,13 @@ def _requests(cfg, n, max_new, seed=0):
 
 
 def _serve(cfg, packed, plan, args, paged: bool,
-           async_io: bool = None):
+           async_io: bool = None, kv_paged: bool = False):
     eng = ServingEngine(cfg, packed, batch_slots=args.slots,
                         max_len=args.max_len, plan=plan, seed=args.seed)
     if paged:
         eng.attach_paging()
+    if kv_paged:
+        eng.attach_kv_paging(args.kv_block)
     sched = Scheduler(eng, prefill_chunk=args.prefill_chunk,
                       async_io=args.async_io if async_io is None
                       else async_io)
@@ -113,7 +115,8 @@ def _serve_tenants(models, args, pool):
         eng = ServingEngine(cfg, packed, batch_slots=args.slots,
                             max_len=args.max_len, plan=plan,
                             seed=args.seed)
-        ms.add_model(name, eng, prefill_chunk=args.prefill_chunk)
+        ms.add_model(name, eng, prefill_chunk=args.prefill_chunk,
+                     kv_paged=args.kv_paged, kv_block_rows=args.kv_block)
         ms.add_stream(name, "xr", priority=1, deadline_ms=args.deadline_ms)
         ms.add_stream(name, "background")
     for salt, (name, (cfg, _p, _pl)) in enumerate(models.items()):
@@ -132,6 +135,8 @@ def _serve_solo(name, cfg, packed, plan, args, salt):
     sizes = packed_sizes(packed)
     if plan.paged_bytes(sizes) > 0:
         eng.attach_paging()
+    if args.kv_paged and "kv" in eng.cache:
+        eng.attach_kv_paging(args.kv_block)
     sched = Scheduler(eng, prefill_chunk=args.prefill_chunk,
                       async_io=args.async_io)
     sched.add_stream("xr", priority=1, deadline_ms=args.deadline_ms)
@@ -141,6 +146,8 @@ def _serve_solo(name, cfg, packed, plan, args, salt):
     done = sched.run_until_done()
     if eng.pager is not None:
         eng.pager.close()
+    if eng.kv_table is not None:
+        eng.kv_table.close()
     return {r.uid: r.generated for r in done}
 
 
@@ -181,17 +188,20 @@ def _main_multi(args):
         print(f"  shared pool: {ps['cached_pages']} pages cached "
               f"({ps['live_bytes']}/{ps['budget_bytes']} B), "
               f"{ps['evictions']} cross-model evictions")
-        pred = shared_pass_counters(
+        # kv_pass_counters replays the pool's full event log (weight
+        # passes AND kv batches/drops), so one prediction covers every
+        # member; on a weights-only run it equals shared_pass_counters
+        pred = kv_pass_counters(
             {name: [p.nbytes for p in ms.model(name).engine.pager.pages]
              for name in models
              if ms.model(name).engine.pager is not None},
-            pool.budget_bytes, passes=ms.pass_log)
+            pool.budget_bytes, events=pool.events)
         pred_ok = all(
             all(ps["models"][m][k] == pred[m][k]
                 for k in ("swaps", "misses", "pool_hits", "evicted"))
             for m in pred)
         print("  pool counters " + ("MATCH" if pred_ok else "DIVERGE FROM")
-              + " the static shared_pass_counters prediction")
+              + " the static kv_pass_counters prediction")
     else:
         pred_ok = True
 
@@ -244,6 +254,14 @@ def main(argv=None):
                          "admission; misses are reported, not dropped)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="max prompt tokens absorbed per tick per slot")
+    ap.add_argument("--kv-paged", action="store_true",
+                    help="page the per-slot KV cache through the same "
+                         "budgeted page stream as the weights (one memory "
+                         "hierarchy; with --models, KV blocks join the "
+                         "SharedPagePool as <model>/kv members)")
+    ap.add_argument("--kv-block", type=int, default=16,
+                    help="KV page size in cache rows (vLLM-style fixed "
+                         "blocks)")
     io = ap.add_mutually_exclusive_group()
     io.add_argument("--async-io", dest="async_io", action="store_true",
                     default=True,
@@ -293,7 +311,8 @@ def main(argv=None):
         plan = PlacementPlan.uniform(args.scenario, bits=args.bits)
         paged = False
 
-    done, sched, eng = _serve(cfg, packed, plan, args, paged)
+    done, sched, eng = _serve(cfg, packed, plan, args, paged,
+                              kv_paged=args.kv_paged)
     total_tokens = sum(len(r.generated) for r in done)
     place = ("mixed:" + "+".join(plan.scenarios_used())
              if not plan.is_uniform else plan.default.scenario)
@@ -310,13 +329,24 @@ def main(argv=None):
               f"{pg['exposed_s'] * 1e3:.1f} ms exposed + "
               f"{pg['hidden_s'] * 1e3:.1f} ms hidden behind compute "
               f"(overlap {pg['overlap_frac'] * 100:.0f}%)")
+    if args.kv_paged:
+        pg = summary["paging"]
+        print(f"kv paging: {pg['kv_block_rows']}-row blocks, "
+              f"{pg['kv_swaps']} swaps, {pg['kv_pool_hits']} pool hits, "
+              f"{pg['kv_writebacks']} writebacks, "
+              f"{pg['kv_dropped']} dropped; "
+              f"{pg['kv_exposed_s'] * 1e3:.1f} ms exposed + "
+              f"{pg['kv_hidden_s'] * 1e3:.1f} ms hidden")
     if args.deadline_ms is not None:
         dl = summary["deadlines"]
         print(f"deadlines: {dl['missed']}/{dl['with_deadline']} missed "
               f"({dl['miss_rate'] * 100:.0f}% at {args.deadline_ms} ms)")
 
     ok = True
-    if paged and not args.no_verify:
+    if (paged or args.kv_paged) and not args.no_verify:
+        # the resident reference serves with fully resident weights AND a
+        # fully resident KV cache — the pre-paging engine the paged runs
+        # must match token for token
         ref, _sched2, _eng2 = _serve(
             cfg, packed,
             PlacementPlan.uniform("l1mram", bits=args.bits), args,
@@ -331,7 +361,8 @@ def main(argv=None):
             # the overlapped pipeline must change WHEN pages move, never
             # what the step computes: re-serve on the blocking sync path
             sref, ssched, seng = _serve(cfg, packed, plan, args,
-                                        paged=True, async_io=False)
+                                        paged=paged, async_io=False,
+                                        kv_paged=args.kv_paged)
             sync_tokens = {r.uid: r.generated for r in sref}
             sync_ok = got == sync_tokens
             ctr_ok = (seng.swap_count == eng.swap_count
@@ -345,7 +376,10 @@ def main(argv=None):
                      else f", counters DIVERGED (sync "
                           f"{seng.swap_count}/{seng.miss_count} vs async "
                           f"{eng.swap_count}/{eng.miss_count})"))
-            seng.pager.close()
+            if seng.pager is not None:
+                seng.pager.close()
+            if seng.kv_table is not None:
+                seng.kv_table.close()
 
     print(sched.metrics.to_json(paging=eng.paging_summary()))
     if args.metrics_json:

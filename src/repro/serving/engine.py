@@ -155,7 +155,12 @@ class ServingEngine:
         self.finished: List[Request] = []
 
         self._decode = jax.jit(self._decode_impl)
-        self._prefill_cache: Dict[Tuple[int, bool], Callable] = {}
+        # keyed by (bucket, add_prefix, kv_span): pow2 buckets x pow2 KV
+        # spans = O(log^2 max_len) compiled prefill programs (the ROADMAP
+        # KV-span-slicing note — chunks no longer attend the full max_len
+        # cache, only the next pow2 >= insert_at + bucket)
+        self._prefill_cache: Dict[Tuple[int, bool, Optional[int]],
+                                  Callable] = {}
 
         # §II-B2 live paging (attach_paging).  Stall accounting is split
         # the way the paper's At-MRAM story demands: `exposed` is paging
@@ -176,6 +181,18 @@ class ServingEngine:
         self._inflight_pass = None        # AsyncPageStream begun, unfenced
         self._thread_template = None      # (treedef, slots) cache
 
+        # KV-cache paging (attach_kv_paging): the per-slot KV cache flows
+        # through the SAME pool budget and the SAME begin/fence overlap
+        # as the weight pages — one memory hierarchy, the paper's actual
+        # constraint.  kv_stall_s / kv_hidden_s are the KV share of the
+        # combined paging_stall_s / paging_hidden_s totals.
+        self.kv_table = None
+        self._inflight_kv = None          # KVPageStream begun, unfenced
+        self.kv_stall_s = 0.0
+        self.kv_hidden_s = 0.0
+        self.last_kv_overlap: Optional[Dict[str, float]] = None
+        self._kv_synced = np.zeros(batch_slots, np.int64)  # blocks on host
+
     # -- jitted bodies --------------------------------------------------------
     def _decode_impl(self, params, tokens, cache, pos_vec):
         # batched decode with PER-SLOT positions (continuous batching):
@@ -184,25 +201,45 @@ class ServingEngine:
                                  engine=self.plan)
         return logits, cache
 
-    def _prefill_for_bucket(self, bucket: int, add_prefix: bool) -> Callable:
-        """Batched multi-slot prefill for one (bucket, prefix) shape:
-        gather the k slot cache rows, run a batch-k step at per-slot cache
-        offsets, scatter the rows back.  The batch is always padded to the
-        full slot count, so the jit cache is keyed only by the power-of-two
-        bucket (and, for meta-token models, whether the prefix is built).
-        """
-        key = (int(bucket), bool(add_prefix))
+    def _prefill_for_bucket(self, bucket: int, add_prefix: bool,
+                            kv_span: Optional[int] = None) -> Callable:
+        """Batched multi-slot prefill for one (bucket, prefix, kv_span)
+        shape: gather the k slot cache rows, slice the KV cache to the
+        ``kv_span`` prefix (masked-out keys beyond the span are exact
+        no-ops, so attending only the live rows changes FLOPs, never
+        values), run a batch-k step at per-slot cache offsets, scatter
+        the rows back.  The batch is always padded to the full slot
+        count, so the jit cache is keyed by the power-of-two bucket, the
+        power-of-two kv span, and (for meta-token models) whether the
+        prefix is built — O(log^2 max_len) programs in place of the old
+        full-cache O(log)."""
+        key = (int(bucket), bool(add_prefix),
+               None if kv_span is None else int(kv_span))
         if key not in self._prefill_cache:
             def impl(params, tokens, cache, slot_idx, pos_vec):
                 sub = jax.tree_util.tree_map(
                     lambda c: jnp.take(c, slot_idx, axis=1), cache)
+                if kv_span is not None:
+                    sub = dict(sub, kv=dict(
+                        k=sub["kv"]["k"][:, :, :, :kv_span],
+                        v=sub["kv"]["v"][:, :, :, :kv_span]))
                 logits, sub = tfm.step(params, tokens, sub, pos_vec,
                                        self.cfg, engine=self.plan,
                                        add_prefix=add_prefix)
-                cache = jax.tree_util.tree_map(
-                    lambda c, s_: c.at[:, slot_idx].set(s_.astype(c.dtype)),
-                    cache, sub)
-                return logits, cache
+                out = {}
+                for part, c in cache.items():
+                    s_part = sub[part]
+                    if part == "kv" and kv_span is not None:
+                        out[part] = {
+                            n: c[n].at[:, slot_idx, :, :kv_span].set(
+                                s_part[n].astype(c[n].dtype))
+                            for n in ("k", "v")}
+                    else:
+                        out[part] = jax.tree_util.tree_map(
+                            lambda cc, ss: cc.at[:, slot_idx].set(
+                                ss.astype(cc.dtype)),
+                            c, s_part)
+                return logits, out
             self._prefill_cache[key] = jax.jit(impl)
         return self._prefill_cache[key]
 
@@ -288,16 +325,128 @@ class ServingEngine:
                   for kind, leaf in slots]
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
+    # -- KV-cache paging through the same pool --------------------------------
+    def attach_kv_paging(self, block_rows: int = 16, *,
+                         pool: Optional[Any] = None,
+                         name: Optional[str] = None) -> "ServingEngine":
+        """Page the per-slot KV cache through the SAME device-bytes
+        budget (and the same begin/fence overlap) the weight pages use.
+
+        The preallocated device cache stays the compute buffer — jit
+        shapes never change — but the authoritative copy of every
+        *completed* ``block_rows``-row block lives in a
+        :class:`~repro.core.paging.KVPageTable` host image: blocks are
+        written back once when the append-only frontier crosses them,
+        and each tick the admitted slots' ``[0, valid)`` spans stream
+        host->device through the pool alongside the weight pages (one
+        unified eviction domain; pooled blocks re-fetch swap-free).
+        With ``pool``, the table JOINS the shared budget under ``name``
+        (default ``<weights-name>/kv``); without one it keeps a private
+        no-cache stream, re-swapping every block every pass — exactly
+        the private ``HostPagedStore`` discipline.
+
+        Attach before serving: the table snapshots the (empty) cache."""
+        from repro.core.paging import KVPageTable
+
+        if "kv" not in self.cache:
+            raise ValueError(f"family {self.cfg.family!r} has no KV cache "
+                             "to page (recurrent state is not paged)")
+        if self.kv_table is not None:
+            raise ValueError("KV paging already attached")
+        if self.waiting or any(r is not None for r in self.slot_req):
+            raise ValueError("attach_kv_paging before submitting work: "
+                             "the host image snapshots an idle cache")
+        if name is None:
+            name = (self.pager.name if self.pager is not None
+                    else "default") + "/kv"
+        self.kv_table = KVPageTable(self.cache["kv"], block_rows=block_rows,
+                                    pool=pool, name=name)
+        self._kv_synced[:] = 0
+        return self
+
+    def _kv_valid(self, i: int) -> int:
+        """Valid KV rows of slot ``i`` — the admitted request's
+        ``[0, slot_pos)`` prefix (during chunked prefill: the prefix plus
+        the tokens absorbed so far)."""
+        r = self.slot_req[i]
+        if r is None or r.prefill_pos == 0:
+            return 0
+        if r.prefill_pos < len(r.prompt):
+            return self.cfg.n_meta_tokens + r.prefill_pos
+        return int(self.slot_pos[i])
+
+    def _kv_full_blocks(self) -> Dict[int, int]:
+        """{slot: completed-block count} over the occupied slots — the
+        span map one KV streaming pass fetches."""
+        block = self.kv_table.block_rows
+        out = {}
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            full = self._kv_valid(i) // block
+            if full > 0:
+                out[i] = full
+        return out
+
+    def _scatter_kv(self, blocks: Dict[int, Any]) -> None:
+        """Fetched KV pages -> the device cache buffer (rows beyond the
+        spans keep whatever was there; the causal/cache-length masks make
+        them exact no-ops).  A slot's fetched blocks are always the
+        contiguous ``[0, full*block_rows)`` prefix, so they scatter as
+        ONE update per slot — each un-jitted ``.at[].set`` copies the
+        whole cache buffer, so this is O(slots), not O(pages)."""
+        if not blocks:
+            return
+        k, v = self.cache["kv"]["k"], self.cache["kv"]["v"]
+        nb = self.kv_table.n_blocks
+        by_slot: Dict[int, List[Any]] = {}
+        for page in sorted(blocks):        # slot-major, block-ascending
+            slot, _blk = divmod(page, nb)
+            by_slot.setdefault(slot, []).append(blocks[page])
+        for slot, rows in by_slot.items():
+            if self.slot_req[slot] is None:
+                continue        # retired mid-pass: rows are dead anyway
+            ks = (rows[0]["k"] if len(rows) == 1
+                  else jnp.concatenate([r["k"] for r in rows], axis=2))
+            vs = (rows[0]["v"] if len(rows) == 1
+                  else jnp.concatenate([r["v"] for r in rows], axis=2))
+            hi = ks.shape[2]
+            k = k.at[:, slot, :, :hi].set(ks.astype(k.dtype))
+            v = v.at[:, slot, :, :hi].set(vs.astype(v.dtype))
+        self.cache["kv"] = dict(k=k, v=v)
+
+    def sync_kv_tick(self) -> None:
+        """End-of-tick writeback: blocks the append-only frontier
+        completed this tick move device->host exactly once, making them
+        fetchable (and poolable) from the next pass on.  Driven by the
+        Scheduler's tick_compute and the legacy step() loop."""
+        if self.kv_table is None:
+            return
+        block = self.kv_table.block_rows
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            full = self._kv_valid(i) // block
+            if full > self._kv_synced[i]:
+                self.kv_table.writeback(i, int(self._kv_synced[i]), full,
+                                        self.cache["kv"])
+                self._kv_synced[i] = full
+
     def begin_tick_params(self) -> None:
         """Kick the overlapped host->device page stream for the NEXT
         fence and return immediately (no-op without paging, or when a
         pass is already in flight).  The fetch loop runs on the pager's
         worker while the caller keeps computing — the §II-B2 proactive
         swap, realized across ticks: tick t's compute hides tick t+1's
-        page traffic."""
-        if self.pager is None or self._inflight_pass is not None:
-            return
-        self._inflight_pass = self.pager.begin_pass(self.page_resident_slots)
+        page traffic.  With KV paging attached, the tick's live KV spans
+        ride the same overlapped stream (blocks completed after this
+        begin are demand-fetched at the fence)."""
+        if self.pager is not None and self._inflight_pass is None:
+            self._inflight_pass = self.pager.begin_pass(
+                self.page_resident_slots)
+        if self.kv_table is not None and self._inflight_kv is None:
+            self._inflight_kv = self.kv_table.begin_pass(
+                self._kv_full_blocks())
 
     def fence_tick_params(self) -> Any:
         """The params tree for this tick, fencing at first use.
@@ -314,29 +463,56 @@ class ServingEngine:
         TPU-native reading of the two live MRAM pages."""
         self.last_stall_s = 0.0
         self.last_hidden_s = 0.0
-        if self.pager is None:
+        if self.pager is None and self.kv_table is None:
             return self.params
-        demand = self._inflight_pass is None
+        demand = (self._inflight_pass is None
+                  and self._inflight_kv is None)
         if demand:
             self.begin_tick_params()
-        ps, self._inflight_pass = self._inflight_pass, None
-        dev = ps.fence()
+        params = self.params
+        if self.pager is not None:
+            ps, self._inflight_pass = self._inflight_pass, None
+            dev = ps.fence()
+            self.last_overlap = self._account_fence(
+                ps, demand, self.pager.pool, self.pager.name)
+            params = self._thread_tick(dev)
+        if self.kv_table is not None:
+            ks, self._inflight_kv = self._inflight_kv, None
+            blocks = ks.fence(self._kv_full_blocks())
+            self.last_kv_overlap = self._account_fence(
+                ks, demand, self.kv_table.pool, self.kv_table.name,
+                kv=True)
+            self._scatter_kv(blocks)
+            # every in-flight fetch has settled: retired slots' stale
+            # pooled blocks can now be dropped without a late fetch
+            # resurrecting them
+            self.kv_table.flush_drops()
+        return params
+
+    def _account_fence(self, ps, demand: bool, pool, name: str,
+                       kv: bool = False) -> Dict[str, float]:
+        """Book one fenced pass's stall split — ONE copy of the rule for
+        both the weight stream and the KV stream (the PR 4
+        double-attribution bug class lived in exactly this kind of
+        duplicated accounting).  When the pass was demand-begun INSIDE
+        this fence (sync tick_params, or the cold first tick), its whole
+        begin->fence window was spent blocked here, not in caller
+        compute: the full stream wall lands exposed, nothing was
+        hidden."""
         exposed, hidden, window = ps.exposed_s, ps.hidden_s, ps.window_s
         if demand:
-            # the pass was begun INSIDE this call (sync tick_params, or
-            # the cold first tick): its begin->fence window was spent
-            # blocked here, not in caller compute — the whole stream
-            # wall is exposed, nothing was hidden
             exposed, hidden, window = exposed + hidden, 0.0, 0.0
-        self.last_stall_s = exposed
-        self.last_hidden_s = hidden
+        self.last_stall_s += exposed
+        self.last_hidden_s += hidden
         self.paging_stall_s += exposed
         self.paging_hidden_s += hidden
-        self.last_overlap = dict(swap_s=ps.swap_s, window_s=window,
-                                 exposed_s=exposed, hidden_s=hidden)
-        if self.pager.pool is not None:
-            self.pager.pool.add_stall(self.pager.name, exposed, hidden)
-        return self._thread_tick(dev)
+        if kv:
+            self.kv_stall_s += exposed
+            self.kv_hidden_s += hidden
+        if pool is not None:
+            pool.add_stall(name, exposed, hidden)
+        return dict(swap_s=ps.swap_s, window_s=window,
+                    exposed_s=exposed, hidden_s=hidden)
 
     def cancel_tick_params(self) -> None:
         """Cancel/drain an in-flight pass that will never be fenced
@@ -345,6 +521,9 @@ class ServingEngine:
         if self._inflight_pass is not None:
             self._inflight_pass.close()
             self._inflight_pass = None
+        if self._inflight_kv is not None:
+            self._inflight_kv.close()
+            self._inflight_kv = None
 
     def tick_params(self) -> Any:
         """Legacy blocking API: begin + fence back to back (the stream's
@@ -397,12 +576,21 @@ class ServingEngine:
 
     def paging_summary(self) -> Dict[str, Any]:
         total = self.paging_stall_s + self.paging_hidden_s
+        kv = self.kv_table
         return dict(
             swap_count=self.swap_count, miss_count=self.miss_count,
             exposed_s=self.paging_stall_s, hidden_s=self.paging_hidden_s,
             overlap_frac=(self.paging_hidden_s / total) if total > 0 else 0.0,
             stall_s=self.paging_stall_s,       # v2 alias: exposed wait
-            n_pages=0 if self.pager is None else len(self.pager.pages))
+            n_pages=0 if self.pager is None else len(self.pager.pages),
+            # metrics/v4: the KV share of the same budgeted page stream
+            kv_swaps=0 if kv is None else kv.swap_count,
+            kv_pool_hits=0 if kv is None else kv.pool_hits,
+            kv_writebacks=0 if kv is None else kv.writebacks,
+            kv_dropped=0 if kv is None else kv.dropped,
+            kv_exposed_s=self.kv_stall_s,
+            kv_hidden_s=self.kv_hidden_s,
+            kv_block_rows=0 if kv is None else kv.block_rows)
 
     # -- slot management ------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -439,6 +627,12 @@ class ServingEngine:
         if req.arrival_s is None:
             req.arrival_s = time.perf_counter()
         req.prefill_pos = 0
+        if self.kv_table is not None:
+            # the previous tenant's pooled blocks were queued for drop at
+            # its retirement and flush at the next fence — BEFORE this
+            # request's first writeback, so the flush can never zero live
+            # data.  Only the sync bookkeeping resets here.
+            self._kv_synced[slot] = 0
         if "ssm" in self.cache:
             # recurrent state is live across the whole row — unlike the kv
             # cache there is no position mask hiding a predecessor's
@@ -510,6 +704,20 @@ class ServingEngine:
                 break
         return started
 
+    def _kv_span_for(self, bucket: int,
+                     rows: List[Tuple[int, Request, int, int]]
+                     ) -> Optional[int]:
+        """KV-cache span one prefill group must attend: the next power of
+        two covering every row's ``insert_pos + bucket`` (plus the
+        meta-token prefix on first chunks), clamped to ``max_len``.  None
+        for families without a KV cache."""
+        if "kv" not in self.cache:
+            return None
+        prefix = self.cfg.n_meta_tokens
+        need = max((prefix if r.prefill_pos == 0 else 0) + pos + bucket
+                   for _i, r, _n, pos in rows)
+        return min(self.max_len, _next_pow2(need))
+
     def _run_prefill_group(self, params: Any, bucket: int, add_prefix: bool,
                            rows: List[Tuple[int, Request, int, int]],
                            started: List[Request]) -> None:
@@ -528,6 +736,7 @@ class ServingEngine:
     def _run_prefill_rows(self, params: Any, bucket: int, add_prefix: bool,
                           rows: List[Tuple[int, Request, int, int]],
                           k: int, started: List[Request]) -> None:
+        kv_span = self._kv_span_for(bucket, rows)
         tokens = np.zeros((k, bucket), np.int32)
         slot_idx = np.zeros((k,), np.int32)
         pos_vec = np.zeros((k,), np.int32)
@@ -539,7 +748,7 @@ class ServingEngine:
             tokens[j, :n] = r.prompt[r.prefill_pos:r.prefill_pos + n]
             slot_idx[j] = i
             pos_vec[j] = pos
-        fn = self._prefill_for_bucket(bucket, add_prefix)
+        fn = self._prefill_for_bucket(bucket, add_prefix, kv_span)
         logits, self.cache = fn(params, jnp.asarray(tokens), self.cache,
                                 jnp.asarray(slot_idx), jnp.asarray(pos_vec))
         for j, (i, r, n, _pos) in enumerate(rows):
@@ -599,6 +808,9 @@ class ServingEngine:
         req.finish_s = time.perf_counter()
         self.finished.append(req)
         self.slot_req[slot] = None
+        if self.kv_table is not None:
+            self.kv_table.queue_drop(slot)
+            self._kv_synced[slot] = 0
         return req
 
     # -- legacy FIFO loop -----------------------------------------------------
@@ -617,6 +829,7 @@ class ServingEngine:
         self._admit()
         self.prefill_tick(params, complete=True)
         self.decode_tick(params)
+        self.sync_kv_tick()
         return self.finished[before:]
 
     def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:

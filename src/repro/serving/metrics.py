@@ -11,12 +11,12 @@ behind compute by the async paging pipeline), deadline-miss rate per
 stream, and aggregate token throughput.
 
 Everything is emitted as one JSON document (schema
-``repro.serving.metrics/v3``) so the bench trajectory
+``repro.serving.metrics/v4``) so the bench trajectory
 (``benchmarks/serving_load.py`` -> ``BENCH_serving.json``) and the
 launcher (``repro.launch.serve --metrics-json``) share a format:
 
     {
-      "schema": "repro.serving.metrics/v3",
+      "schema": "repro.serving.metrics/v4",
       "ticks":      {"count", "latency_ms": {mean,p50,p99,max},
                      "paging_exposed_ms": {mean,p50,p99,max},
                      "paging_hidden_ms":  {mean,p50,p99,max}},
@@ -26,7 +26,10 @@ launcher (``repro.launch.serve --metrics-json``) share a format:
       "deadlines":  {"with_deadline", "missed", "miss_rate", "truncated"},
       "throughput": {"wall_s", "tok_per_s"},
       "paging":     {"swap_count", "miss_count", "exposed_s", "hidden_s",
-                     "overlap_frac", "stall_s", "n_pages"},
+                     "overlap_frac", "stall_s", "n_pages",
+                     "kv_swaps", "kv_pool_hits", "kv_writebacks",
+                     "kv_dropped", "kv_exposed_s", "kv_hidden_s",
+                     "kv_block_rows"},
       "streams":    {name: {"count", "missed", "miss_rate", "truncated",
                             "p99_ttft_ms"}}
     }
@@ -37,19 +40,25 @@ Requests without a deadline never count toward the miss rate, and
 *truncated* requests (retired by KV-cache exhaustion, i.e. partial
 service) are excluded from it and reported under their own counter.
 
-v3 vs v2: the per-tick ``paging_stall_ms`` became the
-``paging_exposed_ms`` / ``paging_hidden_ms`` pair and the ``paging``
-section grew ``exposed_s`` / ``hidden_s`` / ``overlap_frac`` —
-``exposed + hidden`` is the pass's full stream wall time, ``stall_s`` is
-kept as an alias of ``exposed_s`` (a fully synchronous run hides
-nothing, so its v3 numbers read exactly like v2's).
+v4 vs v3: the ``paging`` section grew the ``kv_*`` fields — the KV-cache
+share of the same budgeted page stream (``kv_swaps`` host->device block
+transfers, ``kv_pool_hits`` pooled re-fetches, ``kv_writebacks``
+completed blocks moved host-ward, ``kv_dropped`` slot-reuse
+invalidations, and the KV slice of the exposed/hidden stall split).
+``exposed_s`` / ``hidden_s`` stay the COMBINED weight+KV totals, so a
+run without KV paging reads exactly like v3 with zeroed ``kv_*``.
+(v3 vs v2: the per-tick ``paging_stall_ms`` became the
+``paging_exposed_ms`` / ``paging_hidden_ms`` pair; ``stall_s`` is kept
+as an alias of ``exposed_s``.)  :func:`validate` rejects v3 payloads —
+wrong schema string, or missing ``kv_*`` keys.
 
 Multi-model tenancy (``repro.serving.tenancy.MultiScheduler``) emits the
-v3 *multi* shape instead: per-model sections of the document above plus
-the shared page pool's contention stats::
+v4 *multi* shape instead: per-model sections of the document above plus
+the shared page pool's contention stats (KV page tables appear as their
+own ``<model>/kv`` members)::
 
     {
-      "schema": "repro.serving.metrics/v3",
+      "schema": "repro.serving.metrics/v4",
       "ticks":       {"count"},                     # MultiScheduler ticks
       "models":      {name: <single-model document, sans schema>},
       "shared_pool": {"budget_bytes", "live_bytes", "cached_pages",
@@ -82,7 +91,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-SCHEMA = "repro.serving.metrics/v3"
+SCHEMA = "repro.serving.metrics/v4"
 
 
 def quantiles(xs: List[float]) -> Dict[str, float]:
@@ -96,7 +105,9 @@ def quantiles(xs: List[float]) -> Dict[str, float]:
 
 def _empty_paging() -> Dict[str, Any]:
     return dict(swap_count=0, miss_count=0, exposed_s=0.0, hidden_s=0.0,
-                overlap_frac=0.0, stall_s=0.0, n_pages=0)
+                overlap_frac=0.0, stall_s=0.0, n_pages=0,
+                kv_swaps=0, kv_pool_hits=0, kv_writebacks=0, kv_dropped=0,
+                kv_exposed_s=0.0, kv_hidden_s=0.0, kv_block_rows=0)
 
 
 @dataclasses.dataclass
@@ -138,7 +149,7 @@ class RequestRecord:
 
 
 class MetricsRecorder:
-    """Accumulates tick- and request-level events; renders the v3 JSON."""
+    """Accumulates tick- and request-level events; renders the v4 JSON."""
 
     def __init__(self, clock: Callable[[], float] = time.perf_counter):
         self.clock = clock
@@ -263,7 +274,7 @@ class MetricsRecorder:
 
 
 # ---------------------------------------------------------------------------
-# multi-model tenancy (metrics/v3 multi shape)
+# multi-model tenancy (metrics/v4 multi shape)
 # ---------------------------------------------------------------------------
 
 def multi_summary(models: Dict[str, Dict[str, Any]],
@@ -326,7 +337,11 @@ _SINGLE_KEYS = {
     "deadlines": ("with_deadline", "missed", "miss_rate", "truncated"),
     "throughput": ("wall_s", "tok_per_s"),
     "paging": ("swap_count", "miss_count", "exposed_s", "hidden_s",
-               "overlap_frac", "n_pages"),
+               "overlap_frac", "n_pages",
+               # v4: the KV-cache share of the same page stream — their
+               # absence is exactly what marks a stale v3 payload
+               "kv_swaps", "kv_pool_hits", "kv_writebacks", "kv_dropped",
+               "kv_exposed_s", "kv_hidden_s", "kv_block_rows"),
 }
 
 _TOTALS_KEYS = ("requests", "tokens_out", "truncated", "with_deadline",
@@ -351,7 +366,7 @@ def _validate_single(doc: Dict[str, Any], where: str) -> None:
 
 
 def validate(doc: Dict[str, Any]) -> Dict[str, Any]:
-    """Assert ``doc`` is a well-formed ``repro.serving.metrics/v3``
+    """Assert ``doc`` is a well-formed ``repro.serving.metrics/v4``
     document (either the single-model or the multi-model shape); returns
     the document unchanged so it can be used inline.  Raises ValueError
     naming the first missing piece."""

@@ -27,7 +27,7 @@ that claim's serving-side analogue:
     miss counters — same traffic, different schedule);
   * **metrics**: TTFT / end-to-end latency / p50 / p99 / deadline-miss
     rate / tok/s / exposed-vs-hidden paging stalls, recorded per tick
-    and per request and emitted as the ``repro.serving.metrics/v3``
+    and per request and emitted as the ``repro.serving.metrics/v4``
     JSON.
 
 The scheduler owns no jit state — it drives the engine's tick primitives
@@ -190,6 +190,9 @@ class Scheduler:
             req.first_token_s = now              # scheduler clock wins
         finished = [r for r in started if r.done]
         finished += self.engine.decode_tick(params)
+        # KV paging: blocks the append-only frontier completed this tick
+        # are written back host-ward once, becoming fetchable next pass
+        self.engine.sync_kv_tick()
         now = self.clock()
         for req in finished:
             req.finish_s = now

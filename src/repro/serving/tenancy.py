@@ -24,7 +24,7 @@ behavior.  This module is that claim's serving-side realization:
     :func:`~repro.core.paging.shared_pass_counters` prediction, because
     tenants stream sequentially per tick);
   * per-model deadline accounting lands in the
-    ``repro.serving.metrics/v3`` multi shape (per-model sections plus the
+    ``repro.serving.metrics/v4`` multi shape (per-model sections plus the
     shared pool's contention stats and the exposed/hidden paging-stall
     split) via :func:`~repro.serving.metrics.multi_summary`;
   * the tick loop is the async paging **software pipeline**: per tick,
@@ -102,11 +102,17 @@ class MultiScheduler:
     def add_model(self, name: str, engine: ServingEngine, *,
                   prefill_chunk: Optional[int] = None,
                   page_bytes: Optional[int] = None,
-                  resident_slots: int = 2) -> Scheduler:
+                  resident_slots: int = 2,
+                  kv_paged: bool = False,
+                  kv_block_rows: int = 16) -> Scheduler:
         """Register a tenant.  When the MultiScheduler owns a shared pool
         and the engine's plan pages, the engine's paging is attached
         JOINED to that pool (an engine arriving with a private pager is
-        rejected — a private cache would dodge the shared budget)."""
+        rejected — a private cache would dodge the shared budget).  With
+        ``kv_paged``, the tenant's per-slot KV cache pages through the
+        SAME pool budget as everyone's weight pages (member
+        ``<name>/kv`` — the one-memory-hierarchy reading of §V), in
+        ``kv_block_rows``-row blocks."""
         if name in self.models:
             raise ValueError(f"model {name!r} already registered")
         if self.pool is not None and engine.pager is not None:
@@ -114,6 +120,10 @@ class MultiScheduler:
                 f"model {name!r} already has a private pager; tenants "
                 f"of a shared pool must attach through it (pass the "
                 f"engine un-attached)")
+        if self.pool is not None and engine.kv_table is not None:
+            raise ValueError(
+                f"model {name!r} already pages its KV cache privately; "
+                f"tenants of a shared pool must attach through it")
         # construct the Scheduler first: it validates prefill_chunk, and a
         # failure here must not leave the engine half-joined to the pool
         sched = Scheduler(engine, prefill_chunk=prefill_chunk,
@@ -124,6 +134,11 @@ class MultiScheduler:
             if engine.plan.paged_bytes(sizes) > 0:
                 engine.attach_paging(page_bytes, resident_slots,
                                      pool=self.pool, name=name)
+        if kv_paged and engine.kv_table is None and "kv" in engine.cache:
+            # families without a KV cache (pure SSM trackers) simply have
+            # no KV state to page — the flag is a no-op for them
+            engine.attach_kv_paging(kv_block_rows, pool=self.pool,
+                                    name=f"{name}/kv")
         self.models[name] = sched
         return sched
 
@@ -226,7 +241,7 @@ class MultiScheduler:
 
     # -- metrics / lifecycle --------------------------------------------------
     def summary(self) -> Dict:
-        """The ``repro.serving.metrics/v3`` multi-model document."""
+        """The ``repro.serving.metrics/v4`` multi-model document."""
         models = {name: sched.metrics.summary(
                       paging=sched.engine.paging_summary())
                   for name, sched in self.models.items()}
@@ -256,6 +271,8 @@ class MultiScheduler:
         for sched in self.models.values():
             if sched.engine.pager is not None:
                 sched.engine.pager.close(wait=wait)
+            if sched.engine.kv_table is not None:
+                sched.engine.kv_table.close(wait=wait)
 
     def __enter__(self) -> "MultiScheduler":
         return self

@@ -13,6 +13,7 @@ from repro.optim import adamw
 
 
 @pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.slow
 def test_arch_smoke(arch):
     cfg = ARCHS[arch].smoke()
     init = _init_fn(cfg)

@@ -205,6 +205,7 @@ def test_scheduler_close_cancels_inflight_pass(rng, packed):
 # tentpole: async-vs-sync serving equivalence
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_async_serving_bit_exact_and_counters_unchanged(rng, packed):
     """Overlap changes WHEN pages move, never what the step computes:
     identical tokens, identical tick count, identical swap/miss counters
@@ -346,6 +347,7 @@ def _paged_bytes(packed):
     return sum(v for k, v in sizes.items() if plan.placement_for(k).paged)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("budget_kind", ["roomy", "tight"])
 def test_tenant_overlap_preserves_pool_counters(rng, packed, packed_b,
                                                 budget_kind):
@@ -492,11 +494,11 @@ def test_multischeduler_close_cancels_inflight_passes(rng, packed,
     assert not ms.pool._active_fetch
 
 
-def test_metrics_v3_schema_validates_and_rejects_v2():
+def test_metrics_v4_schema_validates_and_rejects_v3():
     from repro.serving import MetricsRecorder
-    from repro.serving.metrics import SCHEMA
+    from repro.serving.metrics import SCHEMA, _empty_paging
 
-    assert SCHEMA == "repro.serving.metrics/v3"
+    assert SCHEMA == "repro.serving.metrics/v4"
     rec = MetricsRecorder(clock=lambda: 0.0)
     rec.record_tick(latency_s=0.002, paging_exposed_s=0.0005,
                     paging_hidden_s=0.002)
@@ -504,11 +506,19 @@ def test_metrics_v3_schema_validates_and_rejects_v2():
     validate(doc)
     assert doc["ticks"]["paging_exposed_ms"]["max"] == pytest.approx(0.5)
     assert doc["ticks"]["paging_hidden_ms"]["max"] == pytest.approx(2.0)
-    for k in ("exposed_s", "hidden_s", "overlap_frac"):
+    for k in ("exposed_s", "hidden_s", "overlap_frac",
+              "kv_swaps", "kv_pool_hits", "kv_writebacks", "kv_dropped",
+              "kv_exposed_s", "kv_hidden_s"):
         assert k in doc["paging"]
-    stale = dict(doc, schema="repro.serving.metrics/v2")
+    stale = dict(doc, schema="repro.serving.metrics/v3")
     with pytest.raises(ValueError, match="schema"):
         validate(stale)
+    # a v3-shaped payload (right schema string, no kv_* fields) must be
+    # rejected by name
+    v3_paging = {k: v for k, v in _empty_paging().items()
+                 if not k.startswith("kv_")}
+    with pytest.raises(ValueError, match="kv_swaps"):
+        validate(dict(doc, paging=v3_paging))
     broken = dict(doc, paging=dict(swap_count=0, miss_count=0,
                                    stall_s=0.0, n_pages=0))
     with pytest.raises(ValueError, match="exposed_s"):

@@ -1,0 +1,148 @@
+"""Property tests over the paging schedule/counter algebra (hypothesis).
+
+Replaces the old exhaustive parameter sweep in test_paging_store.py with
+randomized properties over ``(pages, resident_slots, ticks, budgets)``
+for ``pass_counters`` / ``shared_pass_counters`` / ``kv_pass_counters``.
+The module importorskips when hypothesis is absent (the optional [test]
+extra) — test_paging_store.py keeps one deterministic smoke case so the
+invariants stay covered under a bare ``pytest -x -q``.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.paging import (kv_pass_counters, make_schedule,
+                               pass_counters, shared_pass_counters,
+                               validate_schedule)
+
+N_PAGES = st.integers(min_value=1, max_value=12)
+SLOTS = st.integers(min_value=1, max_value=4)
+PAGE_SIZES = st.lists(st.integers(min_value=1, max_value=64), min_size=1,
+                      max_size=8)
+
+
+@given(n_pages=N_PAGES, slots=SLOTS)
+@settings(max_examples=60, deadline=None)
+def test_schedule_invariants(n_pages, slots):
+    """Every page resident before use, the in-use page never evicted,
+    residency bounded by the slot count — for any (pages, slots)."""
+    sched = make_schedule(n_pages, resident_slots=slots)
+    validate_schedule(sched, resident_slots=slots)
+    assert [e.page for e in sched] == list(range(n_pages))
+    if slots == 1:
+        # single slot: no double-buffering, demand-fetch everything
+        assert all(e.prefetch_next is None for e in sched)
+        assert pass_counters(n_pages, 1) == dict(swaps=n_pages,
+                                                 misses=n_pages)
+    else:
+        # proactive: every non-final page prefetches its successor
+        for e in sched[:-1]:
+            assert e.prefetch_next == e.page + 1
+
+
+@given(n_pages=N_PAGES, slots=st.integers(min_value=2, max_value=4))
+@settings(max_examples=60, deadline=None)
+def test_pass_counters_conservation(n_pages, slots):
+    """With >= 2 slots, one pass fetches every page exactly once and only
+    the cold start demand-misses."""
+    pc = pass_counters(n_pages, slots)
+    assert pc == dict(swaps=n_pages, misses=1)
+
+
+@given(sizes_a=PAGE_SIZES, sizes_b=PAGE_SIZES,
+       ticks=st.integers(min_value=1, max_value=5),
+       budget=st.integers(min_value=1, max_value=512),
+       slots=st.integers(min_value=1, max_value=3))
+@settings(max_examples=60, deadline=None)
+def test_shared_pass_counters_conservation(sizes_a, sizes_b, ticks,
+                                           budget, slots):
+    """Pool-level conservation laws for random page sizes / budgets:
+    every pass still fetches every page exactly once (swap OR pool hit),
+    misses follow the schedule, evictions never exceed admissions."""
+    nbytes = dict(a=sizes_a, b=sizes_b)
+    out = shared_pass_counters(nbytes, budget, resident_slots=slots,
+                               ticks=ticks)
+    for m, sizes in nbytes.items():
+        c = out[m]
+        n = len(sizes)
+        # each pass looks every page up exactly once
+        assert c["swaps"] + c["pool_hits"] == ticks * n
+        # schedule-level demand misses are budget-independent
+        per_pass = pass_counters(n, slots)["misses"]
+        assert c["misses"] == ticks * per_pass
+        assert 0 <= c["evicted"] <= c["swaps"] * 2  # loose sanity bound
+    # a page can only be evicted if some pass admitted it
+    total_evictions = sum(out[m]["evicted"] for m in nbytes)
+    total_swaps = sum(out[m]["swaps"] for m in nbytes)
+    assert total_evictions <= total_swaps
+
+
+@given(sizes=PAGE_SIZES, ticks=st.integers(min_value=1, max_value=5),
+       slots=st.integers(min_value=2, max_value=3))
+@settings(max_examples=40, deadline=None)
+def test_shared_roomy_budget_swaps_once(sizes, ticks, slots):
+    """A budget that fits everything: each page swaps exactly once ever,
+    every later pass is pure pool hits, nothing is evicted."""
+    out = shared_pass_counters(dict(m=sizes), sum(sizes) + 1,
+                               resident_slots=slots, ticks=ticks)
+    assert out["m"]["swaps"] == len(sizes)
+    assert out["m"]["pool_hits"] == (ticks - 1) * len(sizes)
+    assert out["m"]["evicted"] == 0
+
+
+@given(sizes=st.lists(st.integers(min_value=10, max_value=64), min_size=1,
+                      max_size=8),
+       ticks=st.integers(min_value=1, max_value=5))
+@settings(max_examples=40, deadline=None)
+def test_shared_never_fits_budget_always_swaps(sizes, ticks):
+    """A budget smaller than every page caches nothing: all swaps, no
+    hits, no evictions (admit's never-fits pre-check)."""
+    out = shared_pass_counters(dict(m=sizes), min(sizes) - 1, ticks=ticks)
+    assert out["m"]["pool_hits"] == 0
+    assert out["m"]["swaps"] == ticks * len(sizes)
+    assert out["m"]["evicted"] == 0
+
+
+@given(sizes=PAGE_SIZES, ticks=st.integers(min_value=1, max_value=4),
+       budget=st.integers(min_value=1, max_value=512))
+@settings(max_examples=40, deadline=None)
+def test_kv_pass_counters_weights_only_equals_shared(sizes, ticks, budget):
+    """On a weights-only event stream the unified kv_pass_counters replay
+    IS shared_pass_counters — the superset property the runtime relies
+    on when KV paging is attached."""
+    events = [("pass", "m")] * ticks
+    uni = kv_pass_counters(dict(m=sizes), budget, events)
+    old = shared_pass_counters(dict(m=sizes), budget, ticks=ticks)
+    for k in ("swaps", "misses", "pool_hits", "evicted"):
+        assert uni["m"][k] == old["m"][k]
+
+
+@given(blocks=st.lists(st.integers(min_value=0, max_value=6), min_size=1,
+                       max_size=6),
+       budget=st.one_of(st.none(), st.integers(min_value=1,
+                                               max_value=4096)),
+       nb=st.integers(min_value=1, max_value=256))
+@settings(max_examples=60, deadline=None)
+def test_kv_pass_counters_kv_conservation(blocks, budget, nb):
+    """KV batches: every listed block is looked up exactly once (swap or
+    hit); with budget=None (pool-less table) every fetch swaps."""
+    events = []
+    for n in blocks:
+        events.append(("kv", "m/kv", tuple((p, nb) for p in range(n))))
+    out = kv_pass_counters({}, budget, events)
+    total = sum(blocks)
+    if total == 0:
+        assert out.get("m/kv", dict(swaps=0))["swaps"] == 0
+        return
+    c = out["m/kv"]
+    assert c["swaps"] + c["pool_hits"] == total
+    assert c["misses"] == c["swaps"]           # every kv swap is a miss
+    if budget is None:
+        assert c["pool_hits"] == 0 and c["swaps"] == total
+    elif budget >= nb and max(blocks) > 0:
+        # single member, enough room for one page: a re-listed block hits
+        distinct = len({p for n in blocks for p in range(n)})
+        if budget >= nb * distinct:
+            assert c["swaps"] == distinct

@@ -86,6 +86,7 @@ def test_unknown_stream_rejected(packed):
 # chunked + bucketed prefill
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_chunked_prefill_matches_offline(rng, packed):
     """Prompts longer than the chunk are absorbed over several ticks in
     power-of-two buckets; the greedy continuation must equal offline
@@ -126,9 +127,12 @@ def test_long_prompt_does_not_monopolize_ticks(rng, packed):
     assert len(long_req.generated) == 2
 
 
+@pytest.mark.slow
 def test_prefill_jit_cache_bounded(rng, packed):
-    """Randomized prompt lengths compile at most log2(max_len) prefill
-    programs (power-of-two buckets), not one per exact length."""
+    """Randomized prompt lengths compile at most log2(max_len)^2 prefill
+    programs — power-of-two buckets x power-of-two KV spans (the chunked
+    prefill attends only the live ``[0, kv_span)`` cache prefix), never
+    one per exact length."""
     max_len = 128
     eng = ServingEngine(CFG, packed, batch_slots=4, max_len=max_len,
                         prefill_chunk=64)
@@ -140,13 +144,18 @@ def test_prefill_jit_cache_bounded(rng, packed):
     done = eng.run_until_done()
     assert len(done) == len(lengths)
     assert len({len(r.prompt) for r in done}) > 7   # genuinely varied
-    assert len(eng._prefill_cache) <= math.log2(max_len)
+    assert len(eng._prefill_cache) <= math.log2(max_len) ** 2
+    for bucket, _pfx, span in eng._prefill_cache:
+        assert bucket & (bucket - 1) == 0
+        assert span & (span - 1) == 0 or span == max_len
+        assert span >= bucket                       # chunk must fit its span
 
 
 def test_prefill_buckets_stay_pow2_for_non_pow2_max_len(rng, packed):
     """Near the cache boundary the bucket shrinks to the largest power of
     two that fits (instead of falling back to the exact tail length), so
-    the compiled-shape set stays O(log) even for non-pow2 max_len."""
+    the compiled-shape set stays O(log^2) even for non-pow2 max_len (the
+    kv span clamps to max_len there)."""
     eng = ServingEngine(CFG, packed, batch_slots=2, max_len=100,
                         prefill_chunk=64)
     for uid, n in enumerate(rng.integers(60, 98, 8)):
@@ -156,9 +165,10 @@ def test_prefill_buckets_stay_pow2_for_non_pow2_max_len(rng, packed):
                            max_new_tokens=1))
     done = eng.run_until_done()
     assert len(done) == 8
-    buckets = [b for b, _pfx in eng._prefill_cache]
-    assert all(b & (b - 1) == 0 for b in buckets)   # powers of two only
-    assert len(buckets) <= math.log2(128)
+    keys = list(eng._prefill_cache)
+    assert all(b & (b - 1) == 0 for b, _pfx, _span in keys)  # pow2 buckets
+    assert all(s & (s - 1) == 0 or s == 100 for _b, _pfx, s in keys)
+    assert len(keys) <= math.log2(128) ** 2
 
 
 def test_scheduler_threads_chunk_without_mutating_engine(rng, packed):
@@ -173,6 +183,7 @@ def test_scheduler_threads_chunk_without_mutating_engine(rng, packed):
     assert s.ticks >= 4                    # scheduler pacing still applies
 
 
+@pytest.mark.slow
 def test_ssm_slot_reuse_starts_cold(rng):
     """Reusing a batch slot must not leak the previous request's SSM
     recurrent state (h / conv) into the next prefill."""
@@ -324,6 +335,7 @@ def test_greedy_request_unaffected_by_sampled_neighbor(rng, packed):
 # live paged-weight streaming through the engine tick (satellite test)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_paged_serving_bit_exact_and_counters(rng, packed):
     """A mixed plan_for_budget plan served with live HostPagedStore
     streaming is (a) bit-exact vs the fully resident plan, (b) its
@@ -436,9 +448,13 @@ def test_metrics_schema_and_deadlines():
     doc = rec.summary(paging=dict(swap_count=6, miss_count=2,
                                   exposed_s=0.001, hidden_s=0.004,
                                   overlap_frac=0.8, stall_s=0.001,
-                                  n_pages=3))
+                                  n_pages=3,
+                                  kv_swaps=4, kv_pool_hits=2,
+                                  kv_writebacks=3, kv_dropped=0,
+                                  kv_exposed_s=0.0002, kv_hidden_s=0.001,
+                                  kv_block_rows=16))
     validate(doc)
-    assert doc["schema"] == "repro.serving.metrics/v3"
+    assert doc["schema"] == "repro.serving.metrics/v4"
     assert doc["deadlines"] == dict(with_deadline=2, missed=1,
                                     miss_rate=0.5, truncated=0)
     assert doc["requests"]["count"] == 3

@@ -88,6 +88,7 @@ def _paged_bytes(packed):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("budget", ["roomy", "tight"])
+@pytest.mark.slow
 def test_tenants_bit_exact_vs_solo_and_counters(rng, packed_a, packed_b,
                                                 budget):
     """Two ServingEngines under one MultiScheduler and one SharedPagePool
@@ -252,6 +253,7 @@ def test_multi_metrics_v2_document(rng, packed_a, packed_b):
     ms.close()
 
 
+@pytest.mark.slow
 def test_single_slot_paged_serving_bit_exact(rng, packed_a):
     """attach_paging(resident_slots=1) streams a VALID schedule (the old
     make_schedule emitted evicts==page and validate_schedule rejected
