@@ -136,7 +136,10 @@ def main():
                 else:
                     target[name].submit(req, stream=name)
 
-    ms = MultiScheduler(pool=pool)
+    # continuous batching: one global token budget re-planned every tick
+    # and mid-request preemption, so an urgent wake-word request seizes a
+    # slot THIS tick instead of queueing behind a long assistant prefill
+    ms = MultiScheduler(pool=pool, token_budget=24, preemptive=True)
     for name, (cfg, packed, plan) in tenants.items():
         eng = ServingEngine(cfg, packed, batch_slots=2, max_len=64, seed=0,
                             plan=plan)
@@ -147,7 +150,14 @@ def main():
                      kv_paged="kv" in eng.cache, kv_block_rows=8)
     ms.add_stream("assistant", "assistant", priority=1, deadline_ms=20.0)
     ms.add_stream("tracker", "tracker", priority=2, deadline_ms=15.0)
+    ms.add_stream("assistant", "wake", priority=3, deadline_ms=10.0)
     submit_all(ms, is_multi=True)
+    wake_rng = np.random.default_rng(11)
+    wake = Request(uid=100,
+                   prompt=wake_rng.integers(
+                       0, tenants["assistant"][0].vocab_size,
+                       4).astype(np.int32),
+                   max_new_tokens=2)
 
     served = {}
     while ms.pending:         # frame loop with one tenancy tick per frame
@@ -155,6 +165,10 @@ def main():
         _ = apply_fn(corrected)
         for name, reqs in ms.tick().items():
             served.setdefault(name, []).extend(reqs)
+        if ms.ticks == 2:
+            # mid-run urgent arrival: both assistant slots are busy with
+            # long prompts, so the wake request preempts one mid-service
+            ms.submit("assistant", wake, stream="wake")
 
     doc = validate(ms.summary())
     for name in tenants:
@@ -171,6 +185,16 @@ def main():
               f"stall vs {pg['hidden_s']*1e3:.1f} ms hidden behind the "
               f"frame loop's compute ({pg['overlap_frac']*100:.0f}% of "
               f"the page stream reclaimed by the async pipeline)")
+    tot = doc["totals"]
+    sc = doc["models"]["assistant"]["scheduler"]
+    print(f"  continuous batching: budget "
+          f"{sc['budget_tokens_per_tick']} tok/tick at "
+          f"{sc['budget_utilization']*100:.0f}% utilization; "
+          f"{tot['preemptions']} preemption(s) / {tot['restores']} "
+          f"restore(s) — the wake-word request seized a busy slot and "
+          f"its victim resumed bit-exactly")
+    assert tot["preemptions"] >= 1
+    assert tot["preemptions"] == tot["restores"]
 
     # the §V claim, checked: concurrency changes WHO pays the swaps, not
     # what anyone computes — each tenant's tokens are bit-exact vs
@@ -201,6 +225,13 @@ def main():
                               else (4, 6, 2))
         for req in requests(cfg, n, length, max_new, seed=sum(name.encode()) % 97):
             solo.submit(req, stream=name)
+        if name == "assistant":
+            # the wake request rides in the solo reference too — greedy
+            # tokens are slot-isolated, so WHEN it was admitted (or whom
+            # it preempted) must not change a single token
+            solo.submit(Request(uid=100,
+                                prompt=np.asarray(wake.prompt, np.int32),
+                                max_new_tokens=2), stream=name)
         want = {r.uid: r.generated for r in solo.run_until_done()}
         got = {r.uid: r.generated for r in served[name]}
         assert got == want, f"{name}: tenant tokens diverge from solo"

@@ -320,7 +320,7 @@ class SharedPagePool:
     def summary(self) -> Dict[str, Any]:
         """Per-model swap/miss/pool-hit/evict counters plus the
         exposed/hidden stall split + pool state — the ``shared_pool``
-        section of the metrics/v4 JSON.  The stall seconds here are the
+        section of the metrics/v5 JSON.  The stall seconds here are the
         pool's per-model *view* of the same wall time the engines report
         in their own ``paging`` sections; totals must sum ONE of the two,
         never both."""
@@ -803,6 +803,7 @@ class KVPageTable:
         self.pool_hits = 0
         self.writebacks = 0          # blocks written back host-ward
         self.dropped = 0             # pooled blocks invalidated (slot reuse)
+        self.preempt_drops = 0       # of which: mid-request preemptions
         # pool-less prediction log (pooled tables log into pool.events)
         self.events: List[Tuple] = []
         self._pending_drops: set = set()
@@ -888,6 +889,24 @@ class KVPageTable:
             self.host["k"][:, slot] = 0
             self.host["v"][:, slot] = 0
         self._pending_drops.clear()
+
+    def preempt_release(self, slot: int, *, in_flight: bool) -> None:
+        """Release ``slot``'s pooled blocks for a mid-request preemption.
+
+        Same invalidation path as a retirement (``queue_drop``), but the
+        flush timing is the preemption-safety decision: with no KV pass
+        in flight (``in_flight=False`` — the single-scheduler admit
+        point sits between fence and begin) the drop flushes NOW, so the
+        slot's next occupant can write back this very tick without a
+        later deferred flush zeroing its fresh blocks.  With a pass
+        still unfenced (the tenancy admit point) the flush defers to
+        that fence, which still lands before the usurper's first
+        writeback.  Either way the pool sees one ``kvdrop`` event —
+        ``kv_pass_counters`` replays preemptions natively."""
+        self.queue_drop(slot)
+        self.preempt_drops += 1
+        if not in_flight:
+            self.flush_drops()
 
     def begin_pass(self, full_blocks: Dict[int, int]) -> "KVPageStream":
         """Kick one overlapped KV streaming pass: ``full_blocks`` maps

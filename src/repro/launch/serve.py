@@ -30,8 +30,16 @@ the tick (``--sync-io`` restores the blocking stream-then-step tick).
 When a plan pages, single-model runs are verified bit-exact against the
 fully resident uniform plan AND — in async mode — against the
 synchronous streaming path (disable with ``--no-verify``).  Metrics are
-emitted as the ``repro.serving.metrics/v4`` JSON (stdout, and
+emitted as the ``repro.serving.metrics/v5`` JSON (stdout, and
 ``--metrics-json PATH`` to persist).
+
+Continuous batching (the 10–20 ms XR deadline machinery):
+``--token-budget N`` re-plans a shared per-tick token budget across all
+live slots (and, with ``--models``, across all tenants);
+``--preemptive`` lets an urgent stream evict a strictly-lower-priority
+slot mid-request (the victim checkpoints and later resumes bit-exactly);
+``--admission reject|degrade`` refuses — or shortens — requests whose
+predicted completion already misses their deadline.
 """
 
 from __future__ import annotations
@@ -71,7 +79,10 @@ def _serve(cfg, packed, plan, args, paged: bool,
         eng.attach_kv_paging(args.kv_block)
     sched = Scheduler(eng, prefill_chunk=args.prefill_chunk,
                       async_io=args.async_io if async_io is None
-                      else async_io)
+                      else async_io,
+                      token_budget=args.token_budget,
+                      preemptive=args.preemptive,
+                      admission=args.admission)
     sched.add_stream("xr", priority=1, deadline_ms=args.deadline_ms)
     sched.add_stream("background")
     for req in _requests(cfg, args.requests, args.max_new, seed=args.seed):
@@ -110,7 +121,10 @@ def _tenant_requests(cfg, args, salt):
 
 def _serve_tenants(models, args, pool):
     """One MultiScheduler pass over every tenant; returns (ms, done)."""
-    ms = MultiScheduler(pool=pool, async_io=args.async_io)
+    ms = MultiScheduler(pool=pool, async_io=args.async_io,
+                        token_budget=args.token_budget,
+                        preemptive=args.preemptive,
+                        admission=args.admission)
     for name, (cfg, packed, plan) in models.items():
         eng = ServingEngine(cfg, packed, batch_slots=args.slots,
                             max_len=args.max_len, plan=plan,
@@ -254,6 +268,20 @@ def main(argv=None):
                          "admission; misses are reported, not dropped)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="max prompt tokens absorbed per tick per slot")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="continuous batching: per-tick token budget "
+                         "re-planned every tick across prefill chunks "
+                         "and decode steps (with --models, ONE budget "
+                         "shared across all tenants)")
+    ap.add_argument("--preemptive", action="store_true",
+                    help="allow an urgent stream to evict a strictly-"
+                         "lower-priority slot mid-request; the victim "
+                         "checkpoints and later resumes bit-exactly")
+    ap.add_argument("--admission", default=None,
+                    choices=("reject", "degrade"),
+                    help="admission control: refuse (or shorten to fit) "
+                         "requests whose predicted completion already "
+                         "misses their deadline")
     ap.add_argument("--kv-paged", action="store_true",
                     help="page the per-slot KV cache through the same "
                          "budgeted page stream as the weights (one memory "
@@ -341,6 +369,14 @@ def main(argv=None):
         dl = summary["deadlines"]
         print(f"deadlines: {dl['missed']}/{dl['with_deadline']} missed "
               f"({dl['miss_rate'] * 100:.0f}% at {args.deadline_ms} ms)")
+    if args.token_budget or args.preemptive or args.admission:
+        sc = summary["scheduler"]
+        print(f"scheduler: {sc['preemptions']} preemptions / "
+              f"{sc['restores']} restores, {sc['rejected']} rejected, "
+              f"{sc['degraded']} degraded"
+              + (f"; budget use {sc['budget_used_mean']:.1f}"
+                 f"/{sc['budget_tokens_per_tick']} tok/tick"
+                 if args.token_budget else ""))
 
     ok = True
     if (paged or args.kv_paged) and not args.no_verify:

@@ -119,12 +119,20 @@ def mamba_mixer(x: jax.Array, p: Dict[str, Any], *, d_inner: int,
                 chunk: int = 256, scan_dtype=jnp.float32,
                 shard_inner: bool = False,
                 state: Optional[Dict[str, jax.Array]] = None,
+                lengths: Optional[jax.Array] = None,
                 engine: Optional[Dict[str, Any]] = None
                 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Full Mamba-1 mixer.  x: (B, S, D) -> (B, S, D).
 
     ``state`` (decode): {"h": (B, Di, N), "conv": (B, K-1, Di)}.
-    """
+
+    ``lengths`` (B,) marks right-padded rows (pow2-bucketed chunked
+    prefill): positions >= lengths[b] are *state no-ops* — their dt is
+    masked to zero, so dA = exp(0·A) = 1 and dBx = 0 are exact identity
+    elements of the scan, and the carried conv window is gathered from
+    the last K-1 REAL inputs.  The returned state is therefore bit-
+    independent of the pad content (y at pad positions is garbage the
+    caller must ignore)."""
     decode = state is not None and x.shape[1] == 1
 
     xz = layers.linear(x, p["in_proj"], engine=engine,
@@ -137,6 +145,20 @@ def mamba_mixer(x: jax.Array, p: Dict[str, Any], *, d_inner: int,
 
     conv_state = state["conv"] if state is not None else None
     xc, new_conv = causal_conv1d(xs, p["conv_w"], p.get("conv_b"), conv_state)
+    if (not decode) and lengths is not None and state is not None:
+        # the carried conv window must hold the last K-1 *real* inputs,
+        # not the pads: token t sits at index K-1+t of [state ; x], so
+        # the window after n real tokens is ext[:, n : n+K-1) — a per-row
+        # gather (conv OUTPUTS at real positions are already exact, since
+        # pads are strictly to the right of every real tap)
+        kk = p["conv_w"].shape[1]
+        if kk > 1:
+            cs = (conv_state if conv_state is not None
+                  else jnp.zeros((xs.shape[0], kk - 1, xs.shape[2]),
+                                 xs.dtype))
+            ext = jnp.concatenate([cs, xs], axis=1)      # (B, S+K-1, Di)
+            idx = lengths[:, None] + jnp.arange(kk - 1)[None]    # (B, K-1)
+            new_conv = jnp.take_along_axis(ext, idx[..., None], axis=1)
     xc = jax.nn.silu(xc)
 
     dbc = layers.linear(xc, p["x_proj"], engine=engine,
@@ -147,6 +169,11 @@ def mamba_mixer(x: jax.Array, p: Dict[str, Any], *, d_inner: int,
     dt = jax.nn.softplus(layers.linear(dt_in, p["dt_proj"], engine=engine,
                                        path="layers/ssm/dt_proj")
                          + p["dt_bias"])
+    if (not decode) and lengths is not None:
+        # dt = 0 at pads -> dA = 1, dBx = 0: the scan's exact identity
+        # element, so h passes through pad positions bit-unchanged
+        smask = jnp.arange(dt.shape[1])[None, :] < lengths[:, None]
+        dt = jnp.where(smask[..., None], dt, jnp.zeros((), dt.dtype))
     A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (Di, N)
 
     if decode:

@@ -224,6 +224,7 @@ def _layer_apply(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig, *,
                  window, cache: Optional[Dict] = None,
                  cache_pos: Optional[jax.Array] = None,
                  static_window: Optional[int] = None,
+                 lengths: Optional[jax.Array] = None,
                  engine: Optional[Dict] = None
                  ) -> Tuple[jax.Array, Optional[Dict]]:
     new_cache: Dict[str, Any] = {}
@@ -241,7 +242,8 @@ def _layer_apply(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig, *,
                 dt_rank=cfg.dt_rank, conv_k=cfg.ssm_conv,
                 chunk=cfg.ssm_chunk, scan_dtype=jnp.dtype(cfg.scan_dtype),
                 shard_inner=cfg.ssm_shard_inner,
-                state=cache.get("ssm") if cache else None, engine=engine)
+                state=cache.get("ssm") if cache else None,
+                lengths=lengths, engine=engine)
             a = 0.5 * (a + m)
             if cache is not None:
                 new_cache["ssm"] = s_state
@@ -255,7 +257,8 @@ def _layer_apply(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig, *,
             dt_rank=cfg.dt_rank, conv_k=cfg.ssm_conv, chunk=cfg.ssm_chunk,
             scan_dtype=jnp.dtype(cfg.scan_dtype),
             shard_inner=cfg.ssm_shard_inner,
-            state=cache.get("ssm") if cache else None, engine=engine)
+            state=cache.get("ssm") if cache else None,
+            lengths=lengths, engine=engine)
         x = x + m
         if cache is not None:
             new_cache["ssm"] = s_state
@@ -403,7 +406,8 @@ def step(params: Dict[str, Any], tokens: jax.Array, cache: Dict[str, Any],
          pos: jax.Array, cfg: ModelConfig, *,
          engine: Optional[Dict] = None,
          extra_embeds: Optional[jax.Array] = None,
-         add_prefix: bool = True
+         add_prefix: bool = True,
+         lengths: Optional[jax.Array] = None
          ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Serve step: run ``tokens`` (B, S) through the model, reading/writing
     the stacked cache at position ``pos`` (scalar, or (B,) per-batch for
@@ -417,6 +421,12 @@ def step(params: Dict[str, Any], tokens: jax.Array, cache: Dict[str, Any],
     ``add_prefix=False`` suppresses the prefix build — required for
     prefill chunks after the first, which continue mid-sequence (the
     chunked-prefill path of the serving scheduler).
+
+    ``lengths`` (B,) gives each row's count of REAL tokens in a right-
+    padded prefill chunk (pow2 bucketing).  Attention families already
+    hide pads behind the causal mask; this is the SSM families' pad
+    discipline — the recurrent state treats pad positions as exact
+    no-ops (see :func:`repro.models.ssm.mamba_mixer`).
     """
     s_tokens = tokens.shape[1]
     x = L.embed(tokens, params["embed"]).astype(_dtype(cfg))
@@ -433,6 +443,9 @@ def step(params: Dict[str, Any], tokens: jax.Array, cache: Dict[str, Any],
                 (b, cfg.n_meta_tokens, cfg.d_model)).astype(x.dtype))
         if prefix:
             x = jnp.concatenate(prefix + [x], axis=1)
+    if lengths is not None and s_tokens > 1:
+        # the prepended prefix tokens are real positions too
+        lengths = lengths + (x.shape[1] - s_tokens)
     windows = _layer_windows(cfg)
     win_xs = (windows if windows is not None
               else jnp.zeros((cfg.n_layers,), jnp.int32))
@@ -441,7 +454,9 @@ def step(params: Dict[str, Any], tokens: jax.Array, cache: Dict[str, Any],
         p, win, layer_cache = xs
         w = win if windows is not None else None
         y, new_cache = _layer_apply(x, p, cfg, window=w, cache=layer_cache,
-                                    cache_pos=pos, engine=engine)
+                                    cache_pos=pos,
+                                    lengths=lengths if s_tokens > 1 else None,
+                                    engine=engine)
         return y, new_cache
 
     x, new_cache = jax.lax.scan(body, x,

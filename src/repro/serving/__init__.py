@@ -1,10 +1,10 @@
-from repro.serving.engine import (Request, ServingEngine, sample_token,
-                                  sample_token_batch)
+from repro.serving.engine import (Request, ServingEngine, SlotCheckpoint,
+                                  sample_token, sample_token_batch)
 from repro.serving.metrics import (MetricsRecorder, RequestRecord,
                                    multi_summary, validate)
 from repro.serving.sched import Scheduler, StreamSpec
 from repro.serving.tenancy import MultiScheduler
 
-__all__ = ["ServingEngine", "Request", "sample_token", "sample_token_batch",
-           "Scheduler", "StreamSpec", "MultiScheduler", "MetricsRecorder",
-           "RequestRecord", "multi_summary", "validate"]
+__all__ = ["ServingEngine", "Request", "SlotCheckpoint", "sample_token",
+           "sample_token_batch", "Scheduler", "StreamSpec", "MultiScheduler",
+           "MetricsRecorder", "RequestRecord", "multi_summary", "validate"]

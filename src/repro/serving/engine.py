@@ -112,6 +112,31 @@ class Request:
     arrival_s: Optional[float] = None
     first_token_s: Optional[float] = None
     finish_s: Optional[float] = None
+    # continuous batching (serving.sched): monotonic submission sequence
+    # (the deterministic admission tie-break), admission-control outcome
+    # flags, and how many times this request was preempted mid-service
+    seq: Optional[int] = None
+    rejected: bool = False             # admission control refused to queue
+    degraded: bool = False             # deadline stripped at admission
+    preemptions: int = 0
+
+
+@dataclasses.dataclass
+class SlotCheckpoint:
+    """Bit-exact resumable snapshot of one preempted batch slot.
+
+    ``kv`` holds the slot's valid cache rows ``[0, valid)`` (host copies;
+    the dtype round-trips exactly), ``ssm`` the recurrent state, and the
+    request itself carries its chunk frontier (``prefill_pos``) and the
+    tokens generated so far.  Restoring scatters these back into any free
+    slot; completed KV blocks re-writeback through the normal
+    ``sync_kv_tick`` path, so the page-pool event log stays a faithful
+    replay input for ``kv_pass_counters``."""
+    req: Request
+    slot_pos: int
+    valid: int                          # valid KV rows at preemption
+    kv: Optional[Dict[str, np.ndarray]] = None
+    ssm: Optional[Dict[str, np.ndarray]] = None
 
 
 class ServingEngine:
@@ -137,10 +162,14 @@ class ServingEngine:
         # kept for backward compatibility with callers poking .engine
         self.engine = self.plan
         self.key = jax.random.PRNGKey(seed)
-        # pad-safe bucketing needs a causal mask to hide the pads; SSM
-        # state and MoE capacity routing see every token, so those
-        # families keep exact-length prefill.
-        self._bucketed = cfg.family in ("dense", "vlm")
+        # pad-safe bucketing needs pads to be invisible to real tokens:
+        # attention families hide them behind the causal mask, and the
+        # pure-SSM family masks them into exact state no-ops (dt = 0 at
+        # pads — see models/ssm.mamba_mixer).  MoE capacity routing is
+        # contended across the flattened batch and hybrid's parallel
+        # attn+SSM heads are untested under masking, so those families
+        # keep exact-length prefill.
+        self._bucketed = cfg.family in ("dense", "vlm", "ssm")
         if prefill_chunk < 1:
             # _next_pow2 maps 0/negative to 1, which would silently serve
             # chunk=1 pacing the caller never asked for
@@ -153,6 +182,15 @@ class ServingEngine:
         self.slot_pos = np.zeros(batch_slots, np.int32)
         self.waiting: List[Request] = []
         self.finished: List[Request] = []
+        # mid-request preemption (serving.sched): every slot handover
+        # bumps the slot's generation; a KV streaming pass begun under an
+        # older generation must not scatter its (stale) rows over the new
+        # occupant — the guard that makes preempt/restore safe while a
+        # pass is in flight
+        self._slot_gen = np.zeros(batch_slots, np.int64)
+        self._kv_begun_gen: Optional[np.ndarray] = None
+        self.preempt_count = 0
+        self.restore_count = 0
 
         self._decode = jax.jit(self._decode_impl)
         # keyed by (bucket, add_prefix, kv_span): pow2 buckets x pow2 KV
@@ -216,7 +254,14 @@ class ServingEngine:
         key = (int(bucket), bool(add_prefix),
                None if kv_span is None else int(kv_span))
         if key not in self._prefill_cache:
-            def impl(params, tokens, cache, slot_idx, pos_vec):
+            # SSM rows need each row's real-token count so the masked
+            # scan treats the bucket pads as state no-ops; attention-only
+            # families get pad safety from the causal mask alone and keep
+            # the narrower signature
+            needs_len = self._bucketed and "ssm" in self.cache
+
+            def impl(params, tokens, cache, slot_idx, pos_vec,
+                     lengths=None):
                 sub = jax.tree_util.tree_map(
                     lambda c: jnp.take(c, slot_idx, axis=1), cache)
                 if kv_span is not None:
@@ -225,7 +270,9 @@ class ServingEngine:
                         v=sub["kv"]["v"][:, :, :, :kv_span]))
                 logits, sub = tfm.step(params, tokens, sub, pos_vec,
                                        self.cfg, engine=self.plan,
-                                       add_prefix=add_prefix)
+                                       add_prefix=add_prefix,
+                                       lengths=lengths if needs_len
+                                       else None)
                 out = {}
                 for part, c in cache.items():
                     s_part = sub[part]
@@ -376,14 +423,20 @@ class ServingEngine:
         return int(self.slot_pos[i])
 
     def _kv_full_blocks(self) -> Dict[int, int]:
-        """{slot: completed-block count} over the occupied slots — the
-        span map one KV streaming pass fetches."""
-        block = self.kv_table.block_rows
+        """{slot: host-synced completed-block count} over the occupied
+        slots — the span map one KV streaming pass fetches.  Advertising
+        the *synced* count (not the raw frontier) is what keeps a
+        just-restored preemption victim safe: its completed blocks live
+        only in the device cache until ``sync_kv_tick`` re-writes them
+        back, and a fetch of an unsynced block would stream stale host
+        rows.  At every begin/fence point of an unpreempted slot the two
+        counts are equal (writeback runs at end of tick, before the next
+        begin), so this is the same map the frontier would give."""
         out = {}
         for i, r in enumerate(self.slot_req):
             if r is None:
                 continue
-            full = self._kv_valid(i) // block
+            full = int(self._kv_synced[i])
             if full > 0:
                 out[i] = full
         return out
@@ -406,6 +459,13 @@ class ServingEngine:
         for slot, rows in by_slot.items():
             if self.slot_req[slot] is None:
                 continue        # retired mid-pass: rows are dead anyway
+            if (self._kv_begun_gen is not None
+                    and self._kv_begun_gen[slot] != self._slot_gen[slot]):
+                # the slot changed hands (preempt/restore/assign) after
+                # the pass was begun: these rows belong to the previous
+                # occupant and must not clobber the new one's restored
+                # or freshly prefilled cache rows
+                continue
             ks = (rows[0]["k"] if len(rows) == 1
                   else jnp.concatenate([r["k"] for r in rows], axis=2))
             vs = (rows[0]["v"] if len(rows) == 1
@@ -445,6 +505,7 @@ class ServingEngine:
             self._inflight_pass = self.pager.begin_pass(
                 self.page_resident_slots)
         if self.kv_table is not None and self._inflight_kv is None:
+            self._kv_begun_gen = self._slot_gen.copy()
             self._inflight_kv = self.kv_table.begin_pass(
                 self._kv_full_blocks())
 
@@ -533,9 +594,11 @@ class ServingEngine:
         self.begin_tick_params()
         return self.fence_tick_params()
 
-    def has_tick_after(self, chunk: Optional[int] = None) -> bool:
+    def has_tick_after(self, chunk: Optional[int] = None,
+                       plan: Optional[Dict[int, int]] = None) -> bool:
         """Will the engine still hold work after ONE more scheduler-paced
-        tick (``complete=False`` prefill at ``chunk`` pacing)?
+        tick (``complete=False`` prefill at ``chunk`` pacing, or at the
+        per-slot ``plan`` allocations of the budgeted tick)?
 
         Drives the pipeline's begin decision: a pass begun with no tick
         left to consume it would stream a whole extra pass and skew the
@@ -551,7 +614,13 @@ class ServingEngine:
                 continue
             remaining = len(r.prompt) - r.prefill_pos
             if remaining > 0:
-                n, _bucket, _pfx, _pos = self._chunk_shape(r, chunk)
+                if plan is not None:
+                    if plan.get(i, 0) <= 0:
+                        return True      # unscheduled this tick: the
+                                         # frontier survives untouched
+                    n, _b, _p, _q = self._chunk_shape(r, plan[i])
+                else:
+                    n, _bucket, _pfx, _pos = self._chunk_shape(r, chunk)
                 if n < remaining:
                     return True          # more prefill chunks after this
                 # prefill completes THIS tick — and the same tick's
@@ -588,6 +657,7 @@ class ServingEngine:
             kv_pool_hits=0 if kv is None else kv.pool_hits,
             kv_writebacks=0 if kv is None else kv.writebacks,
             kv_dropped=0 if kv is None else kv.dropped,
+            kv_preempt_drops=0 if kv is None else kv.preempt_drops,
             kv_exposed_s=self.kv_stall_s,
             kv_hidden_s=self.kv_hidden_s,
             kv_block_rows=0 if kv is None else kv.block_rows)
@@ -627,6 +697,7 @@ class ServingEngine:
         if req.arrival_s is None:
             req.arrival_s = time.perf_counter()
         req.prefill_pos = 0
+        self._slot_gen[slot] += 1
         if self.kv_table is not None:
             # the previous tenant's pooled blocks were queued for drop at
             # its retirement and flush at the next fence — BEFORE this
@@ -640,6 +711,75 @@ class ServingEngine:
             self.cache["ssm"] = jax.tree_util.tree_map(
                 lambda c: c.at[:, slot].set(0), self.cache["ssm"])
         self.slot_req[slot] = req
+
+    # -- mid-request preemption (the continuous-batching slot handover) -------
+    def preempt(self, slot: int) -> SlotCheckpoint:
+        """Evict the request occupying ``slot`` mid-service and return a
+        bit-exact resumable :class:`SlotCheckpoint`.
+
+        The device cache is authoritative for an occupied slot (host
+        writebacks are copies), so the snapshot reads the valid KV rows
+        and recurrent state straight from it.  The slot is then released
+        exactly like a retirement from the paging side: its pooled KV
+        blocks are queued for drop — flushed immediately when no KV pass
+        is in flight (the single-scheduler admit point, which sits
+        between fence and begin), else deferred to the upcoming fence,
+        which in the tenancy tick order still lands before the slot's
+        next occupant writes back its first block."""
+        req = self.slot_req[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is empty; nothing to preempt")
+        valid = self._kv_valid(slot)
+        kv = None
+        if "kv" in self.cache and valid > 0:
+            kv = dict(
+                k=np.asarray(self.cache["kv"]["k"][:, slot, :, :valid]),
+                v=np.asarray(self.cache["kv"]["v"][:, slot, :, :valid]))
+        ssm = None
+        if "ssm" in self.cache:
+            ssm = {n: np.asarray(c[:, slot])
+                   for n, c in self.cache["ssm"].items()}
+        ckpt = SlotCheckpoint(req=req, slot_pos=int(self.slot_pos[slot]),
+                              valid=int(valid), kv=kv, ssm=ssm)
+        req.preemptions += 1
+        self.slot_req[slot] = None
+        self._slot_gen[slot] += 1
+        self.preempt_count += 1
+        if self.kv_table is not None:
+            self.kv_table.preempt_release(
+                slot, in_flight=self._inflight_kv is not None)
+            self._kv_synced[slot] = 0
+        return ckpt
+
+    def restore(self, ckpt: SlotCheckpoint, slot: int) -> None:
+        """Rebind a preempted request to a free slot and scatter its
+        checkpointed state back — decode resumes from ``generated[-1]``,
+        chunked prefill from its chunk frontier, bit-exactly for greedy
+        sampling.  The host KV image is NOT written here: ``_kv_synced``
+        restarts at 0 and the normal end-of-tick ``sync_kv_tick`` re-
+        writes the completed blocks back (fresh writeback + fetch events,
+        which the ``kv_pass_counters`` replay follows natively)."""
+        if self.slot_req[slot] is not None:
+            raise ValueError(f"slot {slot} is occupied")
+        req = ckpt.req
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = ckpt.slot_pos
+        self._slot_gen[slot] += 1
+        self.restore_count += 1
+        if ckpt.kv is not None:
+            k, v = self.cache["kv"]["k"], self.cache["kv"]["v"]
+            hi = ckpt.valid
+            k = k.at[:, slot, :, :hi].set(
+                jnp.asarray(ckpt.kv["k"], k.dtype))
+            v = v.at[:, slot, :, :hi].set(
+                jnp.asarray(ckpt.kv["v"], v.dtype))
+            self.cache["kv"] = dict(k=k, v=v)
+        if ckpt.ssm is not None:
+            self.cache["ssm"] = {
+                n: c.at[:, slot].set(jnp.asarray(ckpt.ssm[n], c.dtype))
+                for n, c in self.cache["ssm"].items()}
+        if self.kv_table is not None:
+            self._kv_synced[slot] = 0
 
     @property
     def pending(self) -> bool:
@@ -666,7 +806,7 @@ class ServingEngine:
                 bucket = _pow2_floor(avail)
                 n = min(bucket, remaining)
         else:
-            n = remaining          # exact-length single shot (ssm / moe)
+            n = remaining          # exact-length single shot (hybrid / moe)
             bucket = n
         first = req.prefill_pos == 0
         # prefix is prepended inside the step only on the first chunk; the
@@ -677,24 +817,35 @@ class ServingEngine:
         return n, bucket, add_prefix, insert_pos
 
     def prefill_tick(self, params: Any, complete: bool = False,
-                     chunk: Optional[int] = None) -> List[Request]:
+                     chunk: Optional[int] = None,
+                     plan: Optional[Dict[int, int]] = None
+                     ) -> List[Request]:
         """Advance every prefilling slot by one chunk (``complete=True``
         loops until all prompts are absorbed — the legacy single-tick
         prefill).  ``chunk`` overrides the engine's default pacing for
         this call only (the Scheduler threads its own), and must be a
-        power of two.  Slots whose prompt completes sample their first
-        token at the request's own temperature.  Returns the requests
-        that got their first token this call."""
+        power of two.  ``plan`` ({slot: token allocation}) is the
+        budgeted continuous-batching composition: only the listed slots
+        prefill this call, each at its OWN allocation — slots the
+        scheduler left out of the plan simply hold their frontier for a
+        tick.  Slots whose prompt completes sample their first token at
+        the request's own temperature.  Returns the requests that got
+        their first token this call."""
+        if complete and plan is not None:
+            raise ValueError("plan= paces one scheduler tick; it cannot "
+                             "be combined with complete=True")
         started: List[Request] = []
         while True:
             pending = [(i, r) for i, r in enumerate(self.slot_req)
-                       if r is not None and r.prefill_pos < len(r.prompt)]
+                       if r is not None and r.prefill_pos < len(r.prompt)
+                       and (plan is None or plan.get(i, 0) > 0)]
             if not pending:
                 break
             groups: Dict[Tuple[int, bool],
                          List[Tuple[int, Request, int, int]]] = {}
             for i, r in pending:
-                n, bucket, add_prefix, pos = self._chunk_shape(r, chunk)
+                c = plan[i] if plan is not None else chunk
+                n, bucket, add_prefix, pos = self._chunk_shape(r, c)
                 groups.setdefault((bucket, add_prefix),
                                   []).append((i, r, n, pos))
             for (bucket, add_prefix), rows in groups.items():
@@ -740,6 +891,7 @@ class ServingEngine:
         tokens = np.zeros((k, bucket), np.int32)
         slot_idx = np.zeros((k,), np.int32)
         pos_vec = np.zeros((k,), np.int32)
+        lengths = np.zeros((k,), np.int32)
         for j in range(k):
             # rows beyond the group repeat the last row: the duplicate
             # scatter writes identical values, so padding the batch to a
@@ -748,9 +900,17 @@ class ServingEngine:
             tokens[j, :n] = r.prompt[r.prefill_pos:r.prefill_pos + n]
             slot_idx[j] = i
             pos_vec[j] = pos
+            lengths[j] = n
         fn = self._prefill_for_bucket(bucket, add_prefix, kv_span)
-        logits, self.cache = fn(params, jnp.asarray(tokens), self.cache,
-                                jnp.asarray(slot_idx), jnp.asarray(pos_vec))
+        if self._bucketed and "ssm" in self.cache:
+            logits, self.cache = fn(params, jnp.asarray(tokens), self.cache,
+                                    jnp.asarray(slot_idx),
+                                    jnp.asarray(pos_vec),
+                                    jnp.asarray(lengths))
+        else:
+            logits, self.cache = fn(params, jnp.asarray(tokens), self.cache,
+                                    jnp.asarray(slot_idx),
+                                    jnp.asarray(pos_vec))
         for j, (i, r, n, _pos) in enumerate(rows):
             r.prefill_pos += n
             if r.prefill_pos < len(r.prompt):
@@ -783,8 +943,25 @@ class ServingEngine:
             tokens[i, 0] = req.generated[-1]
             temps[i] = req.temperature
             pos[i] = self.slot_pos[i]
+        # a KV slot mid-prefill parks its write at the scratch row, but
+        # recurrent state has no position to park at — the batched decode
+        # would advance a chunk-prefilling SSM slot's state with a
+        # garbage token.  Save those slots' state and put it back after.
+        parked: List[int] = []
+        if "ssm" in self.cache:
+            parked = [i for i, r in enumerate(self.slot_req)
+                      if r is not None and r.prefill_pos < len(r.prompt)]
+            if parked:
+                p_idx = jnp.asarray(parked)
+                p_saved = jax.tree_util.tree_map(
+                    lambda c: jnp.take(c, p_idx, axis=1),
+                    self.cache["ssm"])
         logits, self.cache = self._decode(params, jnp.asarray(tokens),
                                           self.cache, jnp.asarray(pos))
+        if parked:
+            self.cache["ssm"] = jax.tree_util.tree_map(
+                lambda c, s: c.at[:, p_idx].set(s),
+                self.cache["ssm"], p_saved)
         self.key, sub = jax.random.split(self.key)
         toks = np.asarray(sample_token_batch(logits[:, -1], sub, temps))
         finished: List[Request] = []
@@ -808,6 +985,7 @@ class ServingEngine:
         req.finish_s = time.perf_counter()
         self.finished.append(req)
         self.slot_req[slot] = None
+        self._slot_gen[slot] += 1
         if self.kv_table is not None:
             self.kv_table.queue_drop(slot)
             self._kv_synced[slot] = 0

@@ -11,12 +11,12 @@ behind compute by the async paging pipeline), deadline-miss rate per
 stream, and aggregate token throughput.
 
 Everything is emitted as one JSON document (schema
-``repro.serving.metrics/v4``) so the bench trajectory
+``repro.serving.metrics/v5``) so the bench trajectory
 (``benchmarks/serving_load.py`` -> ``BENCH_serving.json``) and the
 launcher (``repro.launch.serve --metrics-json``) share a format:
 
     {
-      "schema": "repro.serving.metrics/v4",
+      "schema": "repro.serving.metrics/v5",
       "ticks":      {"count", "latency_ms": {mean,p50,p99,max},
                      "paging_exposed_ms": {mean,p50,p99,max},
                      "paging_hidden_ms":  {mean,p50,p99,max}},
@@ -24,12 +24,15 @@ launcher (``repro.launch.serve --metrics-json``) share a format:
                      "ttft_ms": {mean,p50,p99,max},
                      "latency_ms": {mean,p50,p99,max}},
       "deadlines":  {"with_deadline", "missed", "miss_rate", "truncated"},
+      "scheduler":  {"preemptions", "restores", "rejected", "degraded",
+                     "budget_tokens_per_tick", "budget_used_mean",
+                     "budget_utilization"},
       "throughput": {"wall_s", "tok_per_s"},
       "paging":     {"swap_count", "miss_count", "exposed_s", "hidden_s",
                      "overlap_frac", "stall_s", "n_pages",
                      "kv_swaps", "kv_pool_hits", "kv_writebacks",
-                     "kv_dropped", "kv_exposed_s", "kv_hidden_s",
-                     "kv_block_rows"},
+                     "kv_dropped", "kv_preempt_drops", "kv_exposed_s",
+                     "kv_hidden_s", "kv_block_rows"},
       "streams":    {name: {"count", "missed", "miss_rate", "truncated",
                             "p99_ttft_ms"}}
     }
@@ -39,26 +42,30 @@ Latencies are milliseconds; a request's deadline is met when its
 Requests without a deadline never count toward the miss rate, and
 *truncated* requests (retired by KV-cache exhaustion, i.e. partial
 service) are excluded from it and reported under their own counter.
+Requests the admission controller REJECTED never became requests at all
+(no service, no tokens): they appear only in ``scheduler.rejected``.
 
-v4 vs v3: the ``paging`` section grew the ``kv_*`` fields — the KV-cache
-share of the same budgeted page stream (``kv_swaps`` host->device block
-transfers, ``kv_pool_hits`` pooled re-fetches, ``kv_writebacks``
-completed blocks moved host-ward, ``kv_dropped`` slot-reuse
-invalidations, and the KV slice of the exposed/hidden stall split).
-``exposed_s`` / ``hidden_s`` stay the COMBINED weight+KV totals, so a
-run without KV paging reads exactly like v3 with zeroed ``kv_*``.
-(v3 vs v2: the per-tick ``paging_stall_ms`` became the
-``paging_exposed_ms`` / ``paging_hidden_ms`` pair; ``stall_s`` is kept
-as an alias of ``exposed_s``.)  :func:`validate` rejects v3 payloads —
-wrong schema string, or missing ``kv_*`` keys.
+v5 vs v4: the ``scheduler`` section is new — continuous-batching
+observability (mid-request ``preemptions`` and ``restores``, admission
+control's ``rejected`` / ``degraded`` verdicts, and the per-tick token
+budget's mean use / utilization; all zero for an unbudgeted
+run-to-completion scheduler) — and ``paging`` grew
+``kv_preempt_drops``, the subset of ``kv_dropped`` block invalidations
+caused by preemption rather than retirement.  :func:`validate` rejects
+v4 payloads — wrong schema string, or missing ``scheduler`` section.
+(v4 vs v3: the ``paging`` section grew the ``kv_*`` fields — the
+KV-cache share of the same budgeted page stream.  v3 vs v2: the
+per-tick ``paging_stall_ms`` became the ``paging_exposed_ms`` /
+``paging_hidden_ms`` pair; ``stall_s`` is kept as an alias of
+``exposed_s``.)
 
 Multi-model tenancy (``repro.serving.tenancy.MultiScheduler``) emits the
-v4 *multi* shape instead: per-model sections of the document above plus
+v5 *multi* shape instead: per-model sections of the document above plus
 the shared page pool's contention stats (KV page tables appear as their
 own ``<model>/kv`` members)::
 
     {
-      "schema": "repro.serving.metrics/v4",
+      "schema": "repro.serving.metrics/v5",
       "ticks":       {"count"},                     # MultiScheduler ticks
       "models":      {name: <single-model document, sans schema>},
       "shared_pool": {"budget_bytes", "live_bytes", "cached_pages",
@@ -68,6 +75,7 @@ own ``<model>/kv`` members)::
                                         "hidden_s", "n_pages"}}},
       "totals":      {"requests", "tokens_out", "truncated",
                       "with_deadline", "missed", "miss_rate",
+                      "preemptions", "restores", "rejected", "degraded",
                       "wall_s", "tok_per_s",
                       "paging_exposed_s", "paging_hidden_s",
                       "overlap_frac"}
@@ -91,7 +99,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-SCHEMA = "repro.serving.metrics/v4"
+SCHEMA = "repro.serving.metrics/v5"
 
 
 def quantiles(xs: List[float]) -> Dict[str, float]:
@@ -107,6 +115,7 @@ def _empty_paging() -> Dict[str, Any]:
     return dict(swap_count=0, miss_count=0, exposed_s=0.0, hidden_s=0.0,
                 overlap_frac=0.0, stall_s=0.0, n_pages=0,
                 kv_swaps=0, kv_pool_hits=0, kv_writebacks=0, kv_dropped=0,
+                kv_preempt_drops=0,
                 kv_exposed_s=0.0, kv_hidden_s=0.0, kv_block_rows=0)
 
 
@@ -149,7 +158,7 @@ class RequestRecord:
 
 
 class MetricsRecorder:
-    """Accumulates tick- and request-level events; renders the v4 JSON."""
+    """Accumulates tick- and request-level events; renders the v5 JSON."""
 
     def __init__(self, clock: Callable[[], float] = time.perf_counter):
         self.clock = clock
@@ -157,6 +166,13 @@ class MetricsRecorder:
         self.tick_exposed_s: List[float] = []
         self.tick_hidden_s: List[float] = []
         self.records: List[RequestRecord] = []
+        # continuous-batching events (v5 "scheduler" section)
+        self.preemptions = 0
+        self.restores = 0
+        self.rejected = 0
+        self.degraded = 0
+        self.budget_tokens: Optional[int] = None
+        self.tick_budget_used: List[int] = []
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -166,15 +182,45 @@ class MetricsRecorder:
             self._t0 = self.clock()
 
     def record_tick(self, latency_s: float, paging_exposed_s: float = 0.0,
-                    paging_hidden_s: float = 0.0) -> None:
+                    paging_hidden_s: float = 0.0,
+                    budget_tokens: Optional[int] = None,
+                    budget_used: Optional[int] = None) -> None:
         """One tick: its wall latency, the paging wait that actually
         blocked it (*exposed*), and the stream time the async pipeline
-        hid behind compute (*hidden*; 0 for synchronous streaming)."""
+        hid behind compute (*hidden*; 0 for synchronous streaming).
+        Budgeted continuous-batching ticks also report the per-tick
+        token budget and the tokens the tick's plan actually scheduled
+        (``budget_used`` may exceed ``budget_tokens`` — exact-length
+        prefill families absorb whole prompts, a documented overrun)."""
         self.start()
         self.tick_latency_s.append(float(latency_s))
         self.tick_exposed_s.append(float(paging_exposed_s))
         self.tick_hidden_s.append(float(paging_hidden_s))
+        if budget_tokens is not None:
+            self.budget_tokens = int(budget_tokens)
+        if budget_used is not None:
+            self.tick_budget_used.append(int(budget_used))
         self._t_last = self.clock()
+
+    def record_preemption(self) -> None:
+        """One mid-request slot eviction (the victim's state checkpoints
+        host-ward and its pooled KV blocks drop)."""
+        self.preemptions += 1
+
+    def record_restore(self) -> None:
+        """One preempted request rebound to a slot (bit-exact resume)."""
+        self.restores += 1
+
+    def record_rejected(self) -> None:
+        """Admission control refused a request outright: its predicted
+        completion already missed the deadline, so queuing it would only
+        have manufactured a guaranteed miss."""
+        self.rejected += 1
+
+    def record_degraded(self) -> None:
+        """Admission control shortened a request's ``max_new_tokens`` to
+        the longest completion that still fits its deadline."""
+        self.degraded += 1
 
     def record_request(self, req: Any) -> RequestRecord:
         """Fold a finished engine Request (duck-typed: uid, prompt,
@@ -253,12 +299,27 @@ class MetricsRecorder:
                 "miss_rate": (len(missed) / len(with_dl)) if with_dl else 0.0,
                 "truncated": len(trunc_dl),
             },
+            "scheduler": self._scheduler_section(),
             "throughput": {
                 "wall_s": self.wall_s,
                 "tok_per_s": tokens / wall,
             },
             "paging": dict(paging if paging is not None else _empty_paging()),
             "streams": streams,
+        }
+
+    def _scheduler_section(self) -> Dict[str, Any]:
+        used = self.tick_budget_used
+        mean_used = (sum(used) / len(used)) if used else 0.0
+        budget = self.budget_tokens or 0
+        return {
+            "preemptions": self.preemptions,
+            "restores": self.restores,
+            "rejected": self.rejected,
+            "degraded": self.degraded,
+            "budget_tokens_per_tick": budget,
+            "budget_used_mean": mean_used,
+            "budget_utilization": (mean_used / budget) if budget else 0.0,
         }
 
     def to_json(self, paging: Optional[Dict[str, Any]] = None, **extra
@@ -274,13 +335,13 @@ class MetricsRecorder:
 
 
 # ---------------------------------------------------------------------------
-# multi-model tenancy (metrics/v4 multi shape)
+# multi-model tenancy (metrics/v5 multi shape)
 # ---------------------------------------------------------------------------
 
 def multi_summary(models: Dict[str, Dict[str, Any]],
                   shared_pool: Optional[Dict[str, Any]] = None,
                   ticks: int = 0) -> Dict[str, Any]:
-    """Assemble the v3 multi-model document from per-model single-model
+    """Assemble the multi-model document from per-model single-model
     summaries (as produced by :meth:`MetricsRecorder.summary`) plus the
     shared pool's :meth:`~repro.core.paging.SharedPagePool.summary`.
 
@@ -303,6 +364,10 @@ def multi_summary(models: Dict[str, Dict[str, Any]],
                   for d in sections.values())
     hidden = sum(d["paging"].get("hidden_s", 0.0)
                  for d in sections.values())
+    sched_totals = {k: sum(d.get("scheduler", {}).get(k, 0)
+                           for d in sections.values())
+                    for k in ("preemptions", "restores", "rejected",
+                              "degraded")}
     # the tenants share one wall clock window, so aggregate throughput is
     # total tokens over the longest per-model span, not the sum of spans
     wall = max((d["throughput"]["wall_s"] for d in sections.values()),
@@ -319,6 +384,7 @@ def multi_summary(models: Dict[str, Dict[str, Any]],
             "with_deadline": with_dl,
             "missed": missed,
             "miss_rate": (missed / with_dl) if with_dl else 0.0,
+            **sched_totals,
             "wall_s": wall,
             "tok_per_s": tokens / max(wall, 1e-9),
             "paging_exposed_s": exposed,
@@ -335,17 +401,25 @@ _SINGLE_KEYS = {
     "requests": ("count", "tokens_out", "truncated", "ttft_ms",
                  "latency_ms"),
     "deadlines": ("with_deadline", "missed", "miss_rate", "truncated"),
+    # v5: continuous-batching observability — its absence is exactly
+    # what marks a stale v4 payload
+    "scheduler": ("preemptions", "restores", "rejected", "degraded",
+                  "budget_tokens_per_tick", "budget_used_mean",
+                  "budget_utilization"),
     "throughput": ("wall_s", "tok_per_s"),
     "paging": ("swap_count", "miss_count", "exposed_s", "hidden_s",
                "overlap_frac", "n_pages",
-               # v4: the KV-cache share of the same page stream — their
-               # absence is exactly what marks a stale v3 payload
+               # v4: the KV-cache share of the same page stream
                "kv_swaps", "kv_pool_hits", "kv_writebacks", "kv_dropped",
+               # v5: preemption's share of the dropped blocks
+               "kv_preempt_drops",
                "kv_exposed_s", "kv_hidden_s", "kv_block_rows"),
 }
 
 _TOTALS_KEYS = ("requests", "tokens_out", "truncated", "with_deadline",
-                "missed", "miss_rate", "wall_s", "tok_per_s",
+                "missed", "miss_rate",
+                "preemptions", "restores", "rejected", "degraded",
+                "wall_s", "tok_per_s",
                 "paging_exposed_s", "paging_hidden_s", "overlap_frac")
 
 
@@ -366,7 +440,7 @@ def _validate_single(doc: Dict[str, Any], where: str) -> None:
 
 
 def validate(doc: Dict[str, Any]) -> Dict[str, Any]:
-    """Assert ``doc`` is a well-formed ``repro.serving.metrics/v4``
+    """Assert ``doc`` is a well-formed ``repro.serving.metrics/v5``
     document (either the single-model or the multi-model shape); returns
     the document unchanged so it can be used inline.  Raises ValueError
     naming the first missing piece."""

@@ -12,9 +12,39 @@ that claim's serving-side analogue:
     priority class first, earliest absolute deadline within a class
     (classic earliest-deadline-first, which is optimal for preemptive
     uniprocessor scheduling and a strong heuristic for slot admission);
+    ties on (priority, deadline) break on the monotonic submission
+    sequence, so admission — and therefore every paging counter — is
+    reproducible run to run;
+  * **continuous batching** (``token_budget=``): every tick the
+    scheduler re-plans a shared token budget across the live slots —
+    each decode-ready slot costs one token off the top (decode is a
+    single batched step; starving it would stall every live stream's
+    next token), and the remainder is dealt to mid-prefill slots in
+    admission-key order, so an arriving 10 ms request gets budget THIS
+    tick instead of waiting behind a long assistant prefill.
+    Exact-length prefill families (hybrid / moe) cannot be sliced, so a
+    scheduled slot absorbs its whole prompt — a documented budget
+    overrun rather than permanent starvation;
+  * **mid-request preemption** (``preemptive=True``): when an urgent
+    request has no free slot, the worst-ranked occupant of a strictly
+    lower priority class is evicted mid-service — its KV blocks drop
+    through the :class:`~repro.core.paging.KVPageTable` path, its state
+    checkpoints host-ward (:meth:`ServingEngine.preempt`), and the slot
+    is handed over.  The victim re-enters the admission pool and later
+    :meth:`~ServingEngine.restore`\\ s bit-exactly — resuming decode, or
+    chunked prefill at its chunk frontier (exactness holds for greedy
+    requests; stochastic sampling shares the engine's RNG stream, whose
+    consumption order legitimately changes under preemption);
+  * **admission control** (``admission="reject"|"degrade"``): a request
+    whose predicted completion — prefill + decode ticks at the measured
+    per-tick cost, exposed stall estimated by the
+    :func:`~repro.core.memsys.overlap_stall` model — already misses its
+    deadline is refused up front (or, under ``"degrade"``, its
+    ``max_new_tokens`` is cut to the longest completion that still
+    fits), instead of being queued into a guaranteed miss;
   * **chunked prefill**: a long prompt advances at most ``prefill_chunk``
     tokens per tick, so it cannot monopolize a tick while a 10 ms-deadline
-    request sits decoded-starved in the next slot;
+    request sits decode-starved in the next slot;
   * **overlapped paged weights** (``async_io=True``, the default): the
     tick loop is a software pipeline — fence the pass begun last tick,
     admit, *begin* the next tick's page stream, then run this tick's
@@ -26,23 +56,27 @@ that claim's serving-side analogue:
     async path is verified bit-exact against (same tokens, same swap/
     miss counters — same traffic, different schedule);
   * **metrics**: TTFT / end-to-end latency / p50 / p99 / deadline-miss
-    rate / tok/s / exposed-vs-hidden paging stalls, recorded per tick
-    and per request and emitted as the ``repro.serving.metrics/v4``
+    rate / tok/s / exposed-vs-hidden paging stalls / preemption and
+    admission-control counters / budget utilization, recorded per tick
+    and per request and emitted as the ``repro.serving.metrics/v5``
     JSON.
 
 The scheduler owns no jit state — it drives the engine's tick primitives
 (``begin_tick_params`` / ``fence_tick_params`` / ``assign`` /
-``prefill_tick`` / ``decode_tick``), so engine mechanism tests and
-scheduler policy tests stay independent.
+``preempt`` / ``restore`` / ``prefill_tick`` / ``decode_tick``), so
+engine mechanism tests and scheduler policy tests stay independent.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import math
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
-from repro.serving.engine import Request, ServingEngine
+from repro.core.memsys import overlap_stall
+from repro.serving.engine import Request, ServingEngine, SlotCheckpoint
 from repro.serving.metrics import MetricsRecorder
 
 
@@ -62,18 +96,34 @@ class Scheduler:
     Typical use::
 
         eng = ServingEngine(cfg, packed, plan=plan).attach_paging()
-        sched = Scheduler(eng, prefill_chunk=32)
+        sched = Scheduler(eng, prefill_chunk=32, token_budget=64,
+                          preemptive=True, admission="reject")
         sched.add_stream("hand", priority=2, deadline_ms=15.0)
         sched.add_stream("assistant")                  # best effort
         sched.submit(Request(uid=0, prompt=p), stream="hand")
         done = sched.run_until_done()
         print(sched.metrics.to_json(paging=eng.paging_summary()))
-    """
+
+    ``token_budget`` turns on the continuous-batching tick plan,
+    ``preemptive`` allows mid-request slot handover to strictly-higher
+    priority requests, and ``admission`` ("reject" or "degrade") refuses
+    requests whose predicted completion already misses their deadline
+    (an explicit ``est_tick_s`` pins the cost model — deterministic
+    admission for virtual-clock benches; without it the controller uses
+    measured per-tick EMAs, admitting optimistically until it has
+    data).  ``seq_counter`` shares one submission sequence across
+    schedulers (the tenancy loop passes its own so the global admission
+    order stays deterministic)."""
 
     def __init__(self, engine: ServingEngine, *,
                  prefill_chunk: Optional[int] = None,
                  metrics: Optional[MetricsRecorder] = None,
                  async_io: bool = True,
+                 token_budget: Optional[int] = None,
+                 preemptive: bool = False,
+                 admission: Optional[str] = None,
+                 est_tick_s: Optional[float] = None,
+                 seq_counter: Optional[itertools.count] = None,
                  clock=time.perf_counter):
         self.engine = engine
         # overlap the next tick's page stream with this tick's compute;
@@ -89,14 +139,39 @@ class Scheduler:
             self.prefill_chunk: Optional[int] = _next_pow2(prefill_chunk)
         else:
             self.prefill_chunk = None      # engine default pacing
+        if token_budget is not None and token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got "
+                             f"{token_budget}")
+        self.token_budget = token_budget
+        self.preemptive = bool(preemptive)
+        if admission not in (None, "reject", "degrade"):
+            raise ValueError(f"admission must be None, 'reject' or "
+                             f"'degrade', got {admission!r}")
+        self.admission = admission
         self.metrics = metrics if metrics is not None else MetricsRecorder(
             clock=clock)
         self.clock = clock
         self.streams: Dict[str, StreamSpec] = {
             "default": StreamSpec("default")}
         self.queue: List[Request] = []
+        self.preempted: List[SlotCheckpoint] = []
+        self.rejected: List[Request] = []
         self.finished: List[Request] = []
         self.ticks = 0
+        self._seq = (seq_counter if seq_counter is not None
+                     else itertools.count())
+        # the budgeted tick's plan ({slot: token alloc}), set between
+        # admission and begin (the tenancy loop sets it from its GLOBAL
+        # plan), consumed by tick_begin/tick_compute
+        self._tick_plan: Optional[Dict[int, int]] = None
+        self._tick_budget_tokens: Optional[int] = None
+        self._tick_budget_used: Optional[int] = None
+        # admission-control cost model: EMAs of per-tick compute and
+        # stream (swap) seconds; predicted tick cost composes them via
+        # the memsys overlap identity
+        self._compute_ema: Optional[float] = None
+        self._swap_ema: Optional[float] = None
+        self._est_seed_s = est_tick_s
 
     # -- streams & submission -------------------------------------------------
     def add_stream(self, name: str, *, priority: int = 0,
@@ -108,7 +183,8 @@ class Scheduler:
     def submit(self, req: Request, stream: Optional[str] = None) -> None:
         """Queue a request.  Stream defaults fill in a missing priority /
         deadline; arrival is stamped here (TTFT and the deadline clock run
-        from submission, not admission)."""
+        from submission, not admission), as is the monotonic submission
+        sequence the admission key breaks ties on."""
         name = stream if stream is not None else req.stream
         if name not in self.streams:
             raise KeyError(f"unknown stream {name!r}; add_stream() first")
@@ -121,17 +197,23 @@ class Scheduler:
             req.deadline_ms = spec.deadline_ms
         if req.arrival_s is None:
             req.arrival_s = self.clock()
+        if req.seq is None:
+            req.seq = next(self._seq)
         self.queue.append(req)
 
     # -- admission policy -----------------------------------------------------
-    def _admission_key(self, req: Request):
+    def _admission_key(self, req: Request) -> Tuple[int, float, int]:
+        """Priority class first, EDF inside the class, and the monotonic
+        submission sequence as the deterministic tie-break (requests that
+        never passed :meth:`submit` fall back to their uid)."""
         deadline_abs = (float("inf") if req.deadline_ms is None
                         else req.arrival_s + req.deadline_ms / 1e3)
-        return (-(req.priority or 0), deadline_abs, req.arrival_s, req.uid)
+        seq = req.seq if req.seq is not None else req.uid
+        return (-(req.priority or 0), deadline_abs, seq)
 
     def admission_order(self) -> List[Request]:
         """Waiting requests in service order: priority class first, then
-        earliest absolute deadline (EDF), then arrival."""
+        earliest absolute deadline (EDF), then submission sequence."""
         return sorted(self.queue, key=self._admission_key)
 
     def _adopt_engine_queue(self) -> None:
@@ -149,16 +231,175 @@ class Scheduler:
                 req.arrival_s = None
             self.submit(req, stream=stream)
 
+    # -- admission control (predicted-miss refusal) ---------------------------
+    def est_tick_s(self) -> Optional[float]:
+        """Predicted cost of one tick.  An explicit ``est_tick_s``
+        constructor seed PINS the cost model (deterministic admission —
+        benches and tests driving a virtual clock need predictions that
+        never drift with host load, since the engine-side stall split is
+        measured in real time).  Without a seed, the prediction is the
+        measured compute EMA plus the exposed share of the stream EMA
+        under the memsys overlap model (``stall = swap - hidden``), and
+        None until the first measured tick — the controller then admits
+        optimistically rather than rejecting on no data."""
+        if self._est_seed_s is not None:
+            return self._est_seed_s
+        if self._compute_ema is None:
+            return None
+        stall = overlap_stall(self._swap_ema or 0.0, self._compute_ema)
+        return self._compute_ema + stall["exposed_s"]
+
+    def _ticks_needed(self, req: Request, new_tokens: int) -> int:
+        """Service ticks to produce ``new_tokens``: chunked prefill ticks
+        (the first token lands on the last of them), then one decode tick
+        per further token.  Optimistic — budget contention and queueing
+        ahead are not modeled, so a predicted miss is a CERTAIN miss
+        under at-least-this-cost service, which is exactly the one-sided
+        guarantee rejection needs."""
+        remaining = len(req.prompt) - req.prefill_pos
+        if remaining <= 0:
+            p_ticks = 0
+        elif self.engine._bucketed and self.prefill_chunk:
+            p_ticks = math.ceil(remaining / self.prefill_chunk)
+        else:
+            p_ticks = 1
+        return p_ticks + max(new_tokens - 1, 0)
+
+    def _admission_control(self) -> None:
+        cost = self.est_tick_s()
+        if cost is None or cost <= 0.0:
+            return
+        now = self.clock()
+        kept: List[Request] = []
+        for req in self.queue:
+            if req.deadline_ms is None:
+                kept.append(req)
+                continue
+            deadline_abs = req.arrival_s + req.deadline_ms / 1e3
+            slack_ticks = math.floor((deadline_abs - now) / cost)
+            if self._ticks_needed(req, req.max_new_tokens) <= slack_ticks:
+                kept.append(req)
+                continue
+            # the longest completion that still fits the deadline
+            feasible = slack_ticks - self._ticks_needed(req, 1) + 1
+            if self.admission == "degrade" and feasible >= 1:
+                if feasible < req.max_new_tokens:
+                    req.max_new_tokens = int(feasible)
+                    if not req.degraded:
+                        req.degraded = True
+                        self.metrics.record_degraded()
+                kept.append(req)
+            else:
+                req.rejected = True
+                req.finish_s = now
+                self.rejected.append(req)
+                self.metrics.record_rejected()
+        self.queue[:] = kept
+
+    # -- admission + preemption -----------------------------------------------
+    def _candidates(self) -> List[Tuple[tuple, str, object]]:
+        """The unified admission pool — fresh queue entries and preempted
+        checkpoints under ONE key — sorted into service order.  A
+        preempted victim competes on its own (priority, deadline, seq):
+        an urgent victim re-enters ahead of best-effort arrivals, and may
+        itself preempt a lower-priority usurper."""
+        cands = [(self._admission_key(r), "queue", r) for r in self.queue]
+        cands += [(self._admission_key(c.req), "restore", c)
+                  for c in self.preempted]
+        cands.sort(key=lambda t: t[0])
+        return cands
+
+    def _place(self, kind: str, obj, slot: int) -> None:
+        # remove by identity: Request's dataclass __eq__ compares the
+        # ndarray prompt (and SlotCheckpoint's its state arrays), so
+        # list.remove could raise on an equality tie
+        if kind == "queue":
+            idx = next(i for i, r in enumerate(self.queue) if r is obj)
+            del self.queue[idx]
+            self.engine.assign(obj, slot)
+        else:
+            idx = next(i for i, c in enumerate(self.preempted) if c is obj)
+            del self.preempted[idx]
+            self.engine.restore(obj, slot)
+            self.metrics.record_restore()
+
+    def _preempt_for(self, req: Request) -> Optional[int]:
+        """Pick a victim slot for ``req``: the worst-ranked occupant of a
+        STRICTLY lower priority class (equal-priority preemption would
+        thrash: the victim would immediately out-rank its usurper by
+        deadline and want the slot back).  Returns None when no occupant
+        qualifies."""
+        prio = req.priority or 0
+        victims = [(i, r) for i, r in enumerate(self.engine.slot_req)
+                   if r is not None and (r.priority or 0) < prio]
+        if not victims:
+            return None
+        slot, _r = max(victims, key=lambda t: self._admission_key(t[1]))
+        return slot
+
     def _admit(self) -> None:
         self._adopt_engine_queue()
-        free = self.engine.free_slots()
-        if not free or not self.queue:
-            return
-        self.queue.sort(key=self._admission_key)
-        for slot in free:
-            if not self.queue:
+        if self.admission is not None:
+            self._admission_control()
+        for slot in self.engine.free_slots():
+            cands = self._candidates()
+            if not cands:
                 break
-            self.engine.assign(self.queue.pop(0), slot)
+            _key, kind, obj = cands[0]
+            self._place(kind, obj, slot)
+        if not self.preemptive:
+            return
+        # every iteration strictly raises the evicted slot's priority, so
+        # the handover chain terminates
+        while True:
+            cands = self._candidates()
+            if not cands:
+                return
+            _key, kind, obj = cands[0]
+            req = obj if kind == "queue" else obj.req
+            slot = self._preempt_for(req)
+            if slot is None:
+                return
+            self.preempted.append(self.engine.preempt(slot))
+            self.metrics.record_preemption()
+            self._place(kind, obj, slot)
+
+    # -- the budgeted tick plan (continuous batching) -------------------------
+    def _plan_tick(self) -> Optional[Dict[int, int]]:
+        """Deal this tick's ``token_budget`` across the live slots: one
+        token per decode-ready slot off the top (decode is a single
+        batched step — withholding it would stall every live stream),
+        the remainder to mid-prefill slots in admission-key order, capped
+        at ``prefill_chunk``.  Exact-length families (hybrid / moe) are
+        all-or-nothing: a scheduled slot absorbs its whole remaining
+        prompt (documented overrun) rather than starving forever.
+        Returns the {slot: alloc} plan, or None when unbudgeted."""
+        if self.token_budget is None:
+            self._tick_budget_tokens = None
+            self._tick_budget_used = None
+            return None
+        eng = self.engine
+        occ = [(i, r) for i, r in enumerate(eng.slot_req) if r is not None]
+        used = sum(1 for _i, r in occ if r.prefill_pos >= len(r.prompt))
+        remaining = self.token_budget - used
+        plan: Dict[int, int] = {}
+        prefilling = sorted(
+            ((i, r) for i, r in occ if r.prefill_pos < len(r.prompt)),
+            key=lambda t: self._admission_key(t[1]))
+        for i, r in prefilling:
+            rem = len(r.prompt) - r.prefill_pos
+            if eng._bucketed:
+                alloc = min(self.prefill_chunk or rem, rem,
+                            max(remaining, 0))
+            else:
+                alloc = rem if remaining > 0 else 0
+            if alloc > 0:
+                plan[i] = int(alloc)
+                remaining -= alloc
+                used += alloc
+        self._tick_budget_tokens = self.token_budget
+        self._tick_budget_used = used
+        return plan
 
     # -- the tick (a 3-phase software pipeline) -------------------------------
     def tick_fence(self) -> tuple:
@@ -171,20 +412,26 @@ class Scheduler:
         return t0, params
 
     def tick_begin(self) -> None:
-        """Phase 2 (after admission): begin the NEXT tick's page stream —
-        only when the engine is certain to tick again, so every begun
-        pass is consumed by exactly one fence and the swap/miss counters
-        stay identical to the synchronous schedule."""
-        if (self.async_io
-                and (self.queue
-                     or self.engine.has_tick_after(self.prefill_chunk))):
+        """Phase 2 (after admission + planning): begin the NEXT tick's
+        page stream — only when the engine is certain to tick again, so
+        every begun pass is consumed by exactly one fence and the
+        swap/miss counters stay identical to the synchronous schedule."""
+        if not self.async_io:
+            return
+        if self._tick_plan is not None:
+            more = self.engine.has_tick_after(plan=self._tick_plan)
+        else:
+            more = self.engine.has_tick_after(self.prefill_chunk)
+        if self.queue or self.preempted or more:
             self.engine.begin_tick_params()
 
     def tick_compute(self, t0: float, params) -> List[Request]:
-        """Phase 3: one chunk of prefill per slot, one batched decode,
-        retire + metrics — overlapping with the phase-2 stream."""
+        """Phase 3: prefill per the tick plan (one chunk per slot when
+        unbudgeted), one batched decode, retire + metrics — overlapping
+        with the phase-2 stream."""
         started = self.engine.prefill_tick(params, complete=False,
-                                           chunk=self.prefill_chunk)
+                                           chunk=self.prefill_chunk,
+                                           plan=self._tick_plan)
         now = self.clock()
         for req in started:
             req.first_token_s = now              # scheduler clock wins
@@ -199,32 +446,53 @@ class Scheduler:
             self.metrics.record_request(req)
             self.finished.append(req)
         self.ticks += 1
-        self.metrics.record_tick(latency_s=now - t0,
-                                 paging_exposed_s=self.engine.last_stall_s,
-                                 paging_hidden_s=self.engine.last_hidden_s)
+        latency = now - t0
+        exposed = self.engine.last_stall_s
+        hidden = self.engine.last_hidden_s
+        # cost-model EMAs: compute is the tick wall net of the exposed
+        # paging wait; "swap" is the full stream time (exposed + hidden)
+        alpha = 0.3
+        compute = max(latency - exposed, 0.0)
+        self._compute_ema = (compute if self._compute_ema is None
+                             else (1 - alpha) * self._compute_ema
+                             + alpha * compute)
+        swap = exposed + hidden
+        self._swap_ema = (swap if self._swap_ema is None
+                          else (1 - alpha) * self._swap_ema + alpha * swap)
+        self.metrics.record_tick(latency_s=latency,
+                                 paging_exposed_s=exposed,
+                                 paging_hidden_s=hidden,
+                                 budget_tokens=self._tick_budget_tokens,
+                                 budget_used=self._tick_budget_used)
+        self._tick_plan = None
+        self._tick_budget_tokens = None
+        self._tick_budget_used = None
         return finished
 
     def tick(self) -> List[Request]:
-        """One scheduler tick: fence the in-flight pages, admit EDF,
-        begin the next stream, then advance each prefilling slot by ONE
-        chunk and run one batched decode while the stream proceeds.
-        Returns the requests that finished this tick."""
+        """One scheduler tick: fence the in-flight pages, admit EDF
+        (preempting / refusing per policy), re-plan the token budget,
+        begin the next stream, then advance the planned prefills and run
+        one batched decode while the stream proceeds.  Returns the
+        requests that finished this tick."""
         t0, params = self.tick_fence()
         self._admit()
+        self._tick_plan = self._plan_tick()
         self.tick_begin()
         return self.tick_compute(t0, params)
 
     # -- loops ----------------------------------------------------------------
     @property
     def pending(self) -> bool:
-        return bool(self.queue or self.engine.pending)
+        return bool(self.queue or self.preempted or self.engine.pending)
 
     def run_until_done(self, max_ticks: int = 100_000) -> List[Request]:
         """Serve until the queue drains.  ``max_ticks`` bounds THIS call
         (a reused scheduler's cumulative ``self.ticks`` must not trip the
         convergence check early), and the return value is the requests
         completed by this call — ``self.finished`` keeps the all-time
-        list."""
+        list (admission-rejected requests land in ``self.rejected``,
+        never here)."""
         done: List[Request] = []
         ticks = 0
         while self.pending:

@@ -24,7 +24,7 @@ behavior.  This module is that claim's serving-side realization:
     :func:`~repro.core.paging.shared_pass_counters` prediction, because
     tenants stream sequentially per tick);
   * per-model deadline accounting lands in the
-    ``repro.serving.metrics/v4`` multi shape (per-model sections plus the
+    ``repro.serving.metrics/v5`` multi shape (per-model sections plus the
     shared pool's contention stats and the exposed/hidden paging-stall
     split) via :func:`~repro.serving.metrics.multi_summary`;
   * the tick loop is the async paging **software pipeline**: per tick,
@@ -53,6 +53,7 @@ Typical use::
 
 from __future__ import annotations
 
+import itertools
 import json
 import time
 from typing import Dict, List, Optional, Tuple
@@ -69,11 +70,23 @@ class MultiScheduler:
     ``pool`` (or ``shared_budget_bytes``, which constructs one) is the
     single device-bytes budget every tenant's cold pages contend for.
     Without either, tenants serve fully resident (no paging is attached).
-    """
+
+    ``token_budget`` is the continuous-batching budget shared across ALL
+    tenants: every tick one global plan deals it out in admission-key
+    order (decode-ready slots first, then prefill chunks), so a tracker
+    tenant's 10 ms request draws budget away from the assistant's long
+    prefill THIS tick.  ``preemptive`` / ``admission`` forward to every
+    tenant scheduler (mid-request slot handover and predicted-miss
+    refusal, see :class:`~repro.serving.sched.Scheduler`); the
+    submission-sequence counter is shared, so the global admission order
+    — and therefore every paging counter — is deterministic."""
 
     def __init__(self, *, pool: Optional[SharedPagePool] = None,
                  shared_budget_bytes: Optional[int] = None,
                  async_io: bool = True,
+                 token_budget: Optional[int] = None,
+                 preemptive: bool = False,
+                 admission: Optional[str] = None,
                  clock=time.perf_counter):
         if pool is not None and shared_budget_bytes is not None:
             raise ValueError("pass either pool= or shared_budget_bytes=, "
@@ -82,9 +95,16 @@ class MultiScheduler:
             pool = SharedPagePool(shared_budget_bytes)
         self.pool = pool
         self.async_io = bool(async_io)
+        if token_budget is not None and token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got "
+                             f"{token_budget}")
+        self.token_budget = token_budget
+        self.preemptive = bool(preemptive)
+        self.admission = admission
         self.clock = clock
         self.models: Dict[str, Scheduler] = {}
         self.ticks = 0
+        self._seq = itertools.count()      # one submission order, global
 
     @property
     def pass_log(self) -> List[str]:
@@ -126,8 +146,13 @@ class MultiScheduler:
                 f"tenants of a shared pool must attach through it")
         # construct the Scheduler first: it validates prefill_chunk, and a
         # failure here must not leave the engine half-joined to the pool
+        # (token_budget stays None per tenant — the GLOBAL plan below
+        # deals the shared budget out instead)
         sched = Scheduler(engine, prefill_chunk=prefill_chunk,
-                          async_io=self.async_io, clock=self.clock)
+                          async_io=self.async_io, clock=self.clock,
+                          preemptive=self.preemptive,
+                          admission=self.admission,
+                          seq_counter=self._seq)
         if self.pool is not None:
             from repro.core.placement import packed_sizes
             sizes = packed_sizes(engine.params)
@@ -157,9 +182,9 @@ class MultiScheduler:
     # -- the single admission loop -------------------------------------------
     def admission_order(self) -> List[Tuple[str, Request]]:
         """ALL tenants' waiting requests in one service order: priority
-        class first, then earliest absolute deadline (EDF), then arrival —
-        the same key each per-model scheduler uses, applied across
-        models."""
+        class first, then earliest absolute deadline (EDF), then the
+        shared submission sequence — the same key each per-model
+        scheduler uses, applied across models."""
         waiting = [(sched._admission_key(req), name, req)
                    for name, sched in self.models.items()
                    for req in sched.queue]
@@ -167,18 +192,80 @@ class MultiScheduler:
         return [(name, req) for _key, name, req in waiting]
 
     def _admit_global(self) -> None:
+        """One global admission pass: every tenant's queue AND preempted
+        pool in one key order; each candidate takes a free slot of its
+        own model, or (``preemptive``) evicts a strictly-lower-priority
+        occupant there.  Preempting here — before the tick's fences —
+        defers the victim's KV-drop flush to its tenant's fence, which
+        still lands before the usurper's first writeback."""
         for sched in self.models.values():
             sched._adopt_engine_queue()
-        for name, req in self.admission_order():
-            sched = self.models[name]
-            free = sched.engine.free_slots()
-            if not free:
-                continue            # this tenant is full; others may admit
-            # remove by identity: Request's dataclass __eq__ compares the
-            # ndarray prompt, so list.remove would raise on a uid tie
-            idx = next(i for i, r in enumerate(sched.queue) if r is req)
-            del sched.queue[idx]
-            sched.engine.assign(req, free[0])
+            if sched.admission is not None:
+                sched._admission_control()
+        while True:
+            cands = [(key, name, kind, obj)
+                     for name, sched in self.models.items()
+                     for key, kind, obj in sched._candidates()]
+            cands.sort(key=lambda t: t[0])
+            placed = False
+            for _key, name, kind, obj in cands:
+                sched = self.models[name]
+                free = sched.engine.free_slots()
+                if free:
+                    sched._place(kind, obj, free[0])
+                    placed = True
+                    break            # keys are static: rescan continues
+                if sched.preemptive:
+                    req = obj if kind == "queue" else obj.req
+                    slot = sched._preempt_for(req)
+                    if slot is not None:
+                        sched.preempted.append(sched.engine.preempt(slot))
+                        sched.metrics.record_preemption()
+                        sched._place(kind, obj, slot)
+                        placed = True
+                        break
+                # this tenant is full; later candidates may still admit
+            if not placed:
+                return
+
+    def _plan_global(self) -> None:
+        """Deal the shared ``token_budget`` across ALL tenants' live
+        slots in one admission-key order (decode-ready slots cost 1 off
+        the top, prefill chunks next) and hand each tenant its slice as
+        the tick plan its ``tick_begin``/``tick_compute`` consume."""
+        scheds = list(self.models.values())
+        if self.token_budget is None:
+            for sched in scheds:
+                sched._tick_plan = None
+                sched._tick_budget_tokens = None
+                sched._tick_budget_used = None
+            return
+        plans: Dict[int, Dict[int, int]] = {id(s): {} for s in scheds}
+        used: Dict[int, int] = {
+            id(s): sum(1 for r in s.engine.slot_req
+                       if r is not None and r.prefill_pos >= len(r.prompt))
+            for s in scheds}
+        remaining = self.token_budget - sum(used.values())
+        prefilling = [(sched, i, r)
+                      for sched in scheds
+                      for i, r in enumerate(sched.engine.slot_req)
+                      if r is not None and r.prefill_pos < len(r.prompt)]
+        prefilling.sort(key=lambda t: t[0]._admission_key(t[2]))
+        for sched, i, r in prefilling:
+            rem = len(r.prompt) - r.prefill_pos
+            if sched.engine._bucketed:
+                alloc = min(sched.prefill_chunk or rem, rem,
+                            max(remaining, 0))
+            else:
+                alloc = rem if remaining > 0 else 0
+            if alloc > 0:
+                plans[id(sched)][i] = int(alloc)
+                remaining -= alloc
+                used[id(sched)] += alloc
+        for sched in scheds:
+            sched._tick_plan = plans[id(sched)]
+            sched._tick_budget_tokens = self.token_budget
+            sched._tick_budget_used = used[id(sched)]
 
     # -- ticks ----------------------------------------------------------------
     @property
@@ -205,6 +292,8 @@ class MultiScheduler:
             fenced.append((name, sched, t0, params))
         for _name, sched, _t0, _params in fenced:
             sched._admit()                 # late engine.submit stragglers
+        self._plan_global()                # budget over the final slot set
+        for _name, sched, _t0, _params in fenced:
             sched.tick_begin()
         finished: Dict[str, List[Request]] = {}
         for name, sched, t0, params in fenced:
@@ -241,7 +330,7 @@ class MultiScheduler:
 
     # -- metrics / lifecycle --------------------------------------------------
     def summary(self) -> Dict:
-        """The ``repro.serving.metrics/v4`` multi-model document."""
+        """The ``repro.serving.metrics/v5`` multi-model document."""
         models = {name: sched.metrics.summary(
                       paging=sched.engine.paging_summary())
                   for name, sched in self.models.items()}

@@ -1,0 +1,497 @@
+"""Continuous batching: per-tick token budgets, mid-request preemption
+and admission control (the tentpole of this PR).
+
+Invariants under test:
+
+  * **budget plan math** (pure policy, no jax compute): decode-ready
+    slots cost one token off the top, the remainder is dealt to
+    mid-prefill slots in admission-key order capped at the chunk, an
+    exhausted budget holds the frontier, and exact-length families
+    (hybrid / moe) are all-or-nothing;
+  * **deterministic admission**: ties on (priority, deadline) break on
+    the monotonic submission sequence — never on dict/list order;
+  * **admission control**: with a seeded tick cost, a predicted-miss
+    request is rejected (never served, never recorded) or degraded to
+    the longest completion that still fits its deadline;
+  * **preempt/restore bit-exactness**: a request evicted mid-decode or
+    mid-prefill and later restored produces EXACTLY the tokens of an
+    unpreempted run — dense and vlm and ssm, private KV table and
+    shared pool, async and sync (greedy sampling; the engine RNG stream
+    makes stochastic sampling legitimately order-dependent);
+  * **counter stability**: preemption leaves no orphaned begun pass, no
+    leaked pool guard, and the weight/KV paging counters still equal
+    their static ``pass_counters`` / ``kv_pass_counters`` predictions;
+  * **random preemption points** (seeded sweep; the hypothesis twin
+    lives in tests/test_preemption_properties.py): tokens are invariant
+    to WHEN the urgent request lands.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.paging import (SharedPagePool, kv_pass_counters,
+                               pass_counters)
+from repro.core.placement import PlacementPlan, packed_sizes, plan_for_budget
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import freeze_for_serving
+from repro.serving import (MetricsRecorder, MultiScheduler, Request,
+                           Scheduler, ServingEngine, validate)
+
+CFG = ModelConfig(name="tinycb", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16, remat=False)
+
+
+@pytest.fixture(scope="module")
+def packed():
+    return freeze_for_serving(tfm.init_params(CFG, jax.random.PRNGKey(0)),
+                              bits=8)
+
+
+def _half_paged_plan(packed):
+    sizes = packed_sizes(packed)
+    plan = plan_for_budget(sizes, sum(sizes.values()) // 2)
+    assert plan.paged_bytes(sizes) > 0
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# fast lane: pure policy math on a slot-state stub (no jit, no compute)
+# ---------------------------------------------------------------------------
+
+class _SlotStub:
+    """Just enough engine surface for the policy-only scheduler paths:
+    slot occupancy, the bucketing flag, and the submit-time fit check."""
+
+    def __init__(self, slot_req, bucketed=True):
+        self.slot_req = list(slot_req)
+        self._bucketed = bucketed
+        self.waiting = []
+
+    def _check_fits(self, req):
+        pass
+
+    def free_slots(self):
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+
+def _req(uid, n_prompt, *, pos=0, prio=0, deadline=None, arrival=0.0,
+         seq=None, max_new=4):
+    r = Request(uid=uid, prompt=np.arange(n_prompt, dtype=np.int32),
+                max_new_tokens=max_new)
+    r.prefill_pos = pos
+    r.priority = prio
+    r.deadline_ms = deadline
+    r.arrival_s = arrival
+    r.seq = seq if seq is not None else uid
+    return r
+
+
+def test_budget_plan_decode_first_then_prefill_by_key():
+    decoding = _req(0, 4, pos=4)                        # decode-ready
+    low = _req(1, 40, pos=0, prio=0, seq=5)
+    high = _req(2, 40, pos=8, prio=2, seq=6)
+    s = Scheduler(_SlotStub([decoding, low, high, None]), prefill_chunk=16,
+                  token_budget=20, clock=lambda: 0.0)
+    plan = s._plan_tick()
+    # decode costs 1 off the top; the high-priority prefill takes a full
+    # chunk; the low-priority one gets the 3 tokens left
+    assert plan == {2: 16, 1: 3}
+    assert s._tick_budget_tokens == 20
+    assert s._tick_budget_used == 20
+
+
+def test_budget_plan_exhaustion_holds_frontier_never_starves_decode():
+    decoding = _req(0, 4, pos=4)
+    prefilling = _req(1, 32, pos=0)
+    s = Scheduler(_SlotStub([decoding, prefilling]), prefill_chunk=8,
+                  token_budget=1, clock=lambda: 0.0)
+    plan = s._plan_tick()
+    # the whole budget funds the decode step; the prefill slot is simply
+    # absent from the plan (frontier held, resumed when budget returns)
+    assert plan == {}
+    assert s._tick_budget_used == 1
+
+
+def test_budget_plan_exact_length_families_all_or_nothing():
+    a = _req(0, 40, pos=0, prio=1, seq=0)
+    b = _req(1, 24, pos=0, prio=0, seq=1)
+    s = Scheduler(_SlotStub([a, b], bucketed=False), token_budget=8,
+                  clock=lambda: 0.0)
+    plan = s._plan_tick()
+    # hybrid/moe prompts cannot be sliced: the scheduled slot absorbs its
+    # whole prompt (documented overrun), exhausting the budget for b
+    assert plan == {0: 40}
+    assert s._tick_budget_used == 40
+
+
+def test_admission_tie_break_is_submission_sequence():
+    s = Scheduler(_SlotStub([None]), clock=lambda: 0.0)
+    s.add_stream("xr", priority=1, deadline_ms=10.0)
+    # identical (priority, absolute deadline) — only seq can order them;
+    # uids are deliberately descending so a uid-ordered sort would differ
+    for uid in (9, 5, 7):
+        s.submit(Request(uid=uid, prompt=np.arange(3, dtype=np.int32)),
+                 stream="xr")
+    assert [r.uid for r in s.admission_order()] == [9, 5, 7]
+    assert [r.seq for r in s.admission_order()] == [0, 1, 2]
+
+
+def test_admission_reject_never_serves_predicted_miss():
+    s = Scheduler(_SlotStub([None]), prefill_chunk=8, admission="reject",
+                  est_tick_s=1e-3, clock=lambda: 0.0)
+    s.add_stream("xr", deadline_ms=10.0)
+    # 16-token prompt => 2 prefill ticks; +19 decode ticks = 21 needed,
+    # but only floor(10ms / 1ms) = 10 ticks of slack: certain miss
+    doomed = Request(uid=0, prompt=np.arange(16, dtype=np.int32),
+                     max_new_tokens=20)
+    fits = Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                   max_new_tokens=2)
+    s.submit(doomed, stream="xr")
+    s.submit(fits, stream="xr")
+    s._admission_control()
+    assert [r.uid for r in s.queue] == [1]
+    assert s.rejected == [doomed] and doomed.rejected
+    assert doomed.finish_s is not None
+    assert s.metrics.rejected == 1
+    assert s.metrics.records == []         # refused, never "served"
+
+
+def test_admission_degrade_cuts_to_longest_feasible_completion():
+    s = Scheduler(_SlotStub([None]), prefill_chunk=8, admission="degrade",
+                  est_tick_s=1e-3, clock=lambda: 0.0)
+    s.add_stream("xr", deadline_ms=10.0)
+    req = Request(uid=0, prompt=np.arange(16, dtype=np.int32),
+                  max_new_tokens=20)
+    s.submit(req, stream="xr")
+    s._admission_control()
+    # slack 10 ticks - 2 prefill ticks + 1 = 9 tokens still fit
+    assert s.queue == [req]
+    assert req.max_new_tokens == 9 and req.degraded
+    assert s.metrics.degraded == 1
+    # re-running the controller must not double-count the degrade
+    s._admission_control()
+    assert s.metrics.degraded == 1
+
+
+def test_est_tick_s_composes_compute_and_exposed_stall():
+    s = Scheduler(_SlotStub([None]), clock=lambda: 0.0)
+    assert s.est_tick_s() is None          # no data, no seed: optimistic
+    s._compute_ema = 2e-3
+    s._swap_ema = 1e-3                     # fully hidden under compute
+    assert s.est_tick_s() == pytest.approx(2e-3)
+    s._swap_ema = 5e-3                     # 3 ms of the stream exposed
+    assert s.est_tick_s() == pytest.approx(5e-3)
+
+
+# ---------------------------------------------------------------------------
+# preempt/restore bit-exactness (real engines, greedy sampling)
+# ---------------------------------------------------------------------------
+
+def _mk_reqs(prompts, max_new):
+    return [Request(uid=uid, prompt=np.asarray(p, np.int32),
+                    max_new_tokens=mn)
+            for uid, (p, mn) in enumerate(zip(prompts, max_new))]
+
+
+def _reference(cfg, packed, prompts, max_new, *, slots=2, max_len=64,
+               prefill_chunk=8):
+    """Unpreempted tokens: same traffic, plain scheduler, fresh engine."""
+    eng = ServingEngine(cfg, packed, batch_slots=slots, max_len=max_len)
+    s = Scheduler(eng, prefill_chunk=prefill_chunk)
+    for r in _mk_reqs(prompts, max_new):
+        s.submit(r)
+    return {r.uid: r.generated for r in s.run_until_done()}
+
+
+def _serve_with_preempt(cfg, packed, prompts, max_new, *, warm_ticks,
+                        urgent_uid, slots=1, max_len=64, prefill_chunk=8,
+                        async_io=True, plan=None, kv=False, pool=None,
+                        kv_block=4):
+    """Serve ``prompts[:-1]`` first, inject ``prompts[urgent_uid]`` on a
+    priority-2 stream after ``warm_ticks``, and drain."""
+    eng = ServingEngine(cfg, packed, batch_slots=slots, max_len=max_len,
+                        plan=plan if plan is not None
+                        else PlacementPlan.uniform())
+    if plan is not None and plan.paged_bytes(packed_sizes(packed)) > 0:
+        eng.attach_paging(pool=pool, name="m")
+    if kv:
+        eng.attach_kv_paging(kv_block, pool=pool, name="m/kv")
+    s = Scheduler(eng, prefill_chunk=prefill_chunk, async_io=async_io,
+                  preemptive=True)
+    s.add_stream("urgent", priority=2)
+    reqs = _mk_reqs(prompts, max_new)
+    for r in reqs:
+        if r.uid != urgent_uid:
+            s.submit(r)
+    done = []
+    for _ in range(warm_ticks):
+        done += s.tick()
+    s.submit(reqs[urgent_uid], stream="urgent")
+    done += s.run_until_done()
+    return {r.uid: r.generated for r in done}, s, eng
+
+
+def _close(eng):
+    if eng.pager is not None:
+        eng.pager.close()
+    if eng.kv_table is not None:
+        eng.kv_table.close()
+
+
+@pytest.mark.parametrize("async_io", [True, False])
+def test_preempt_mid_decode_bit_exact_dense(rng, packed, async_io):
+    prompts = [rng.integers(0, 256, 6).astype(np.int32),
+               rng.integers(0, 256, 5).astype(np.int32)]
+    ref = _reference(CFG, packed, prompts, [10, 3], slots=1)
+    got, s, eng = _serve_with_preempt(CFG, packed, prompts, [10, 3],
+                                      warm_ticks=4, urgent_uid=1,
+                                      async_io=async_io)
+    assert got == ref
+    # the single slot was mid-decode: the victim checkpointed exactly once
+    # and resumed exactly once, and the request carries the event
+    assert eng.preempt_count == eng.restore_count == 1
+    victim = next(r for r in s.finished if r.uid == 0)
+    assert victim.preemptions == 1
+    assert s.metrics.preemptions == s.metrics.restores == 1
+    doc = validate(s.metrics.summary())
+    assert doc["scheduler"]["preemptions"] == 1
+    assert doc["scheduler"]["restores"] == 1
+
+
+def test_preempt_mid_prefill_resumes_at_chunk_frontier(rng, packed):
+    # 32-token prompt at chunk 4: warm_ticks=3 preempts at frontier 12,
+    # long before the first generated token exists
+    prompts = [rng.integers(0, 256, 32).astype(np.int32),
+               rng.integers(0, 256, 4).astype(np.int32)]
+    ref = _reference(CFG, packed, prompts, [4, 2], slots=1,
+                     prefill_chunk=4)
+    got, s, eng = _serve_with_preempt(CFG, packed, prompts, [4, 2],
+                                      warm_ticks=3, urgent_uid=1,
+                                      prefill_chunk=4)
+    assert got == ref
+    assert eng.preempt_count == eng.restore_count == 1
+    victim = next(r for r in s.finished if r.uid == 0)
+    assert victim.preemptions == 1 and not victim.truncated
+
+
+def test_preempted_victim_outranks_later_best_effort(rng, packed):
+    """The checkpoint re-enters the unified admission pool under its own
+    key: an urgent victim must win the slot back ahead of best-effort
+    requests that arrived while it was parked."""
+    eng = ServingEngine(CFG, packed, batch_slots=1, max_len=64)
+    s = Scheduler(eng, prefill_chunk=8, preemptive=True)
+    s.add_stream("mid", priority=1)
+    s.add_stream("top", priority=2)
+    p = rng.integers(0, 256, 4).astype(np.int32)
+    victim = Request(uid=0, prompt=p, max_new_tokens=8)
+    s.submit(victim, stream="mid")
+    for _ in range(3):
+        s.tick()
+    s.submit(Request(uid=1, prompt=p, max_new_tokens=2), stream="top")
+    s.submit(Request(uid=2, prompt=p, max_new_tokens=2))  # best effort
+    done = s.run_until_done()
+    # the preempted priority-1 victim resumes before the best-effort one
+    assert [r.uid for r in done] == [1, 0, 2]
+    assert victim.preemptions == 1
+
+
+@pytest.mark.slow
+def test_preempt_bit_exact_vlm(rng):
+    cfg = get_config("llava-next-34b").smoke()
+    packed = freeze_for_serving(tfm.init_params(cfg, jax.random.PRNGKey(2)),
+                                bits=8)
+    prompts = [rng.integers(0, cfg.vocab_size, 7).astype(np.int32),
+               rng.integers(0, cfg.vocab_size, 5).astype(np.int32)]
+    ref = _reference(cfg, packed, prompts, [8, 2], slots=1)
+    got, _s, eng = _serve_with_preempt(cfg, packed, prompts, [8, 2],
+                                       warm_ticks=4, urgent_uid=1)
+    assert got == ref
+    assert eng.preempt_count == eng.restore_count == 1
+
+
+@pytest.mark.slow
+def test_preempt_bit_exact_ssm_state_checkpoint(rng):
+    """SSM victims carry recurrent state, not KV rows: the checkpoint
+    must round-trip h/conv exactly through preempt -> restore."""
+    cfg = get_config("falcon-mamba-7b").smoke()
+    packed = freeze_for_serving(tfm.init_params(cfg, jax.random.PRNGKey(3)),
+                                bits=8)
+    prompts = [rng.integers(0, cfg.vocab_size, 9).astype(np.int32),
+               rng.integers(0, cfg.vocab_size, 4).astype(np.int32)]
+    ref = _reference(cfg, packed, prompts, [8, 2], slots=1)
+    got, _s, eng = _serve_with_preempt(cfg, packed, prompts, [8, 2],
+                                       warm_ticks=4, urgent_uid=1)
+    assert got == ref
+    assert eng.preempt_count == eng.restore_count == 1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("pooled", [True, False])
+def test_preempt_kv_paged_tokens_and_counter_replay(rng, packed, pooled):
+    """Preemption drops the victim's pooled KV blocks and the restore
+    re-writes them back through fresh sync events — so the event-log
+    replay (``kv_pass_counters``) must still predict every counter, and
+    the weight stream must stay on its ticks x pass_counters line."""
+    plan = _half_paged_plan(packed)
+    prompts = [rng.integers(0, 256, 10).astype(np.int32),
+               rng.integers(0, 256, 5).astype(np.int32)]
+    ref = _reference(CFG, packed, prompts, [8, 2], slots=1)
+    pool = SharedPagePool(1 << 30) if pooled else None
+    got, s, eng = _serve_with_preempt(CFG, packed, prompts, [8, 2],
+                                      warm_ticks=5, urgent_uid=1,
+                                      plan=plan, kv=True, pool=pool)
+    assert got == ref
+    assert eng.preempt_count == eng.restore_count == 1
+    # preempt_drops counts preemption EVENTS; dropped counts pooled
+    # blocks actually invalidated (private tables never pool, so it
+    # stays 0 there)
+    assert eng.kv_table.preempt_drops >= 1
+    if pooled:
+        pred = kv_pass_counters(
+            {"m": [p.nbytes for p in eng.pager.pages]},
+            pool.budget_bytes, pool.events)
+        summ = pool.summary()
+        for m in ("m", "m/kv"):
+            for k in ("swaps", "misses", "pool_hits", "evicted"):
+                assert summ["models"][m][k] == pred[m][k], (m, k)
+        assert not pool._active_fetch      # no leaked eviction guard
+    else:
+        pred = kv_pass_counters({}, None, eng.kv_table.events)
+        assert pred["m/kv"]["swaps"] == eng.kv_table.swap_count
+        # private pager: every pass re-streams every page, so the weight
+        # counters sit on the static per-tick line (a pooled run retains
+        # pages across passes — its prediction is the event replay above)
+        per_pass = pass_counters(len(eng.pager.pages),
+                                 eng.page_resident_slots)
+        assert eng.swap_count == s.ticks * per_pass["swaps"]
+        assert eng.miss_count == s.ticks * per_pass["misses"]
+    doc = validate(s.metrics.summary(paging=eng.paging_summary()))
+    assert doc["paging"]["kv_preempt_drops"] == eng.kv_table.preempt_drops
+    if pooled:
+        pool.close()
+    else:
+        _close(eng)
+
+
+def test_preempt_counter_stability_no_orphaned_pass(rng, packed):
+    """A preemptive paged run must drain clean: no begun-but-unfenced
+    weight pass, every checkpoint restored, every slot empty."""
+    plan = _half_paged_plan(packed)
+    prompts = [rng.integers(0, 256, 6).astype(np.int32),
+               rng.integers(0, 256, 4).astype(np.int32)]
+    _got, s, eng = _serve_with_preempt(CFG, packed, prompts, [8, 2],
+                                       warm_ticks=4, urgent_uid=1,
+                                       plan=plan)
+    assert eng._inflight_pass is None
+    assert s.preempted == [] and s.queue == []
+    assert all(r is None for r in eng.slot_req)
+    assert eng.preempt_count == eng.restore_count
+    per_pass = pass_counters(len(eng.pager.pages), eng.page_resident_slots)
+    assert eng.swap_count == s.ticks * per_pass["swaps"]
+    eng.pager.close()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_preemption_point_bit_exact(packed, seed):
+    """Tokens must be invariant to WHEN the urgent request lands — the
+    seeded sweep over (prompt lengths, decode lengths, injection tick)
+    that the hypothesis twin widens."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, 256, int(rng.integers(2, 28)))
+               .astype(np.int32) for _ in range(4)]
+    max_new = [int(rng.integers(2, 8)) for _ in range(4)]
+    warm = int(rng.integers(0, 10))
+    ref = _reference(CFG, packed, prompts, max_new, slots=2,
+                     prefill_chunk=4)
+    got, s, eng = _serve_with_preempt(CFG, packed, prompts, max_new,
+                                      warm_ticks=warm, urgent_uid=3,
+                                      slots=2, prefill_chunk=4)
+    assert got == ref, f"seed {seed} warm {warm}"
+    assert eng.preempt_count == eng.restore_count
+    assert s.metrics.preemptions == s.metrics.restores
+
+
+# ---------------------------------------------------------------------------
+# continuous batching end-to-end (budget + preemption + admission live)
+# ---------------------------------------------------------------------------
+
+def test_budgeted_serving_bit_exact_and_utilization(rng, packed):
+    prompts = [rng.integers(0, 256, n).astype(np.int32)
+               for n in (20, 12, 5)]
+    ref = _reference(CFG, packed, prompts, [4] * 3, slots=2,
+                     prefill_chunk=4)
+    eng = ServingEngine(CFG, packed, batch_slots=2, max_len=64)
+    s = Scheduler(eng, prefill_chunk=4, token_budget=6)
+    for r in _mk_reqs(prompts, [4] * 3):
+        s.submit(r)
+    got = {r.uid: r.generated for r in s.run_until_done()}
+    assert got == ref
+    doc = validate(s.metrics.summary())
+    sched = doc["scheduler"]
+    assert sched["budget_tokens_per_tick"] == 6
+    assert 0.0 < sched["budget_utilization"] <= 1.0
+    # the budget genuinely paced prefill: with 2 slots at chunk 4 plus
+    # decodes, an unbudgeted tick would spend up to 8+ tokens
+    assert max(s.metrics.tick_budget_used) <= 6
+
+
+def test_multischeduler_global_budget_and_preemption(rng, packed):
+    """Two tenants under ONE token budget and preemptive admission:
+    tokens bit-exact vs solo, counters aggregated into the v5 totals."""
+    prompts = {"a": [rng.integers(0, 256, n).astype(np.int32)
+                     for n in (14, 6)],
+               "b": [rng.integers(0, 256, n).astype(np.int32)
+                     for n in (10, 4)]}
+    solo = {name: _reference(CFG, packed, ps, [5, 2], slots=1,
+                             prefill_chunk=4)
+            for name, ps in prompts.items()}
+    ms = MultiScheduler(token_budget=8, preemptive=True)
+    for name in ("a", "b"):
+        eng = ServingEngine(CFG, packed, batch_slots=1, max_len=64)
+        ms.add_model(name, eng, prefill_chunk=4)
+        ms.add_stream(name, "urgent", priority=2)
+    for name, ps in prompts.items():
+        reqs = _mk_reqs(ps, [5, 2])
+        ms.submit(name, reqs[0])
+    done = {}
+    for _ in range(4):
+        for n, rs in ms.tick().items():
+            done.setdefault(n, []).extend(rs)
+    for name, ps in prompts.items():
+        ms.submit(name, _mk_reqs(ps, [5, 2])[1], stream="urgent")
+    for n, rs in ms.run_until_done().items():
+        done.setdefault(n, []).extend(rs)
+    for name in ("a", "b"):
+        got = {r.uid: r.generated for r in done[name]}
+        assert got == solo[name], name
+    doc = validate(ms.summary())
+    assert doc["totals"]["preemptions"] >= 1
+    assert doc["totals"]["preemptions"] == doc["totals"]["restores"]
+    for name in ("a", "b"):
+        assert (doc["models"][name]["scheduler"]["budget_tokens_per_tick"]
+                == 8)
+    ms.close()
+
+
+def test_degraded_request_truncates_generation_not_tokens(rng, packed):
+    """A degraded request serves its shortened completion and its tokens
+    are a PREFIX of the undegraded generation (same greedy path)."""
+    prompts = [rng.integers(0, 256, 6).astype(np.int32)]
+    ref = _reference(CFG, packed, prompts, [8], slots=1)
+    eng = ServingEngine(CFG, packed, batch_slots=1, max_len=64)
+    clock = iter(np.arange(0.0, 10.0, 1e-3))
+    s = Scheduler(eng, prefill_chunk=8, admission="degrade",
+                  est_tick_s=1e-3, clock=lambda: next(clock))
+    s.add_stream("xr", deadline_ms=4.0)
+    s.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=8),
+             stream="xr")
+    done = s.run_until_done()
+    assert len(done) == 1 and done[0].degraded
+    n = len(done[0].generated)
+    assert 1 <= n < 8
+    assert done[0].generated == ref[0][:n]
+    assert s.metrics.degraded == 1

@@ -1,0 +1,160 @@
+"""Property tests over the continuous-batching policy algebra
+(hypothesis; skipped, not failed, when the optional [test] extra is
+absent — the seeded twins in tests/test_continuous_batching.py always
+run).
+
+Pure policy level — a slot-state stub stands in for the engine, so
+thousands of random schedules cost no jit.  Properties:
+
+  * the budgeted tick plan never over-allocates (bucketed families),
+    never starves decode, respects the chunk cap, and deals prefill
+    budget in admission-key order;
+  * preemptive admission converges (the handover chain terminates) to a
+    state where no waiting candidate has STRICTLY higher priority than
+    any occupant, preserving every request exactly once across
+    {queue, preempted, slots};
+  * random preemption points never corrupt the bookkeeping:
+    preempt/restore events balance and no request is lost or duplicated.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import Request, Scheduler
+from repro.serving.engine import SlotCheckpoint
+
+
+class _SlotStub:
+    """Policy-only engine: slot occupancy plus assign/preempt/restore
+    bookkeeping, no compute."""
+
+    def __init__(self, n_slots, bucketed=True):
+        self.slot_req = [None] * n_slots
+        self._bucketed = bucketed
+        self.waiting = []
+        self.preempt_count = 0
+        self.restore_count = 0
+
+    def _check_fits(self, req):
+        pass
+
+    def free_slots(self):
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def assign(self, req, slot):
+        assert self.slot_req[slot] is None
+        self.slot_req[slot] = req
+
+    def preempt(self, slot):
+        req = self.slot_req[slot]
+        assert req is not None
+        self.slot_req[slot] = None
+        self.preempt_count += 1
+        req.preemptions += 1
+        return SlotCheckpoint(req=req, slot_pos=0, valid=0)
+
+    def restore(self, ckpt, slot):
+        assert self.slot_req[slot] is None
+        self.slot_req[slot] = ckpt.req
+        self.restore_count += 1
+
+
+def _req(uid, n_prompt, *, pos=0, prio=0, seq=None, max_new=4):
+    r = Request(uid=uid, prompt=np.arange(max(n_prompt, 1), dtype=np.int32),
+                max_new_tokens=max_new)
+    r.prefill_pos = min(pos, n_prompt)
+    r.priority = prio
+    r.arrival_s = 0.0
+    r.seq = seq if seq is not None else uid
+    return r
+
+
+slot_states = st.lists(
+    st.one_of(st.none(),
+              st.tuples(st.integers(1, 64),          # prompt length
+                        st.integers(0, 64),          # prefill_pos
+                        st.integers(0, 3))),         # priority
+    min_size=1, max_size=6)
+
+
+@given(slots=slot_states,
+       budget=st.integers(1, 64),
+       chunk=st.sampled_from([1, 2, 4, 8, 16]))
+@settings(max_examples=200, deadline=None)
+def test_budget_plan_invariants(slots, budget, chunk):
+    eng = _SlotStub(len(slots))
+    for i, spec in enumerate(slots):
+        if spec is not None:
+            n, pos, prio = spec
+            eng.slot_req[i] = _req(i, n, pos=pos, prio=prio)
+    s = Scheduler(eng, prefill_chunk=chunk, token_budget=budget,
+                  clock=lambda: 0.0)
+    plan = s._plan_tick()
+    occ = [(i, r) for i, r in enumerate(eng.slot_req) if r is not None]
+    decoding = [i for i, r in occ if r.prefill_pos >= len(r.prompt)]
+    prefilling = [(i, r) for i, r in occ if r.prefill_pos < len(r.prompt)]
+    # decode is always funded, never planned (plan covers prefill only)
+    assert all(i not in plan for i in decoding)
+    # every alloc targets a mid-prefill slot, within chunk and remainder
+    for i, alloc in plan.items():
+        r = eng.slot_req[i]
+        assert r is not None and r.prefill_pos < len(r.prompt)
+        assert 1 <= alloc <= s.prefill_chunk
+        assert alloc <= len(r.prompt) - r.prefill_pos
+    # bucketed plans never overspend the budget (decode is funded even
+    # when decode-ready slots alone exceed it — starving decode would
+    # stall every live stream)
+    assert s._tick_budget_used <= max(budget, len(decoding))
+    if len(decoding) >= budget:
+        assert plan == {}                   # nothing left for prefill
+    assert s._tick_budget_used == len(decoding) + sum(plan.values())
+    # budget is dealt in admission-key order: once a slot got less than
+    # its full ask, every worse-ranked slot got nothing
+    order = sorted(prefilling, key=lambda t: s._admission_key(t[1]))
+    starved = False
+    for i, r in order:
+        ask = min(s.prefill_chunk, len(r.prompt) - r.prefill_pos)
+        got = plan.get(i, 0)
+        if starved:
+            assert got == 0
+        elif got < ask:
+            starved = True
+
+
+@given(prios=st.lists(st.integers(0, 3), min_size=1, max_size=12),
+       n_slots=st.integers(1, 4),
+       preseed=st.lists(st.integers(0, 3), min_size=0, max_size=4))
+@settings(max_examples=200, deadline=None)
+def test_preemptive_admission_converges_and_conserves(prios, n_slots,
+                                                      preseed):
+    """After _admit: no waiting candidate strictly outranks (by priority
+    class) any occupant, every request survives exactly once, and the
+    preempt/restore ledger balances."""
+    eng = _SlotStub(n_slots)
+    s = Scheduler(eng, preemptive=True, clock=lambda: 0.0)
+    uid = 0
+    for prio in preseed[:n_slots]:          # some slots already occupied
+        eng.slot_req[uid % n_slots] = _req(uid, 4, pos=1, prio=prio)
+        uid += 1
+    all_uids = {r.uid for r in eng.slot_req if r is not None}
+    for prio in prios:
+        r = _req(uid, 4, prio=prio)
+        s.submit(r)
+        all_uids.add(uid)
+        uid += 1
+    s._admit()
+    occupants = [r for r in eng.slot_req if r is not None]
+    waiting = [r for r in s.queue] + [c.req for c in s.preempted]
+    if occupants and waiting:
+        assert (max((r.priority or 0) for r in waiting)
+                <= min((r.priority or 0) for r in occupants))
+    # conservation: every request exactly once across the three places
+    seen = [r.uid for r in occupants] + [r.uid for r in waiting]
+    assert sorted(seen) == sorted(all_uids)
+    assert eng.preempt_count == len(s.preempted) + eng.restore_count
+    # slots are full whenever anyone is waiting
+    if waiting:
+        assert not eng.free_slots()

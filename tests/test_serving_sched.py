@@ -451,10 +451,11 @@ def test_metrics_schema_and_deadlines():
                                   n_pages=3,
                                   kv_swaps=4, kv_pool_hits=2,
                                   kv_writebacks=3, kv_dropped=0,
+                                  kv_preempt_drops=0,
                                   kv_exposed_s=0.0002, kv_hidden_s=0.001,
                                   kv_block_rows=16))
     validate(doc)
-    assert doc["schema"] == "repro.serving.metrics/v4"
+    assert doc["schema"] == "repro.serving.metrics/v5"
     assert doc["deadlines"] == dict(with_deadline=2, missed=1,
                                     miss_rate=0.5, truncated=0)
     assert doc["requests"]["count"] == 3
