@@ -47,12 +47,19 @@ preemption.  The virtual clock advances a fixed ``--tick-ms`` per tick
 (plus 1 µs per read, keeping intra-tick stamps ordered), so the gate
 measures SCHEDULING — not the host machine.
 
-Emits the ``repro.serving.metrics/v5`` multi document (default
+Emits the ``repro.serving.metrics/v6`` multi document (default
 ``BENCH_serving.json``; the single-model summary rides along under
 ``single_model``, the deadline gate under ``xr_gate``) — tok/s, p99
 tick latency, TTFT, deadline-miss rate, exposed/hidden paging stalls,
 shared-pool contention, preemption/admission counters — the
 bench-trajectory artefact for serving PRs.
+
+``--trace-json PATH`` additionally records the whole bench — the solo
+leg, both tenants, and the continuous XR-gate leg — as one Chrome Trace
+Event JSON (per-tenant fence/admit/begin/compute spans, per-page I/O
+spans, preempt/restore/reject instants, and the predicted-vs-measured
+stall overlay); a disabled-``Tracer`` micro-gate holds the untraced
+hot-path hook under 5 us/call either way.
 
 Run:  PYTHONPATH=src python benchmarks/serving_load.py --smoke
 """
@@ -71,7 +78,8 @@ from repro.core.placement import packed_sizes, plan_for_budget
 from repro.models import transformer as tfm
 from repro.parallel.sharding import freeze_for_serving
 from repro.serving import (MultiScheduler, Request, Scheduler,
-                           ServingEngine, validate)
+                           ServingEngine, Stopwatch, Tracer, validate)
+from repro.serving.trace import validate as validate_trace
 
 STREAMS = (
     ("hand_tracking", dict(priority=2, deadline_ms=15.0)),
@@ -104,7 +112,7 @@ def _tenant_reqs(cfg, args, salt):
     return out
 
 
-def _bench_multi(args):
+def _bench_multi(args, tracer=None):
     """Two tenants, one MultiScheduler, one SharedPagePool budget."""
     tenants = {args.arch: _build(args.arch, args.smoke,
                                  args.budget_frac, seed=0)}
@@ -115,7 +123,7 @@ def _bench_multi(args):
                for _c, packed, plan in tenants.values())
     budget = max(int(cold * args.shared_budget_frac), 1)
     ms = MultiScheduler(pool=SharedPagePool(budget) if cold else None,
-                        async_io=args.async_io)
+                        async_io=args.async_io, tracer=tracer)
     for name, (cfg, packed, plan) in tenants.items():
         eng = ServingEngine(cfg, packed, batch_slots=args.slots,
                             max_len=args.max_len, plan=plan,
@@ -226,7 +234,7 @@ def _xr_traffic(cfg, args):
     return sorted(events, key=lambda e: (e[0], e[2].uid))
 
 
-def _run_xr(cfg, packed, plan, args, continuous):
+def _run_xr(cfg, packed, plan, args, continuous, tracer=None):
     """Serve the XR trace under one scheduling policy on the virtual
     clock.  ``continuous=False`` is the PR 5 run-to-completion baseline;
     ``continuous=True`` turns on the per-tick token budget, preemption
@@ -245,7 +253,10 @@ def _run_xr(cfg, packed, plan, args, continuous):
                       # (measured EMAs would mix the engine's REAL stall
                       # seconds into virtual-clock deadline math and
                       # reject nondeterministically under host load)
-                      est_tick_s=args.tick_ms / 1e3 if continuous else None)
+                      est_tick_s=args.tick_ms / 1e3 if continuous else None,
+                      # span timestamps stay on the tracer's wall clock:
+                      # the virtual clock only drives deadline math
+                      tracer=tracer, trace_track="xr")
     for name, kw in STREAMS:
         sched.add_stream(name, **kw)
     arrivals = deque(_xr_traffic(cfg, args))
@@ -275,15 +286,17 @@ def _run_xr(cfg, packed, plan, args, continuous):
     return toks, summary, assist_tok_s, counters_ok
 
 
-def _bench_xr_gate(cfg, packed, plan, args):
+def _bench_xr_gate(cfg, packed, plan, args, tracer=None):
     """The headline acceptance gate: continuous batching makes the
     tracker deadlines real (miss_rate <= 0.05) without costing the
     assistant more than 10% throughput, changing a single token, or
     bending the paging counters off their static prediction."""
     base_toks, base, base_assist, base_ok = _run_xr(
         cfg, packed, plan, args, continuous=False)
+    # only the continuous leg is traced: it is the run with preempt /
+    # restore / reject traffic worth looking at on a timeline
     cont_toks, cont, cont_assist, cont_ok = _run_xr(
-        cfg, packed, plan, args, continuous=True)
+        cfg, packed, plan, args, continuous=True, tracer=tracer)
     trackers = ("hand_tracking", "gaze")
     miss = max(cont["streams"][s]["miss_rate"] for s in trackers
                if s in cont["streams"])
@@ -357,6 +370,11 @@ def main(argv=None):
     io.add_argument("--sync-io", dest="async_io", action="store_false",
                     help="blocking stream-then-step ticks (the overlap "
                          "baseline CI compares against)")
+    ap.add_argument("--trace-json", default=None,
+                    help="record the whole bench (solo leg, tenants, "
+                         "continuous XR-gate leg) as ONE Chrome Trace "
+                         "Event JSON at this path; open in "
+                         "chrome://tracing or ui.perfetto.dev")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -367,14 +385,21 @@ def main(argv=None):
     budget = int(sum(sizes.values()) * args.budget_frac)
     print(plan.summary(sizes))
 
+    tracer = Tracer() if args.trace_json else None
     eng = ServingEngine(cfg, packed, batch_slots=args.slots,
                         max_len=args.max_len, plan=plan, seed=args.seed)
     if plan.paged_bytes(sizes) > 0:
         eng.attach_paging()
     if args.kv_paged:
         eng.attach_kv_paging(args.kv_block)
+    # the solo leg runs under the SAME continuous-batching token budget
+    # as the XR gate — without it the wall-clock deadline numbers here
+    # are run-to-completion artifacts (miss_rate 1.0, TTFTs dominated by
+    # jit compile) that read like regressions next to the gate's
     sched = Scheduler(eng, prefill_chunk=args.prefill_chunk,
-                      async_io=args.async_io)
+                      async_io=args.async_io,
+                      token_budget=args.token_budget,
+                      tracer=tracer, trace_track=f"solo:{args.arch}")
     for name, kw in STREAMS:
         sched.add_stream(name, **kw)
 
@@ -383,7 +408,8 @@ def main(argv=None):
         sched.submit(req, stream=names[req.uid % len(names)])
 
     done = sched.run_until_done()
-    summary = validate(sched.metrics.summary(paging=eng.paging_summary()))
+    summary = validate(sched.metrics.summary(paging=eng.paging_summary(),
+                                             trace=sched.trace_summary()))
     if args.async_io and eng.pager is not None:
         # the overlapped pipeline must actually hide stream time behind
         # compute (the first tick's demand fence is the only fully
@@ -402,8 +428,11 @@ def main(argv=None):
                                 seed=args.seed)
         if plan.paged_bytes(sizes) > 0:
             ref_eng.attach_paging()
+        # same token budget as the paged run so the schedules line up
+        # tick for tick, not just token for token
         ref_sched = Scheduler(ref_eng, prefill_chunk=args.prefill_chunk,
-                              async_io=args.async_io)
+                              async_io=args.async_io,
+                              token_budget=args.token_budget)
         for name, kw in STREAMS:
             ref_sched.add_stream(name, **kw)
         for req in _tenant_reqs(cfg, args, 0):
@@ -440,10 +469,29 @@ def main(argv=None):
     if eng.kv_table is not None:
         eng.kv_table.close()
 
-    multi_doc, multi_cfg = _bench_multi(args)
+    # disabled-tracer overhead gate: the tracer= hook must cost nothing
+    # when tracing is off — time the enabled=False no-op fast path the
+    # hot tick takes on every untraced run and hold it under 5 us/call
+    off = Tracer(enabled=False)
+    reps = 10_000
+    with Stopwatch() as sw:
+        for i in range(reps):
+            with off.span("tick", track="bench", i=i):
+                pass
+            off.instant("mark", track="bench")
+    tracer_disabled_us = sw.elapsed_s / (2 * reps) * 1e6
+    assert tracer_disabled_us < 5.0, \
+        f"disabled tracer costs {tracer_disabled_us:.2f} us/call on the " \
+        f"tick path (no-op budget is 5 us)"
+    assert off.event_count == 0, "disabled tracer recorded events"
+    tick_overhead = dict(tick_overhead or {},
+                         tracer_disabled_us=tracer_disabled_us)
+
+    multi_doc, multi_cfg = _bench_multi(args, tracer=tracer)
     multi_doc["single_model"] = summary
     multi_doc["tick_overhead"] = tick_overhead
-    xr = None if args.no_xr_gate else _bench_xr_gate(cfg, packed, plan, args)
+    xr = (None if args.no_xr_gate
+          else _bench_xr_gate(cfg, packed, plan, args, tracer=tracer))
     multi_doc["xr_gate"] = xr
     multi_doc["config"] = dict(arch=cfg.name, smoke=args.smoke,
                                requests=args.requests, slots=args.slots,
@@ -455,12 +503,23 @@ def main(argv=None):
                                token_budget=args.token_budget,
                                tick_ms=args.tick_ms,
                                xr_requests=args.xr_requests,
+                               # the solo leg serves on the WALL clock, so
+                               # its deadline/TTFT numbers absorb jit
+                               # compile; the virtual-clock xr_gate is the
+                               # deadline-meaningful section
+                               solo=dict(clock="wall",
+                                         token_budget=args.token_budget,
+                                         admission=None, preemptive=False),
+                               traced=tracer is not None,
                                multi=multi_cfg)
     validate(multi_doc)
     import json
     with open(args.out, "w") as fh:
         json.dump(multi_doc, fh, indent=2)
         fh.write("\n")
+    if tracer is not None:
+        validate_trace(tracer.to_dict())
+        tracer.write(args.trace_json)
 
     thr, dl, ticks = (summary["throughput"], summary["deadlines"],
                       summary["ticks"])
@@ -482,10 +541,18 @@ def main(argv=None):
               f";kv_dropped={pg['kv_dropped']}"
               f";kv_exposed_ms={pg['kv_exposed_s'] * 1e3:.2f}"
               f";kv_hidden_ms={pg['kv_hidden_s'] * 1e3:.2f}")
-    if tick_overhead is not None:
+    if "thread_cached_us" in tick_overhead:
         print(f"serving_thread_cache,{tick_overhead['thread_cached_us']:.2f},"
               f"rebuild_us={tick_overhead['thread_rebuild_us']:.2f}"
               f";speedup={tick_overhead['speedup']:.1f}x")
+    print(f"serving_tracer_off,{tick_overhead['tracer_disabled_us']:.3f},"
+          f"budget_us=5.0")
+    if tracer is not None:
+        tr = summary["trace"]
+        print(f"serving_trace,{tracer.event_count},"
+              f"tracks={len(tracer.track_names)}"
+              f";pred_vs_meas={tr['predicted_vs_measured_stall_ratio']:.3f}"
+              f";path={args.trace_json}")
     if xr is not None:
         g = xr["gate"]
         print(f"serving_xr_gate,{g['deadline_miss_rate']:.3f},"

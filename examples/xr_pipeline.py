@@ -100,7 +100,8 @@ def main():
     from repro.models import transformer as tfm
     from repro.parallel.sharding import freeze_for_serving
     from repro.serving import (MultiScheduler, Request, Scheduler,
-                               ServingEngine, validate)
+                               ServingEngine, Tracer, validate)
+    from repro.serving.trace import validate as validate_trace
 
     def build(arch, seed):
         cfg = get_config(arch).smoke()
@@ -139,7 +140,12 @@ def main():
     # continuous batching: one global token budget re-planned every tick
     # and mid-request preemption, so an urgent wake-word request seizes a
     # slot THIS tick instead of queueing behind a long assistant prefill
-    ms = MultiScheduler(pool=pool, token_budget=24, preemptive=True)
+    # record the whole tenancy run as a Chrome trace: one track per
+    # tenant (fence/admit/begin/compute spans + the predicted-stall
+    # overlay), one io track for page traffic, preempts as instants
+    tracer = Tracer()
+    ms = MultiScheduler(pool=pool, token_budget=24, preemptive=True,
+                        tracer=tracer)
     for name, (cfg, packed, plan) in tenants.items():
         eng = ServingEngine(cfg, packed, batch_slots=2, max_len=64, seed=0,
                             plan=plan)
@@ -241,6 +247,13 @@ def main():
     print("  tenant tokens bit-exact vs solo private pagers; pool "
           "counters (weights AND kv) match kv_pass_counters")
     ms.close()
+
+    tdoc = tracer.to_dict()
+    validate_trace(tdoc)
+    tracer.write("xr_pipeline_trace.json")
+    print(f"  trace: {tracer.event_count} events on "
+          f"{len(tracer.track_names)} tracks -> xr_pipeline_trace.json "
+          f"(open in chrome://tracing or ui.perfetto.dev)")
     print("xr_pipeline OK")
 
 

@@ -220,6 +220,10 @@ class SharedPagePool:
         # admit() never evicts pages of a model that is mid-fetch, so an
         # overlapped pass's live window survives co-tenant admissions
         self._active_fetch: set = set()
+        # opt-in chrome-trace hook (duck-typed — see serving.trace; set
+        # by ServingEngine.set_tracer): evictions become instant events,
+        # live_bytes a counter track
+        self.tracer = None
 
     def register(self, name: str, store: Any) -> None:
         """Join the pool.  ``store`` is a :class:`HostPagedStore` (weight
@@ -279,10 +283,11 @@ class SharedPagePool:
         with self._lock:
             if nbytes > self.budget_bytes:
                 return              # can NEVER fit: don't flush co-tenants
+            tr = self.tracer
             for key in list(self._cache.keys()):
                 if self.live_bytes + nbytes <= self.budget_bytes:
                     break
-                victim_model, _victim_page = key
+                victim_model, victim_page = key
                 if victim_model == name or victim_model in self._active_fetch:
                     # the fetching model's own pages — and any model whose
                     # overlapped pass is still mid-fetch — keep their live
@@ -291,9 +296,14 @@ class SharedPagePool:
                 freed, _ = self._cache.pop(key)
                 self.live_bytes -= freed
                 self.counters[victim_model]["evicted"] += 1
+                if tr is not None:
+                    tr.instant("evict", track="io", model=victim_model,
+                               page=victim_page, nbytes=freed, by=name)
             if self.live_bytes + nbytes <= self.budget_bytes:
                 self._cache[(name, page_idx)] = (nbytes, params)
                 self.live_bytes += nbytes
+            if tr is not None:
+                tr.counter("pool_bytes", track="io", bytes=self.live_bytes)
 
     def invalidate(self, name: str, page_idx: int) -> bool:
         """Drop ``name``'s cached page (owner-initiated, e.g. a KV block
@@ -306,6 +316,9 @@ class SharedPagePool:
             if entry is None:
                 return False
             self.live_bytes -= entry[0]
+            if self.tracer is not None:
+                self.tracer.counter("pool_bytes", track="io",
+                                    bytes=self.live_bytes)
             return True
 
     def add_stall(self, name: str, exposed_s: float,
@@ -320,7 +333,7 @@ class SharedPagePool:
     def summary(self) -> Dict[str, Any]:
         """Per-model swap/miss/pool-hit/evict counters plus the
         exposed/hidden stall split + pool state — the ``shared_pool``
-        section of the metrics/v5 JSON.  The stall seconds here are the
+        section of the metrics/v6 JSON.  The stall seconds here are the
         pool's per-model *view* of the same wall time the engines report
         in their own ``paging`` sections; totals must sum ONE of the two,
         never both."""
@@ -430,6 +443,9 @@ class HostPagedStore:
         self.swap_count = 0
         self.miss_count = 0
         self._live: Dict[int, Dict[str, PackedParam]] = {}
+        # opt-in chrome-trace hook (ServingEngine.set_tracer): per-page
+        # fetch spans on the "io" track, emitted from the fetch worker
+        self.tracer = None
         if pool is not None:
             pool.register(self.name, self)
 
@@ -442,10 +458,15 @@ class HostPagedStore:
         return self._pool if self.pool is None else self.pool._exec
 
     def _fetch_page(self, idx: int) -> Dict[str, PackedParam]:
+        tr = self.tracer
+        t0 = tr.now() if tr is not None else 0.0
         if self.pool is not None:
             cached = self.pool.lookup(self.name, idx)
             if cached is not None:
-                return cached           # pool hit: no host->device swap
+                if tr is not None:       # pool hit: no host->device swap
+                    tr.complete("page", tr.now() - t0, track="io",
+                                model=self.name, page=idx, pool_hit=True)
+                return cached
         out = {}
         for name in self.pages[idx].param_names:
             hp, hs, proto = self._host[name]
@@ -456,6 +477,10 @@ class HostPagedStore:
         self.swap_count += 1
         if self.pool is not None:
             self.pool.admit(self.name, idx, self.pages[idx].nbytes, out)
+        if tr is not None:
+            tr.complete("page", tr.now() - t0, track="io", model=self.name,
+                        page=idx, nbytes=self.pages[idx].nbytes,
+                        pool_hit=False)
         return out
 
     def stream(self, resident_slots: int = 2) -> "PageStream":
@@ -808,6 +833,9 @@ class KVPageTable:
         self.events: List[Tuple] = []
         self._pending_drops: set = set()
         self._exec = ThreadPoolExecutor(max_workers=1)
+        # opt-in chrome-trace hook (ServingEngine.set_tracer): per-block
+        # fetch spans + kvdrop instants on the "io" track
+        self.tracer = None
         if pool is not None:
             pool.register(name, self)
 
@@ -834,11 +862,17 @@ class KVPageTable:
         return slot, a, min(a + self.block_rows, self.max_len)
 
     def _fetch_block(self, page_idx: int) -> Dict[str, Any]:
+        tr = self.tracer
+        t0 = tr.now() if tr is not None else 0.0
         if self.pool is not None:
             cached = self.pool.lookup(self.name, page_idx)
             if cached is not None:
                 self.pool_hits += 1
-                return cached            # pool hit: no host->device swap
+                if tr is not None:       # pool hit: no host->device swap
+                    tr.complete("kv_block", tr.now() - t0, track="io",
+                                model=self.name, page=page_idx,
+                                pool_hit=True)
+                return cached
         slot, a, b = self._block_rows_span(page_idx)
         rows = dict(
             k=jax.device_put(self.host["k"][:, slot, :, a:b], self.device),
@@ -848,6 +882,10 @@ class KVPageTable:
         if self.pool is not None:
             self.pool.admit(self.name, page_idx,
                             (b - a) * self.row_nbytes, rows)
+        if tr is not None:
+            tr.complete("kv_block", tr.now() - t0, track="io",
+                        model=self.name, page=page_idx,
+                        nbytes=(b - a) * self.row_nbytes, pool_hit=False)
         return rows
 
     def writeback(self, slot: int, block_lo: int, block_hi: int,
@@ -883,6 +921,10 @@ class KVPageTable:
                                 if self.pool.invalidate(self.name, p))
                 if removed:
                     self.pool.log_event("kvdrop", self.name, removed)
+                    if self.tracer is not None:
+                        self.tracer.instant("kvdrop", track="io",
+                                            model=self.name, slot=slot,
+                                            pages=len(removed))
                 self.dropped += len(removed)
             # stale rows must never be served again: zero them so a bug
             # that fetches a dropped block surfaces as loud wrong bytes

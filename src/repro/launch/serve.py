@@ -30,7 +30,7 @@ the tick (``--sync-io`` restores the blocking stream-then-step tick).
 When a plan pages, single-model runs are verified bit-exact against the
 fully resident uniform plan AND — in async mode — against the
 synchronous streaming path (disable with ``--no-verify``).  Metrics are
-emitted as the ``repro.serving.metrics/v5`` JSON (stdout, and
+emitted as the ``repro.serving.metrics/v6`` JSON (stdout, and
 ``--metrics-json PATH`` to persist).
 
 Continuous batching (the 10–20 ms XR deadline machinery):
@@ -57,7 +57,8 @@ from repro.core.placement import (Placement, PlacementPlan, packed_sizes,
 from repro.models import transformer as tfm
 from repro.parallel.sharding import freeze_for_serving
 from repro.serving import (MultiScheduler, Request, Scheduler,
-                           ServingEngine)
+                           ServingEngine, Tracer)
+from repro.serving.trace import validate as validate_trace
 
 
 def _requests(cfg, n, max_new, seed=0):
@@ -70,7 +71,7 @@ def _requests(cfg, n, max_new, seed=0):
 
 
 def _serve(cfg, packed, plan, args, paged: bool,
-           async_io: bool = None, kv_paged: bool = False):
+           async_io: bool = None, kv_paged: bool = False, tracer=None):
     eng = ServingEngine(cfg, packed, batch_slots=args.slots,
                         max_len=args.max_len, plan=plan, seed=args.seed)
     if paged:
@@ -82,7 +83,8 @@ def _serve(cfg, packed, plan, args, paged: bool,
                       else async_io,
                       token_budget=args.token_budget,
                       preemptive=args.preemptive,
-                      admission=args.admission)
+                      admission=args.admission,
+                      tracer=tracer, trace_track=args.arch)
     sched.add_stream("xr", priority=1, deadline_ms=args.deadline_ms)
     sched.add_stream("background")
     for req in _requests(cfg, args.requests, args.max_new, seed=args.seed):
@@ -119,12 +121,13 @@ def _tenant_requests(cfg, args, salt):
                      seed=args.seed + salt)
 
 
-def _serve_tenants(models, args, pool):
+def _serve_tenants(models, args, pool, tracer=None):
     """One MultiScheduler pass over every tenant; returns (ms, done)."""
     ms = MultiScheduler(pool=pool, async_io=args.async_io,
                         token_budget=args.token_budget,
                         preemptive=args.preemptive,
-                        admission=args.admission)
+                        admission=args.admission,
+                        tracer=tracer)
     for name, (cfg, packed, plan) in models.items():
         eng = ServingEngine(cfg, packed, batch_slots=args.slots,
                             max_len=args.max_len, plan=plan,
@@ -190,7 +193,8 @@ def _main_multi(args):
           f"{budget} B")
 
     pool = SharedPagePool(budget) if total_cold > 0 else None
-    ms, done = _serve_tenants(models, args, pool)
+    tracer = Tracer() if args.trace_json else None
+    ms, done = _serve_tenants(models, args, pool, tracer=tracer)
     doc = ms.summary()
     for name in models:
         reqs = doc["models"][name]["requests"]
@@ -234,6 +238,13 @@ def _main_multi(args):
     if args.metrics_json:
         ms.write(args.metrics_json)
         print(f"metrics written to {args.metrics_json}")
+    if tracer is not None:
+        validate_trace(tracer.to_dict())
+        tracer.write(args.trace_json)
+        print(f"trace written to {args.trace_json} "
+              f"({tracer.event_count} events on "
+              f"{len(tracer.track_names)} tracks); load it in "
+              f"chrome://tracing or https://ui.perfetto.dev")
     ms.close()
     if not ok:
         sys.exit(1)
@@ -301,6 +312,13 @@ def main(argv=None):
                          "verified bit-exact against)")
     ap.add_argument("--metrics-json", default=None,
                     help="also write the metrics JSON to this path")
+    ap.add_argument("--trace-json", default=None,
+                    help="record the tick pipeline as a Chrome Trace "
+                         "Event JSON at this path (per-tenant fence/"
+                         "admit/begin/compute spans, per-page I/O spans, "
+                         "preempt/evict instants, and the predicted-vs-"
+                         "measured stall overlay); open in "
+                         "chrome://tracing or ui.perfetto.dev")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-verify", action="store_true",
                     help="skip the bit-exact check of the paged run "
@@ -339,8 +357,9 @@ def main(argv=None):
         plan = PlacementPlan.uniform(args.scenario, bits=args.bits)
         paged = False
 
+    tracer = Tracer() if args.trace_json else None
     done, sched, eng = _serve(cfg, packed, plan, args, paged,
-                              kv_paged=args.kv_paged)
+                              kv_paged=args.kv_paged, tracer=tracer)
     total_tokens = sum(len(r.generated) for r in done)
     place = ("mixed:" + "+".join(plan.scenarios_used())
              if not plan.is_uniform else plan.default.scenario)
@@ -417,11 +436,20 @@ def main(argv=None):
             if seng.kv_table is not None:
                 seng.kv_table.close()
 
-    print(sched.metrics.to_json(paging=eng.paging_summary()))
+    print(sched.metrics.to_json(paging=eng.paging_summary(),
+                                trace=sched.trace_summary()))
     if args.metrics_json:
         sched.metrics.write(args.metrics_json,
-                            paging=eng.paging_summary())
+                            paging=eng.paging_summary(),
+                            trace=sched.trace_summary())
         print(f"metrics written to {args.metrics_json}")
+    if tracer is not None:
+        validate_trace(tracer.to_dict())
+        tracer.write(args.trace_json)
+        print(f"trace written to {args.trace_json} "
+              f"({tracer.event_count} events on "
+              f"{len(tracer.track_names)} tracks); load it in "
+              f"chrome://tracing or https://ui.perfetto.dev")
     if not ok:
         sys.exit(1)
     return done

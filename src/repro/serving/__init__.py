@@ -4,7 +4,9 @@ from repro.serving.metrics import (MetricsRecorder, RequestRecord,
                                    multi_summary, validate)
 from repro.serving.sched import Scheduler, StreamSpec
 from repro.serving.tenancy import MultiScheduler
+from repro.serving.trace import Stopwatch, Tracer
 
 __all__ = ["ServingEngine", "Request", "SlotCheckpoint", "sample_token",
            "sample_token_batch", "Scheduler", "StreamSpec", "MultiScheduler",
-           "MetricsRecorder", "RequestRecord", "multi_summary", "validate"]
+           "MetricsRecorder", "RequestRecord", "multi_summary", "validate",
+           "Tracer", "Stopwatch"]

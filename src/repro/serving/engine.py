@@ -40,7 +40,6 @@ exact-length single-shot prefill.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -50,6 +49,7 @@ import numpy as np
 from repro.core.placement import PlacementPlan, as_plan
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
+from repro.serving.trace import now as _now
 
 
 def sample_token(logits: jax.Array, key: jax.Array, temperature: float = 1.0,
@@ -231,6 +231,11 @@ class ServingEngine:
         self.last_kv_overlap: Optional[Dict[str, float]] = None
         self._kv_synced = np.zeros(batch_slots, np.int64)  # blocks on host
 
+        # opt-in chrome-trace hook (set_tracer): None by default, so the
+        # un-traced fence/begin path pays one branch and nothing else
+        self.tracer = None
+        self.trace_track = "serve"
+
     # -- jitted bodies --------------------------------------------------------
     def _decode_impl(self, params, tokens, cache, pos_vec):
         # batched decode with PER-SLOT positions (continuous batching):
@@ -339,6 +344,8 @@ class ServingEngine:
         self.params = thread_packed(self.params,
                                     {**self.pager.resident, **host_view})
         self._build_thread_template(set(host_view))
+        if self.tracer is not None:
+            self.set_tracer(self.tracer)   # reach the new store/pool
         return self
 
     def _build_thread_template(self, paged_names) -> None:
@@ -409,6 +416,31 @@ class ServingEngine:
         self.kv_table = KVPageTable(self.cache["kv"], block_rows=block_rows,
                                     pool=pool, name=name)
         self._kv_synced[:] = 0
+        if self.tracer is not None:
+            self.set_tracer(self.tracer)   # reach the new table/pool
+        return self
+
+    def set_tracer(self, tracer, track: Optional[str] = None
+                   ) -> "ServingEngine":
+        """Attach (or, with None, detach) a
+        :class:`~repro.serving.trace.Tracer` to the engine and every
+        paging component it owns — the paged weight store, the KV page
+        table, and their shared pool all emit onto the same tracer so
+        one trace shows scheduler phases, fence stalls, per-page I/O,
+        evictions and pool occupancy together.  ``track`` names this
+        engine's rows (the tenancy loop passes the tenant name).
+        Re-invoked automatically when paging attaches later."""
+        self.tracer = tracer
+        if track is not None:
+            self.trace_track = track
+        if self.pager is not None:
+            self.pager.tracer = tracer
+            if self.pager.pool is not None:
+                self.pager.pool.tracer = tracer
+        if self.kv_table is not None:
+            self.kv_table.tracer = tracer
+            if self.kv_table.pool is not None:
+                self.kv_table.pool.tracer = tracer
         return self
 
     def _kv_valid(self, i: int) -> int:
@@ -501,13 +533,19 @@ class ServingEngine:
         page traffic.  With KV paging attached, the tick's live KV spans
         ride the same overlapped stream (blocks completed after this
         begin are demand-fetched at the fence)."""
+        kicked = []
         if self.pager is not None and self._inflight_pass is None:
             self._inflight_pass = self.pager.begin_pass(
                 self.page_resident_slots)
+            kicked.append("weights")
         if self.kv_table is not None and self._inflight_kv is None:
             self._kv_begun_gen = self._slot_gen.copy()
             self._inflight_kv = self.kv_table.begin_pass(
                 self._kv_full_blocks())
+            kicked.append("kv")
+        if kicked and self.tracer is not None:
+            self.tracer.instant("begin_pass", track=self.trace_track,
+                                streams="+".join(kicked))
 
     def fence_tick_params(self) -> Any:
         """The params tree for this tick, fencing at first use.
@@ -572,6 +610,18 @@ class ServingEngine:
             self.kv_hidden_s += hidden
         if pool is not None:
             pool.add_stall(name, exposed, hidden)
+        tr = self.tracer
+        if tr is not None:
+            # the measured stall split, retro-dated so [hidden][exposed]
+            # render as one contiguous swap bar ending at the fence —
+            # the spans the reconciliation tests sum against metrics/v6
+            stream = "kv" if kv else "weights"
+            track = f"{self.trace_track}:stall"
+            if hidden > 0.0:
+                tr.complete(f"hidden:{stream}", hidden, track=track,
+                            end_offset_s=exposed, swap_ms=ps.swap_s * 1e3)
+            tr.complete(f"exposed:{stream}", exposed, track=track,
+                        demand=demand, window_ms=window * 1e3)
         return dict(swap_s=ps.swap_s, window_s=window,
                     exposed_s=exposed, hidden_s=hidden)
 
@@ -666,7 +716,7 @@ class ServingEngine:
     def submit(self, req: Request) -> None:
         self._check_fits(req)
         if req.arrival_s is None:
-            req.arrival_s = time.perf_counter()
+            req.arrival_s = _now()
         self.waiting.append(req)
 
     def _check_fits(self, req: Request) -> None:
@@ -695,7 +745,7 @@ class ServingEngine:
             raise ValueError(f"slot {slot} is occupied")
         self._check_fits(req)
         if req.arrival_s is None:
-            req.arrival_s = time.perf_counter()
+            req.arrival_s = _now()
         req.prefill_pos = 0
         self._slot_gen[slot] += 1
         if self.kv_table is not None:
@@ -918,7 +968,7 @@ class ServingEngine:
             self.key, sub = jax.random.split(self.key)
             tok = int(sample_token(logits[j, n - 1], sub, r.temperature))
             r.generated.append(tok)
-            r.first_token_s = time.perf_counter()
+            r.first_token_s = _now()
             self.slot_pos[i] = len(r.prompt) + self.cfg.n_meta_tokens
             started.append(r)
             if len(r.generated) >= r.max_new_tokens:
@@ -982,7 +1032,7 @@ class ServingEngine:
     def _retire(self, slot: int) -> Request:
         req = self.slot_req[slot]
         req.done = True
-        req.finish_s = time.perf_counter()
+        req.finish_s = _now()
         self.finished.append(req)
         self.slot_req[slot] = None
         self._slot_gen[slot] += 1

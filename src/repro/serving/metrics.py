@@ -11,12 +11,12 @@ behind compute by the async paging pipeline), deadline-miss rate per
 stream, and aggregate token throughput.
 
 Everything is emitted as one JSON document (schema
-``repro.serving.metrics/v5``) so the bench trajectory
+``repro.serving.metrics/v6``) so the bench trajectory
 (``benchmarks/serving_load.py`` -> ``BENCH_serving.json``) and the
 launcher (``repro.launch.serve --metrics-json``) share a format:
 
     {
-      "schema": "repro.serving.metrics/v5",
+      "schema": "repro.serving.metrics/v6",
       "ticks":      {"count", "latency_ms": {mean,p50,p99,max},
                      "paging_exposed_ms": {mean,p50,p99,max},
                      "paging_hidden_ms":  {mean,p50,p99,max}},
@@ -33,6 +33,8 @@ launcher (``repro.launch.serve --metrics-json``) share a format:
                      "kv_swaps", "kv_pool_hits", "kv_writebacks",
                      "kv_dropped", "kv_preempt_drops", "kv_exposed_s",
                      "kv_hidden_s", "kv_block_rows"},
+      "trace":      {"events", "tracks",
+                     "predicted_vs_measured_stall_ratio"},
       "streams":    {name: {"count", "missed", "miss_rate", "truncated",
                             "p99_ttft_ms"}}
     }
@@ -44,6 +46,16 @@ Requests without a deadline never count toward the miss rate, and
 service) are excluded from it and reported under their own counter.
 Requests the admission controller REJECTED never became requests at all
 (no service, no tokens): they appear only in ``scheduler.rejected``.
+
+v6 vs v5: the ``trace`` section is new — chrome-trace observability
+(``repro.serving.trace``): the tracer's event/track counts (zeros for an
+un-traced run) and ``predicted_vs_measured_stall_ratio``, the run's
+summed closed-form exposed-stall prediction
+(:func:`repro.core.memsys.overlap_stall` over each fenced pass's
+swap/window split) over the fence-measured exposure — 1.0 means the
+stall model matched reality, vacuously so when nothing paged.
+:func:`validate` rejects v5 payloads — wrong schema string, or missing
+``trace`` section.
 
 v5 vs v4: the ``scheduler`` section is new — continuous-batching
 observability (mid-request ``preemptions`` and ``restores``, admission
@@ -60,12 +72,12 @@ per-tick ``paging_stall_ms`` became the ``paging_exposed_ms`` /
 ``exposed_s``.)
 
 Multi-model tenancy (``repro.serving.tenancy.MultiScheduler``) emits the
-v5 *multi* shape instead: per-model sections of the document above plus
+v6 *multi* shape instead: per-model sections of the document above plus
 the shared page pool's contention stats (KV page tables appear as their
 own ``<model>/kv`` members)::
 
     {
-      "schema": "repro.serving.metrics/v5",
+      "schema": "repro.serving.metrics/v6",
       "ticks":       {"count"},                     # MultiScheduler ticks
       "models":      {name: <single-model document, sans schema>},
       "shared_pool": {"budget_bytes", "live_bytes", "cached_pages",
@@ -99,7 +111,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-SCHEMA = "repro.serving.metrics/v5"
+SCHEMA = "repro.serving.metrics/v6"
 
 
 def quantiles(xs: List[float]) -> Dict[str, float]:
@@ -117,6 +129,14 @@ def _empty_paging() -> Dict[str, Any]:
                 kv_swaps=0, kv_pool_hits=0, kv_writebacks=0, kv_dropped=0,
                 kv_preempt_drops=0,
                 kv_exposed_s=0.0, kv_hidden_s=0.0, kv_block_rows=0)
+
+
+def _empty_trace() -> Dict[str, Any]:
+    # the un-traced default: no events, no tracks, and a drift ratio of
+    # 1.0 (predicted == measured, vacuously — nothing paged or no
+    # accumulation ran)
+    return dict(events=0, tracks=[],
+                predicted_vs_measured_stall_ratio=1.0)
 
 
 @dataclasses.dataclass
@@ -247,7 +267,8 @@ class MetricsRecorder:
             return 0.0
         return self._t_last - self._t0
 
-    def summary(self, paging: Optional[Dict[str, Any]] = None
+    def summary(self, paging: Optional[Dict[str, Any]] = None,
+                trace: Optional[Dict[str, Any]] = None
                 ) -> Dict[str, Any]:
         ttfts = [r.ttft_s * 1e3 for r in self.records if r.ttft_s is not None]
         lats = [r.latency_s * 1e3 for r in self.records
@@ -305,6 +326,7 @@ class MetricsRecorder:
                 "tok_per_s": tokens / wall,
             },
             "paging": dict(paging if paging is not None else _empty_paging()),
+            "trace": dict(trace if trace is not None else _empty_trace()),
             "streams": streams,
         }
 
@@ -322,20 +344,21 @@ class MetricsRecorder:
             "budget_utilization": (mean_used / budget) if budget else 0.0,
         }
 
-    def to_json(self, paging: Optional[Dict[str, Any]] = None, **extra
-                ) -> str:
-        doc = self.summary(paging=paging)
+    def to_json(self, paging: Optional[Dict[str, Any]] = None,
+                trace: Optional[Dict[str, Any]] = None, **extra) -> str:
+        doc = self.summary(paging=paging, trace=trace)
         doc.update(extra)
         return json.dumps(doc, indent=2, sort_keys=False)
 
     def write(self, path: str, paging: Optional[Dict[str, Any]] = None,
-              **extra) -> None:
+              trace: Optional[Dict[str, Any]] = None, **extra) -> None:
         with open(path, "w") as fh:
-            fh.write(self.to_json(paging=paging, **extra) + "\n")
+            fh.write(self.to_json(paging=paging, trace=trace, **extra)
+                     + "\n")
 
 
 # ---------------------------------------------------------------------------
-# multi-model tenancy (metrics/v5 multi shape)
+# multi-model tenancy (metrics/v6 multi shape)
 # ---------------------------------------------------------------------------
 
 def multi_summary(models: Dict[str, Dict[str, Any]],
@@ -414,6 +437,9 @@ _SINGLE_KEYS = {
                # v5: preemption's share of the dropped blocks
                "kv_preempt_drops",
                "kv_exposed_s", "kv_hidden_s", "kv_block_rows"),
+    # v6: chrome-trace observability — its absence is exactly what marks
+    # a stale v5 payload
+    "trace": ("events", "tracks", "predicted_vs_measured_stall_ratio"),
 }
 
 _TOTALS_KEYS = ("requests", "tokens_out", "truncated", "with_deadline",
@@ -440,7 +466,7 @@ def _validate_single(doc: Dict[str, Any], where: str) -> None:
 
 
 def validate(doc: Dict[str, Any]) -> Dict[str, Any]:
-    """Assert ``doc`` is a well-formed ``repro.serving.metrics/v5``
+    """Assert ``doc`` is a well-formed ``repro.serving.metrics/v6``
     document (either the single-model or the multi-model shape); returns
     the document unchanged so it can be used inline.  Raises ValueError
     naming the first missing piece."""

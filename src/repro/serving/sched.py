@@ -58,7 +58,7 @@ that claim's serving-side analogue:
   * **metrics**: TTFT / end-to-end latency / p50 / p99 / deadline-miss
     rate / tok/s / exposed-vs-hidden paging stalls / preemption and
     admission-control counters / budget utilization, recorded per tick
-    and per request and emitted as the ``repro.serving.metrics/v5``
+    and per request and emitted as the ``repro.serving.metrics/v6``
     JSON.
 
 The scheduler owns no jit state — it drives the engine's tick primitives
@@ -76,8 +76,10 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.memsys import overlap_stall
+from repro.core.paging import pass_counters
 from repro.serving.engine import Request, ServingEngine, SlotCheckpoint
 from repro.serving.metrics import MetricsRecorder
+from repro.serving.trace import Tracer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,7 +126,9 @@ class Scheduler:
                  admission: Optional[str] = None,
                  est_tick_s: Optional[float] = None,
                  seq_counter: Optional[itertools.count] = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter,
+                 tracer: Optional[Tracer] = None,
+                 trace_track: Optional[str] = None):
         self.engine = engine
         # overlap the next tick's page stream with this tick's compute;
         # False = the fully synchronous stream-then-step tick
@@ -172,6 +176,19 @@ class Scheduler:
         self._compute_ema: Optional[float] = None
         self._swap_ema: Optional[float] = None
         self._est_seed_s = est_tick_s
+        # opt-in chrome-trace instrumentation: every hot-path hook guards
+        # on ``tracer is None`` (the default), so the un-traced tick pays
+        # one branch and allocates nothing
+        self.tracer = tracer
+        self.track = trace_track if trace_track is not None else "serve"
+        if tracer is not None:
+            engine.set_tracer(tracer, track=self.track)
+        # predicted-vs-measured exposed-stall accumulators: the closed
+        # form (memsys.overlap_stall over the fenced pass's swap/window)
+        # against what the fence actually booked — summarized as the
+        # metrics/v6 ``trace.predicted_vs_measured_stall_ratio``
+        self._pred_exposed_s = 0.0
+        self._meas_exposed_s = 0.0
 
     # -- streams & submission -------------------------------------------------
     def add_stream(self, name: str, *, priority: int = 0,
@@ -288,12 +305,19 @@ class Scheduler:
                     if not req.degraded:
                         req.degraded = True
                         self.metrics.record_degraded()
+                        if self.tracer is not None:
+                            self.tracer.instant(
+                                "degrade", track=self.track, uid=req.uid,
+                                max_new_tokens=req.max_new_tokens)
                 kept.append(req)
             else:
                 req.rejected = True
                 req.finish_s = now
                 self.rejected.append(req)
                 self.metrics.record_rejected()
+                if self.tracer is not None:
+                    self.tracer.instant("reject", track=self.track,
+                                        uid=req.uid)
         self.queue[:] = kept
 
     # -- admission + preemption -----------------------------------------------
@@ -317,11 +341,28 @@ class Scheduler:
             idx = next(i for i, r in enumerate(self.queue) if r is obj)
             del self.queue[idx]
             self.engine.assign(obj, slot)
+            if self.tracer is not None:
+                self.tracer.instant("admit", track=self.track,
+                                    uid=obj.uid, slot=slot)
         else:
             idx = next(i for i, c in enumerate(self.preempted) if c is obj)
             del self.preempted[idx]
             self.engine.restore(obj, slot)
             self.metrics.record_restore()
+            if self.tracer is not None:
+                self.tracer.instant("restore", track=self.track,
+                                    uid=obj.req.uid, slot=slot)
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Evict ``slot`` mid-service into the preempted pool — the one
+        copy of the checkpoint + metrics + trace bookkeeping shared by
+        the solo admit loop and the tenancy global pass."""
+        ck = self.engine.preempt(slot)
+        self.preempted.append(ck)
+        self.metrics.record_preemption()
+        if self.tracer is not None:
+            self.tracer.instant("preempt", track=self.track,
+                                uid=ck.req.uid, slot=slot)
 
     def _preempt_for(self, req: Request) -> Optional[int]:
         """Pick a victim slot for ``req``: the worst-ranked occupant of a
@@ -338,6 +379,14 @@ class Scheduler:
         return slot
 
     def _admit(self) -> None:
+        tr = self.tracer
+        if tr is None:
+            self._admit_impl()
+            return
+        with tr.span("admit", track=self.track):
+            self._admit_impl()
+
+    def _admit_impl(self) -> None:
         self._adopt_engine_queue()
         if self.admission is not None:
             self._admission_control()
@@ -360,8 +409,7 @@ class Scheduler:
             slot = self._preempt_for(req)
             if slot is None:
                 return
-            self.preempted.append(self.engine.preempt(slot))
-            self.metrics.record_preemption()
+            self._preempt_slot(slot)
             self._place(kind, obj, slot)
 
     # -- the budgeted tick plan (continuous batching) -------------------------
@@ -408,7 +456,12 @@ class Scheduler:
         tick start.  Returns ``(t0, params)`` for :meth:`tick_compute`."""
         t0 = self.clock()
         self.metrics.start()                     # wall clock spans tick 1
-        params = self.engine.fence_tick_params()
+        tr = self.tracer
+        if tr is None:
+            params = self.engine.fence_tick_params()
+        else:
+            with tr.span("fence", track=self.track, tick=self.ticks):
+                params = self.engine.fence_tick_params()
         return t0, params
 
     def tick_begin(self) -> None:
@@ -423,12 +476,16 @@ class Scheduler:
         else:
             more = self.engine.has_tick_after(self.prefill_chunk)
         if self.queue or self.preempted or more:
-            self.engine.begin_tick_params()
+            tr = self.tracer
+            if tr is None:
+                self.engine.begin_tick_params()
+            else:
+                with tr.span("begin", track=self.track):
+                    self.engine.begin_tick_params()
 
-    def tick_compute(self, t0: float, params) -> List[Request]:
-        """Phase 3: prefill per the tick plan (one chunk per slot when
-        unbudgeted), one batched decode, retire + metrics — overlapping
-        with the phase-2 stream."""
+    def _compute_tick(self, params) -> List[Request]:
+        """The engine-driving core of phase 3: planned prefills, one
+        batched decode, KV writeback."""
         started = self.engine.prefill_tick(params, complete=False,
                                            chunk=self.prefill_chunk,
                                            plan=self._tick_plan)
@@ -440,6 +497,51 @@ class Scheduler:
         # KV paging: blocks the append-only frontier completed this tick
         # are written back host-ward once, becoming fetchable next pass
         self.engine.sync_kv_tick()
+        return finished
+
+    def _trace_tick(self, measured_exposed_s: float) -> None:
+        """Accumulate this tick's predicted-vs-measured exposed-stall
+        drift (the metrics/v6 ``trace`` section) and, when tracing,
+        render the closed-form prediction on the ``<track> (predicted)``
+        overlay next to the measured fence spans."""
+        eng = self.engine
+        overlaps = [ov for ov in (eng.last_overlap, eng.last_kv_overlap)
+                    if ov is not None]
+        if not overlaps:
+            return
+        pred_exposed = pred_hidden = swap = 0.0
+        for ov in overlaps:
+            st = overlap_stall(ov["swap_s"], ov["window_s"])
+            pred_exposed += st["exposed_s"]
+            pred_hidden += st["hidden_s"]
+            swap += ov["swap_s"]
+        self._pred_exposed_s += pred_exposed
+        self._meas_exposed_s += measured_exposed_s
+        tr = self.tracer
+        if tr is None:
+            return
+        per_pass_swaps = (
+            pass_counters(len(eng.pager.pages),
+                          eng.page_resident_slots)["swaps"]
+            if eng.pager is not None else 0)
+        tr.complete("stall(pred)", pred_exposed,
+                    track=f"{self.track} (predicted)",
+                    predicted_exposed_ms=pred_exposed * 1e3,
+                    predicted_hidden_ms=pred_hidden * 1e3,
+                    measured_exposed_ms=measured_exposed_s * 1e3,
+                    swap_ms=swap * 1e3,
+                    predicted_swaps_per_pass=per_pass_swaps)
+
+    def tick_compute(self, t0: float, params) -> List[Request]:
+        """Phase 3: prefill per the tick plan (one chunk per slot when
+        unbudgeted), one batched decode, retire + metrics — overlapping
+        with the phase-2 stream."""
+        tr = self.tracer
+        if tr is None:
+            finished = self._compute_tick(params)
+        else:
+            with tr.span("compute", track=self.track, tick=self.ticks):
+                finished = self._compute_tick(params)
         now = self.clock()
         for req in finished:
             req.finish_s = now
@@ -459,6 +561,7 @@ class Scheduler:
         swap = exposed + hidden
         self._swap_ema = (swap if self._swap_ema is None
                           else (1 - alpha) * self._swap_ema + alpha * swap)
+        self._trace_tick(exposed)
         self.metrics.record_tick(latency_s=latency,
                                  paging_exposed_s=exposed,
                                  paging_hidden_s=hidden,
@@ -518,3 +621,22 @@ class Scheduler:
         will never run, so nothing leaks past teardown (the engine's
         pager itself is owned by the caller / pool)."""
         self.engine.cancel_tick_params()
+
+    # -- trace introspection ---------------------------------------------------
+    def trace_summary(self) -> Dict[str, object]:
+        """The metrics/v6 ``trace`` section for this scheduler: tracer
+        event/track counts (zeros when un-traced) and the run's
+        predicted-vs-measured exposed-stall ratio.  The ratio is the
+        summed closed-form prediction over the summed fence-measured
+        exposure; 1.0 means the stall model matched reality (vacuously
+        so for runs that never paged)."""
+        meas, pred = self._meas_exposed_s, self._pred_exposed_s
+        if meas > 0.0:
+            ratio = pred / meas
+        else:
+            ratio = 1.0 if pred <= 0.0 else 0.0
+        tr = self.tracer
+        return dict(
+            events=0 if tr is None else tr.event_count,
+            tracks=[] if tr is None else tr.track_names,
+            predicted_vs_measured_stall_ratio=ratio)

@@ -24,7 +24,7 @@ behavior.  This module is that claim's serving-side realization:
     :func:`~repro.core.paging.shared_pass_counters` prediction, because
     tenants stream sequentially per tick);
   * per-model deadline accounting lands in the
-    ``repro.serving.metrics/v5`` multi shape (per-model sections plus the
+    ``repro.serving.metrics/v6`` multi shape (per-model sections plus the
     shared pool's contention stats and the exposed/hidden paging-stall
     split) via :func:`~repro.serving.metrics.multi_summary`;
   * the tick loop is the async paging **software pipeline**: per tick,
@@ -62,6 +62,7 @@ from repro.core.paging import SharedPagePool
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.metrics import multi_summary
 from repro.serving.sched import Scheduler, StreamSpec
+from repro.serving.trace import Tracer
 
 
 class MultiScheduler:
@@ -87,7 +88,8 @@ class MultiScheduler:
                  token_budget: Optional[int] = None,
                  preemptive: bool = False,
                  admission: Optional[str] = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter,
+                 tracer: Optional[Tracer] = None):
         if pool is not None and shared_budget_bytes is not None:
             raise ValueError("pass either pool= or shared_budget_bytes=, "
                              "not both")
@@ -105,6 +107,10 @@ class MultiScheduler:
         self.models: Dict[str, Scheduler] = {}
         self.ticks = 0
         self._seq = itertools.count()      # one submission order, global
+        # one tracer across every tenant: each model gets its own track
+        # (its registered name), the pool's I/O lands on the shared "io"
+        # track, and the global admission pass on "scheduler"
+        self.tracer = tracer
 
     @property
     def pass_log(self) -> List[str]:
@@ -152,7 +158,8 @@ class MultiScheduler:
                           async_io=self.async_io, clock=self.clock,
                           preemptive=self.preemptive,
                           admission=self.admission,
-                          seq_counter=self._seq)
+                          seq_counter=self._seq,
+                          tracer=self.tracer, trace_track=name)
         if self.pool is not None:
             from repro.core.placement import packed_sizes
             sizes = packed_sizes(engine.params)
@@ -219,8 +226,7 @@ class MultiScheduler:
                     req = obj if kind == "queue" else obj.req
                     slot = sched._preempt_for(req)
                     if slot is not None:
-                        sched.preempted.append(sched.engine.preempt(slot))
-                        sched.metrics.record_preemption()
+                        sched._preempt_slot(slot)
                         sched._place(kind, obj, slot)
                         placed = True
                         break
@@ -283,7 +289,12 @@ class MultiScheduler:
         order of the synchronous loop, which is what keeps the shared
         pool's counters on the static ``shared_pass_counters``
         prediction.  Returns {model: requests finished this tick}."""
-        self._admit_global()
+        tr = self.tracer
+        if tr is None:
+            self._admit_global()
+        else:
+            with tr.span("admit", track="scheduler", tick=self.ticks):
+                self._admit_global()
         active = [(name, sched) for name, sched in self.models.items()
                   if sched.pending]
         fenced = []
@@ -330,9 +341,10 @@ class MultiScheduler:
 
     # -- metrics / lifecycle --------------------------------------------------
     def summary(self) -> Dict:
-        """The ``repro.serving.metrics/v5`` multi-model document."""
+        """The ``repro.serving.metrics/v6`` multi-model document."""
         models = {name: sched.metrics.summary(
-                      paging=sched.engine.paging_summary())
+                      paging=sched.engine.paging_summary(),
+                      trace=sched.trace_summary())
                   for name, sched in self.models.items()}
         return multi_summary(
             models,

@@ -494,11 +494,11 @@ def test_multischeduler_close_cancels_inflight_passes(rng, packed,
     assert not ms.pool._active_fetch
 
 
-def test_metrics_v5_schema_validates_and_rejects_v3():
+def test_metrics_v6_schema_validates_and_rejects_stale():
     from repro.serving import MetricsRecorder
     from repro.serving.metrics import SCHEMA, _empty_paging
 
-    assert SCHEMA == "repro.serving.metrics/v5"
+    assert SCHEMA == "repro.serving.metrics/v6"
     rec = MetricsRecorder(clock=lambda: 0.0)
     rec.record_tick(latency_s=0.002, paging_exposed_s=0.0005,
                     paging_hidden_s=0.002)
