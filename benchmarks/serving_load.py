@@ -47,12 +47,21 @@ preemption.  The virtual clock advances a fixed ``--tick-ms`` per tick
 (plus 1 µs per read, keeping intra-tick stamps ordered), so the gate
 measures SCHEDULING — not the host machine.
 
-Emits the ``repro.serving.metrics/v6`` multi document (default
+``--page-bits N`` streams every cold page *encoded*: blockwise-quantized
+intN payload + scales over the wire, dequantized into the packed device
+format at fetch.  The bench then asserts the compression is real —
+int8 cold pages must move <= 0.3 wire bytes per fp32-dense raw byte
+(>= 3.5x compression) — that the pool counters INCLUDING the wire/raw
+byte ledgers still sit on the static ``kv_pass_counters`` prediction,
+and times the fetch-side decode as the ``serving_page_decode``
+micro-line.
+
+Emits the ``repro.serving.metrics/v7`` multi document (default
 ``BENCH_serving.json``; the single-model summary rides along under
 ``single_model``, the deadline gate under ``xr_gate``) — tok/s, p99
 tick latency, TTFT, deadline-miss rate, exposed/hidden paging stalls,
-shared-pool contention, preemption/admission counters — the
-bench-trajectory artefact for serving PRs.
+wire-vs-raw streamed bytes, shared-pool contention, preemption/
+admission counters — the bench-trajectory artefact for serving PRs.
 
 ``--trace-json PATH`` additionally records the whole bench — the solo
 leg, both tenants, and the continuous XR-gate leg — as one Chrome Trace
@@ -73,7 +82,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.paging import SharedPagePool, kv_pass_counters, pass_counters
+from repro.core.paging import (SharedPagePool, kv_pass_counters,
+                               page_sizes, pass_counters)
 from repro.core.placement import packed_sizes, plan_for_budget
 from repro.models import transformer as tfm
 from repro.parallel.sharding import freeze_for_serving
@@ -88,7 +98,7 @@ STREAMS = (
 )
 
 
-def _build(arch, smoke, budget_frac, seed):
+def _build(arch, smoke, budget_frac, seed, page_bits=None):
     cfg = get_config(arch)
     if smoke:
         cfg = cfg.smoke()
@@ -96,6 +106,8 @@ def _build(arch, smoke, budget_frac, seed):
     packed = freeze_for_serving(params, bits=8)
     sizes = packed_sizes(packed)
     plan = plan_for_budget(sizes, int(sum(sizes.values()) * budget_frac))
+    if page_bits is not None:
+        plan = plan.with_page_bits(page_bits)
     return cfg, packed, plan
 
 
@@ -115,10 +127,11 @@ def _tenant_reqs(cfg, args, salt):
 def _bench_multi(args, tracer=None):
     """Two tenants, one MultiScheduler, one SharedPagePool budget."""
     tenants = {args.arch: _build(args.arch, args.smoke,
-                                 args.budget_frac, seed=0)}
+                                 args.budget_frac, seed=0,
+                                 page_bits=args.page_bits)}
     name2 = args.arch2 if args.arch2 != args.arch else args.arch2 + "#2"
     tenants[name2] = _build(args.arch2, args.smoke, args.budget_frac,
-                            seed=1)
+                            seed=1, page_bits=args.page_bits)
     cold = sum(plan.paged_bytes(packed_sizes(packed))
                for _c, packed, plan in tenants.values())
     budget = max(int(cold * args.shared_budget_frac), 1)
@@ -145,13 +158,16 @@ def _bench_multi(args, tracer=None):
         # the unified replay covers weight members AND (under --kv-paged)
         # the <name>/kv page tables contending for the same budget
         pred = kv_pass_counters(
-            {name: [p.nbytes for p in ms.model(name).engine.pager.pages]
+            {name: page_sizes(ms.model(name).engine.pager.pages)
              for name in tenants
              if ms.model(name).engine.pager is not None},
             ms.pool.budget_bytes, events=ms.pool.events)
+        pool_models = doc["shared_pool"]["models"]
         pred_ok = all(
-            all(doc["shared_pool"]["models"][m][k] == pred[m][k]
+            all(pool_models[m][k] == pred[m][k]
                 for k in ("swaps", "misses", "pool_hits", "evicted"))
+            and pool_models[m]["bytes_streamed_wire"] == pred[m]["bytes_wire"]
+            and pool_models[m]["bytes_streamed_raw"] == pred[m]["bytes_raw"]
             for m in pred)
 
     exact_ok = True
@@ -335,6 +351,14 @@ def main(argv=None):
     ap.add_argument("--budget-frac", type=float, default=0.5,
                     help="resident budget as a fraction of the packed "
                          "store (the §II-B2 pressure knob)")
+    ap.add_argument("--page-bits", type=int, default=None,
+                    choices=(2, 4, 8),
+                    help="stream cold pages ENCODED (blockwise intN "
+                         "payload + scales, dequantized at fetch) instead "
+                         "of the packed device format; with the bench's "
+                         "int8 store, --page-bits 8 is the zero-decode "
+                         "identity whose wire/raw ratio the bench gates "
+                         "at <= 0.3 (>= 3.5x vs fp32 dense)")
     ap.add_argument("--shared-budget-frac", type=float, default=0.6,
                     help="SharedPagePool budget as a fraction of the "
                          "tenants' combined cold bytes (the cross-model "
@@ -380,7 +404,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg, packed, plan = _build(args.arch, args.smoke, args.budget_frac,
-                               seed=0)
+                               seed=0, page_bits=args.page_bits)
     sizes = packed_sizes(packed)
     budget = int(sum(sizes.values()) * args.budget_frac)
     print(plan.summary(sizes))
@@ -420,6 +444,17 @@ def main(argv=None):
     if args.kv_paged:
         assert summary["paging"]["kv_swaps"] > 0, "no KV blocks streamed"
         assert summary["paging"]["kv_writebacks"] > 0
+    if args.page_bits is not None and eng.pager is not None:
+        # the compression acceptance gate: encoded cold pages must
+        # actually shrink the link traffic relative to fp32 dense
+        wire = summary["paging"]["bytes_streamed_wire"]
+        raw = summary["paging"]["bytes_streamed_raw"]
+        assert wire > 0 and raw > 0, "encoded paging streamed no bytes"
+        if args.page_bits == 8:
+            assert wire / raw <= 0.3, \
+                f"int8 pages wire/raw {wire / raw:.3f} exceeds 0.3"
+            assert raw / wire >= 3.5, \
+                f"int8 pages compress only {raw / wire:.2f}x (< 3.5x)"
     if args.kv_paged and args.smoke:
         # KV paging must change WHERE cache rows live, never the tokens:
         # re-serve the same traffic on the resident-KV engine and compare
@@ -464,6 +499,28 @@ def main(argv=None):
         tick_overhead = dict(thread_cached_us=cached_us,
                              thread_rebuild_us=rebuild_us,
                              speedup=rebuild_us / max(cached_us, 1e-9))
+    page_decode = None
+    if eng.pager is not None:
+        # satellite micro-bench: fetch-side page decode (unpack intN ->
+        # blockwise dequant -> requantize -> repack for re-encoded pages;
+        # a passthrough for fp/identity encodings).  Host-side numpy only,
+        # the cost the streaming pipeline pays per parameter per swap.
+        import time as _time
+        host = list(eng.pager._host.items())
+        reps = 5
+        t0 = _time.perf_counter()
+        for _ in range(reps):
+            for _name, hp in host:
+                hp.decode()
+        decode_us = ((_time.perf_counter() - t0)
+                     / max(reps * len(host), 1) * 1e6)
+        page_decode = dict(
+            decode_us_per_param=decode_us, params=len(host),
+            encoding=("fp" if args.page_bits is None
+                      else f"int{args.page_bits}"),
+            decode_s_in_run=eng.pager.decode_s,
+            bytes_streamed_wire=eng.pager.bytes_streamed_wire,
+            bytes_streamed_raw=eng.pager.bytes_streamed_raw)
     if eng.pager is not None:
         eng.pager.close()
     if eng.kv_table is not None:
@@ -490,6 +547,7 @@ def main(argv=None):
     multi_doc, multi_cfg = _bench_multi(args, tracer=tracer)
     multi_doc["single_model"] = summary
     multi_doc["tick_overhead"] = tick_overhead
+    multi_doc["page_decode"] = page_decode
     xr = (None if args.no_xr_gate
           else _bench_xr_gate(cfg, packed, plan, args, tracer=tracer))
     multi_doc["xr_gate"] = xr
@@ -501,6 +559,7 @@ def main(argv=None):
                                kv_paged=args.kv_paged,
                                kv_block=args.kv_block,
                                token_budget=args.token_budget,
+                               page_bits=args.page_bits,
                                tick_ms=args.tick_ms,
                                xr_requests=args.xr_requests,
                                # the solo leg serves on the WALL clock, so
@@ -541,6 +600,17 @@ def main(argv=None):
               f";kv_dropped={pg['kv_dropped']}"
               f";kv_exposed_ms={pg['kv_exposed_s'] * 1e3:.2f}"
               f";kv_hidden_ms={pg['kv_hidden_s'] * 1e3:.2f}")
+    if page_decode is not None:
+        pd = page_decode
+        ratio = (pd["bytes_streamed_raw"] / pd["bytes_streamed_wire"]
+                 if pd["bytes_streamed_wire"] else 1.0)
+        print(f"serving_page_decode,{pd['decode_us_per_param']:.2f},"
+              f"encoding={pd['encoding']}"
+              f";params={pd['params']}"
+              f";decode_ms_in_run={pd['decode_s_in_run'] * 1e3:.2f}"
+              f";wire_bytes={pd['bytes_streamed_wire']}"
+              f";raw_bytes={pd['bytes_streamed_raw']}"
+              f";compression={ratio:.2f}x")
     if "thread_cached_us" in tick_overhead:
         print(f"serving_thread_cache,{tick_overhead['thread_cached_us']:.2f},"
               f"rebuild_us={tick_overhead['thread_rebuild_us']:.2f}"

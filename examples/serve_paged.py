@@ -125,8 +125,9 @@ def main():
     prompts = [rng.integers(0, scfg.vocab_size, 6 + uid).astype(np.int32)
                for uid in range(4)]
 
-    def serve(plan, paged, async_io=True):
-        eng = ServingEngine(scfg, spacked, batch_slots=2, max_len=64,
+    def serve(plan, paged, async_io=True, tree=None):
+        eng = ServingEngine(scfg, spacked if tree is None else tree,
+                            batch_slots=2, max_len=64,
                             plan=plan)
         if paged:
             eng.attach_paging()
@@ -150,6 +151,36 @@ def main():
           f"behind compute; sync path stalled "
           f"{seng.paging_stall_s*1e3:.1f} ms) — tokens bit-exact vs sync "
           f"and vs the fully resident plan")
+
+    # ENCODED pages (repro.launch.serve --page-bits): the same cold set
+    # streamed as blockwise-quantized intN payload + scales, dequantized
+    # at fetch.  page_bits == store bits (int8 here) is the zero-decode
+    # identity — tokens stay bit-exact while the wire traffic drops ~4x
+    # vs the fp32-dense equivalent the raw ledger counts.
+    q8, qeng, _ = serve(splan.with_page_bits(8), paged=True)
+    assert q8 == resident
+    wire = qeng.pager.bytes_streamed_wire
+    raw = qeng.pager.bytes_streamed_raw
+    print(f"  encoded pages (int8 wire): {wire} B streamed for {raw} B "
+          f"fp32-dense raw ({raw/max(wire,1):.1f}x compression), tokens "
+          f"bit-exact vs resident")
+
+    # a NARROWER wire encoding (int4 pages under an int8 store) is lossy
+    # but deterministic: serving it equals serving a resident tree whose
+    # cold weights took the same encode->decode round trip.
+    from repro.core.paging import (packed_tree_store, page_roundtrip_param,
+                                   thread_packed)
+    qplan4 = splan.with_page_bits(4)
+    store4 = packed_tree_store(spacked, qplan4)
+    rt = {n: page_roundtrip_param(p, 4) for n, p in store4.params.items()
+          if qplan4.placement_for(n).paged}
+    q4, _, _ = serve(qplan4, paged=True)
+    want4, _, _ = serve(PlacementPlan.uniform(), paged=False,
+                        tree=thread_packed(spacked, rt))
+    assert q4 == want4
+    print(f"  encoded pages (int4 wire, lossy): {len(rt)} cold params "
+          f"round-tripped; tokens bit-exact vs the round-tripped "
+          f"resident reference")
     print("serve_paged OK")
 
 

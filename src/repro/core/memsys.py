@@ -333,6 +333,30 @@ def kv_stream_bytes(valid_rows: int, block_rows: int,
     return (valid_rows // block_rows) * block_rows * row_bytes
 
 
+def encoded_wire_bytes(rows: int, k: int, page_bits: int,
+                       block: int = 32) -> int:
+    """Closed-form wire bytes of one (rows, k) weight tensor crossing the
+    host->device link under the intN page encoding of
+    :mod:`repro.core.paging`: packed levels at ``page_bits`` per weight
+    (byte-aligned per row, like an MRAM row) plus one float32 scale per
+    (row, block) group — the per-block scales travel *inside* the page
+    payload, so they are wire bytes, not a side channel.
+
+    This is the §II-B2 swap-term model for encoded pages: wire bytes (not
+    the device-resident packed form, not the fp32-dense-equivalent "raw"
+    bytes) divided by the swap bandwidth is what the StallModel charges
+    per page.  Tests assert the runtime codec's actual buffer sizes equal
+    this closed form.
+    """
+    if rows < 0 or k < 0:
+        raise ValueError("rows and k must be >= 0")
+    if block < 1:
+        raise ValueError(f"block must be >= 1, got {block}")
+    payload = rows * (-(-k * page_bits // 8))
+    scales = rows * (-(-k // block)) * 4
+    return payload + scales
+
+
 Scenarios = Union[str, Sequence[str], PlacementPlan]
 
 

@@ -37,15 +37,84 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tupl
 import jax
 import numpy as np
 
-from repro.core.placement import PlacementPlan, path_key
+from repro.core import packing, quantize
+from repro.core.placement import Placement, PlacementPlan, path_key
 from repro.core.weight_store import WeightStore, PackedParam, SIRACUSA_MRAM_BYTES
+
+# Scale-group width of the intN page wire codec (weights per f32 scale).
+PAGE_ENC_BLOCK = quantize.PAGE_SCALE_BLOCK
 
 
 @dataclasses.dataclass(frozen=True)
 class Page:
+    """One unit of host->device streaming.
+
+    A page's "bytes" are deliberately NOT one number:
+
+      * ``nbytes``      — *device* bytes: the packed device-format payload
+        the page occupies while cached (what the pool budget charges);
+      * ``wire_nbytes`` — *wire* bytes: what actually crosses the
+        host->device link per swap — the encoded payload plus the scales
+        that travel with it (drives stall predictions);
+      * ``raw_nbytes``  — the fp32-dense-equivalent bytes an *unencoded*
+        fp stream would have moved (``== wire_nbytes`` for the ``"fp"``
+        encoding, which declares no compression).
+
+    ``encoding`` is the wire encoding shared by every param on the page
+    (:attr:`repro.core.placement.Placement.page_encoding`); mixed
+    encodings never share a page, so scales stay with their payload.
+    """
     index: int
     param_names: Tuple[str, ...]
     nbytes: int
+    wire_nbytes: Optional[int] = None
+    raw_nbytes: Optional[int] = None
+    encoding: str = "fp"
+
+    def __post_init__(self):
+        if self.wire_nbytes is None:
+            object.__setattr__(self, "wire_nbytes", self.nbytes)
+        if self.raw_nbytes is None:
+            object.__setattr__(self, "raw_nbytes", self.wire_nbytes)
+
+
+def page_sizes(pages: Sequence[Page]) -> List[Tuple[int, int, int]]:
+    """``[(device, wire, raw), ...]`` byte triples in page order — the
+    form the counter-prediction replays (:func:`shared_pass_counters` /
+    :func:`kv_pass_counters`) take so their byte counters are exact in
+    wire bytes while admission still charges device bytes."""
+    return [(p.nbytes, p.wire_nbytes, p.raw_nbytes) for p in pages]
+
+
+def _param_page_sizes(p: PackedParam, placement: Optional[Placement]
+                      ) -> Tuple[str, int, int, int]:
+    """(encoding, device, wire, raw) bytes for one paged param.
+
+    Device bytes are the packed device payload (the pool-budget
+    convention shared with ``plan_for_budget``'s resident accounting).
+    Wire bytes add the scales — per-channel for the verbatim/identity
+    encodings, per-block for a re-encoded page (the closed form
+    :func:`repro.core.memsys.encoded_wire_bytes`).  Raw bytes are the
+    fp32 dense equivalent for intN encodings and equal wire for fp.
+    """
+    dev = p.nbytes_packed
+    n_weights = 1
+    for d in p.orig_shape:
+        n_weights *= int(d)
+    enc = placement.page_encoding if placement is not None else "fp"
+    page_bits = placement.page_bits if placement is not None else None
+    scale_nb = int(np.prod(p.scale.shape)) * 4
+    if page_bits is None or page_bits == p.bits:
+        # verbatim device-format stream (fp), or run-quantized identity:
+        # the wire form IS the device form (+ its per-channel scales)
+        wire = dev + scale_nb
+        raw = wire if page_bits is None else n_weights * 4
+        return enc, dev, wire, raw
+    from repro.core.memsys import encoded_wire_bytes
+    rows = n_weights // int(p.orig_shape[-1])
+    wire = encoded_wire_bytes(rows, int(p.orig_shape[-1]), page_bits,
+                              PAGE_ENC_BLOCK)
+    return enc, dev, wire, n_weights * 4
 
 
 def build_pages(store: WeightStore, page_bytes: int = SIRACUSA_MRAM_BYTES,
@@ -59,27 +128,46 @@ def build_pages(store: WeightStore, page_bytes: int = SIRACUSA_MRAM_BYTES,
 
     When ``plan`` is given, only its ``paged`` parameters are paginated;
     the plan's resident hot set stays pinned outside the page cache (the
-    §II-B2 split between live MRAM contents and background pages).
+    §II-B2 split between live MRAM contents and background pages).  Each
+    param's placement also fixes its wire *encoding*; params of different
+    encodings never share a page (a page is decoded as one unit, and its
+    scales travel inside its payload), so an encoding change closes the
+    current page even when bytes would still fit.
     """
     names = list(order) if order is not None else list(store.params.keys())
     if plan is not None:
         names = [n for n in names if plan.placement_for(n).paged]
     pages: List[Page] = []
     cur: List[str] = []
-    cur_bytes = 0
+    cur_dev = cur_wire = cur_raw = 0
+    cur_enc = "fp"
+
+    def _close():
+        nonlocal cur, cur_dev, cur_wire, cur_raw
+        pages.append(Page(len(pages), tuple(cur), cur_dev, cur_wire,
+                          cur_raw, cur_enc))
+        cur, cur_dev, cur_wire, cur_raw = [], 0, 0, 0
+
     for name in names:
-        nb = store.params[name].nbytes_packed
-        if nb > page_bytes:
+        placement = plan.placement_for(name) if plan is not None else None
+        enc, dev, wire, raw = _param_page_sizes(store.params[name],
+                                                placement)
+        if dev > page_bytes:
+            where = (f"plan path {name!r} -> {placement.scenario}/"
+                     f"{placement.weight_bits}b/{enc}" if placement
+                     is not None else f"param {name!r} ({enc})")
             raise ValueError(
-                f"param {name} ({nb} B packed) exceeds page size {page_bytes} B; "
-                f"increase page size or split the parameter")
-        if cur and cur_bytes + nb > page_bytes:
-            pages.append(Page(len(pages), tuple(cur), cur_bytes))
-            cur, cur_bytes = [], 0
+                f"{where}: {dev} B packed exceeds page size {page_bytes} B;"
+                f" set page_bytes >= {dev} or split the parameter")
+        if cur and (cur_dev + dev > page_bytes or enc != cur_enc):
+            _close()
         cur.append(name)
-        cur_bytes += nb
+        cur_enc = enc
+        cur_dev += dev
+        cur_wire += wire
+        cur_raw += raw
     if cur:
-        pages.append(Page(len(pages), tuple(cur), cur_bytes))
+        _close()
     return pages
 
 
@@ -94,9 +182,11 @@ class PageScheduleEntry:
 class StallModel:
     """Analytical stall accounting for a paged execution.
 
-    swap_time(page)   = page.nbytes / swap_bandwidth
-    compute_time(page) given by the caller per page;  a swap started at the
-    beginning of page k's compute hides min(compute_k, swap_{k+1}).
+    swap_time(page)   = page.wire_nbytes / swap_bandwidth — the link moves
+    the page's *wire* form (encoded payload + scales), not its decoded
+    device footprint, so a compressed cold page stalls ~bits/32 of its fp
+    cost.  compute_time(page) given by the caller per page; a swap started
+    at the beginning of page k's compute hides min(compute_k, swap_{k+1}).
     """
     swap_bandwidth_bytes_per_s: float
 
@@ -107,9 +197,9 @@ class StallModel:
         total_compute = float(sum(compute_time_s))
         stall = 0.0
         # first page: cold miss, full swap cost
-        stall += pages[0].nbytes / self.swap_bandwidth_bytes_per_s
+        stall += pages[0].wire_nbytes / self.swap_bandwidth_bytes_per_s
         for k in range(1, len(pages)):
-            swap = pages[k].nbytes / self.swap_bandwidth_bytes_per_s
+            swap = pages[k].wire_nbytes / self.swap_bandwidth_bytes_per_s
             stall += overlap_stall(swap, compute_time_s[k - 1])["exposed_s"]
         return dict(total_compute_s=total_compute, stall_s=stall,
                     total_s=total_compute + stall,
@@ -194,10 +284,11 @@ class SharedPagePool:
         self.budget_bytes = int(budget_bytes)
         self.members: "OrderedDict[str, HostPagedStore]" = OrderedDict()
         self._lock = threading.RLock()
-        # (model, page) -> (nbytes, {name: PackedParam}); insertion/touch
-        # order IS the LRU order (front = coldest)
-        self._cache: "OrderedDict[Tuple[str, int], Tuple[int, Dict[str, PackedParam]]]" = OrderedDict()
-        self.live_bytes = 0
+        # (model, page) -> (nbytes, wire_nbytes, {name: PackedParam});
+        # insertion/touch order IS the LRU order (front = coldest)
+        self._cache: "OrderedDict[Tuple[str, int], Tuple[int, int, Dict[str, PackedParam]]]" = OrderedDict()
+        self.live_bytes = 0           # device bytes held (what budget charges)
+        self.live_wire_bytes = 0      # wire bytes those pages cost to re-swap
         self.counters: Dict[str, Dict[str, Any]] = {}
         # every member event in BEGIN order — which, because all member
         # fetches funnel through the single worker below, is also the
@@ -270,19 +361,30 @@ class SharedPagePool:
                 return None
             self._cache.move_to_end(key)
             self.counters[name]["pool_hits"] += 1
-            return entry[1]
+            return entry[2]
 
     def admit(self, name: str, page_idx: int, nbytes: int,
-              params: Dict[str, PackedParam]) -> None:
+              params: Dict[str, PackedParam],
+              wire_nbytes: Optional[int] = None,
+              raw_nbytes: Optional[int] = None) -> None:
         """Cache a freshly swapped page under the shared budget, evicting
         other models' LRU pages to make room.  If the budget cannot fit
         the page even after evicting every foreign page (the fetching
         model's own pages are protected), the page is simply not cached —
         it lives only as long as the pass's live window references it, and
-        the next access swaps again."""
+        the next access swaps again.
+
+        ``nbytes`` is the page's decoded *device* footprint — what the
+        budget charges and eviction frees.  ``wire_nbytes`` (default:
+        ``nbytes``) is what the swap moved across the link; the pool only
+        tracks it (``live_wire_bytes``, the ``pool_bytes`` trace counter)
+        — admission decisions never depend on it.  ``raw_nbytes`` is
+        accepted for signature symmetry with the :class:`Page` ledger."""
+        del raw_nbytes               # per-member ledgers live in the stores
         with self._lock:
             if nbytes > self.budget_bytes:
                 return              # can NEVER fit: don't flush co-tenants
+            wire = int(wire_nbytes) if wire_nbytes is not None else nbytes
             tr = self.tracer
             for key in list(self._cache.keys()):
                 if self.live_bytes + nbytes <= self.budget_bytes:
@@ -293,17 +395,20 @@ class SharedPagePool:
                     # overlapped pass is still mid-fetch — keep their live
                     # window intact
                     continue
-                freed, _ = self._cache.pop(key)
+                freed, freed_wire, _ = self._cache.pop(key)
                 self.live_bytes -= freed
+                self.live_wire_bytes -= freed_wire
                 self.counters[victim_model]["evicted"] += 1
                 if tr is not None:
                     tr.instant("evict", track="io", model=victim_model,
                                page=victim_page, nbytes=freed, by=name)
             if self.live_bytes + nbytes <= self.budget_bytes:
-                self._cache[(name, page_idx)] = (nbytes, params)
+                self._cache[(name, page_idx)] = (nbytes, wire, params)
                 self.live_bytes += nbytes
+                self.live_wire_bytes += wire
             if tr is not None:
-                tr.counter("pool_bytes", track="io", bytes=self.live_bytes)
+                tr.counter("pool_bytes", track="io", bytes=self.live_bytes,
+                           wire_bytes=self.live_wire_bytes)
 
     def invalidate(self, name: str, page_idx: int) -> bool:
         """Drop ``name``'s cached page (owner-initiated, e.g. a KV block
@@ -316,9 +421,11 @@ class SharedPagePool:
             if entry is None:
                 return False
             self.live_bytes -= entry[0]
+            self.live_wire_bytes -= entry[1]
             if self.tracer is not None:
                 self.tracer.counter("pool_bytes", track="io",
-                                    bytes=self.live_bytes)
+                                    bytes=self.live_bytes,
+                                    wire_bytes=self.live_wire_bytes)
             return True
 
     def add_stall(self, name: str, exposed_s: float,
@@ -331,12 +438,16 @@ class SharedPagePool:
             self.counters[name]["hidden_s"] += float(hidden_s)
 
     def summary(self) -> Dict[str, Any]:
-        """Per-model swap/miss/pool-hit/evict counters plus the
-        exposed/hidden stall split + pool state — the ``shared_pool``
-        section of the metrics/v6 JSON.  The stall seconds here are the
-        pool's per-model *view* of the same wall time the engines report
-        in their own ``paging`` sections; totals must sum ONE of the two,
-        never both."""
+        """Per-model swap/miss/pool-hit/evict counters, the wire/raw
+        streamed-bytes ledger, and the exposed/hidden stall split + pool
+        state — the ``shared_pool`` section of the metrics/v7 JSON.  The
+        stall seconds here are the pool's per-model *view* of the same
+        wall time the engines report in their own ``paging`` sections;
+        totals must sum ONE of the two, never both.  ``bytes_streamed_*``
+        are the member stores' own swap ledgers (wire = what crossed the
+        link, raw = the fp32-equivalent an unencoded stream would have
+        moved), surfaced here so one summary shows every tenant's
+        compression ratio against one budget."""
         with self._lock:
             models = {}
             for name, store in self.members.items():
@@ -345,12 +456,21 @@ class SharedPagePool:
                     swaps=store.swap_count, misses=store.miss_count,
                     pool_hits=c["pool_hits"], evicted=c["evicted"],
                     exposed_s=c["exposed_s"], hidden_s=c["hidden_s"],
-                    n_pages=len(store.pages))
+                    n_pages=len(store.pages),
+                    bytes_streamed_wire=getattr(store, "bytes_streamed_wire",
+                                                0),
+                    bytes_streamed_raw=getattr(store, "bytes_streamed_raw",
+                                               0))
             return dict(
                 budget_bytes=self.budget_bytes,
                 live_bytes=self.live_bytes,
+                live_wire_bytes=self.live_wire_bytes,
                 cached_pages=len(self._cache),
                 evictions=sum(c["evicted"] for c in self.counters.values()),
+                bytes_streamed_wire=sum(m["bytes_streamed_wire"]
+                                        for m in models.values()),
+                bytes_streamed_raw=sum(m["bytes_streamed_raw"]
+                                       for m in models.values()),
                 models=models)
 
     def close(self, wait: bool = True) -> None:
@@ -358,6 +478,7 @@ class SharedPagePool:
             members = list(self.members.values())
             self._cache.clear()
             self.live_bytes = 0
+            self.live_wire_bytes = 0
         for store in members:
             store.close(wait=wait)
         self._exec.shutdown(wait=wait, cancel_futures=not wait)
@@ -377,7 +498,10 @@ def shared_pass_counters(page_nbytes: Dict[str, Sequence[int]],
     """Static per-model counter prediction for SharedPagePool streaming.
 
     ``page_nbytes`` maps each model name to its page sizes in access
-    order; ``passes`` is the exact sequence of full streaming passes (one
+    order — plain device-byte ints, or ``(device, wire, raw)`` triples
+    (:func:`page_sizes`) to also predict each model's streamed
+    ``bytes_wire``/``bytes_raw`` ledger exactly; ``passes`` is the exact
+    sequence of full streaming passes (one
     entry per model tick, e.g. ``MultiScheduler.pass_log``), defaulting to
     ``ticks`` round-robin rounds over the models in dict order.  The
     actual replay — demand/prefetch fetch order per :func:`make_schedule`,
@@ -395,10 +519,103 @@ def shared_pass_counters(page_nbytes: Dict[str, Sequence[int]],
                            resident_slots=resident_slots)
     for m in order:
         out.setdefault(m, dict(swaps=0, misses=0, pool_hits=0, evicted=0,
-                               dropped=0))
+                               dropped=0, bytes_wire=0, bytes_raw=0))
     # weight passes never drop pages; keep the historical key set
     return {m: {k: n for k, n in c.items() if k != "dropped"}
             for m, c in out.items()}
+
+
+@dataclasses.dataclass
+class HostParam:
+    """Host-side ("background flash") image of ONE paged parameter, held
+    in its page *wire* encoding.
+
+    Two regimes, chosen by :attr:`identity`:
+
+      * **identity** — ``page_bits`` is None (``"fp"``: stream the device
+        format verbatim) or equals the param's own ``bits`` (the
+        run-quantized case: the wire form IS the device form).  The
+        payload is the device packed carrier, the scales the per-channel
+        device scales; decode is a no-op.
+      * **re-encoded** — the host keeps only blockwise-quantized
+        ``page_bits`` levels (packed) + per-(row, ``PAGE_ENC_BLOCK``)
+        f32 scales; :meth:`decode` reconstructs the per-channel device
+        format at fetch: dequantize the blocks, re-quantize per channel
+        at ``bits``, re-pack.  The round trip is deterministic, so a
+        paged serve is bit-exact against a resident engine whose weights
+        took the same trip (:func:`page_roundtrip_param`).
+    """
+    bits: int                         # device weight bits
+    orig_shape: Tuple[int, ...]
+    packed_shape: Tuple[int, ...]     # device carrier shape to rebuild
+    scale_shape: Tuple[int, ...]      # device per-channel scale shape
+    page_bits: Optional[int]          # wire bits (None = fp/verbatim)
+    payload: np.ndarray
+    scales: np.ndarray
+
+    @property
+    def identity(self) -> bool:
+        return self.page_bits is None or self.page_bits == self.bits
+
+    @property
+    def encoding(self) -> str:
+        return "fp" if self.page_bits is None else f"int{self.page_bits}"
+
+    @property
+    def wire_nbytes(self) -> int:
+        return int(self.payload.nbytes) + int(self.scales.nbytes)
+
+    def decode(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Wire form -> device form ``(packed, scale)``, host-side.
+
+        Identity encodings return the stored buffers untouched (zero
+        decode cost — the fetch path device_puts them directly)."""
+        if self.identity:
+            return self.payload, self.scales
+        k = int(self.orig_shape[-1])
+        levels = np.asarray(packing.unpack(self.payload, self.page_bits, k))
+        dense = quantize.dequantize_blockwise(levels, self.scales,
+                                              block=PAGE_ENC_BLOCK)
+        qt = quantize.quantize_weights(dense, self.bits, channel_axis=0)
+        packed = np.asarray(packing.pack(qt.values, self.bits))
+        return (packed.reshape(self.packed_shape),
+                np.asarray(qt.scale, np.float32).reshape(self.scale_shape))
+
+
+def encode_host_param(p: PackedParam, page_bits: Optional[int]) -> HostParam:
+    """Evacuate one paged param to its host wire image (see
+    :class:`HostParam`).  For a re-encoded param the dense weights are
+    reconstructed once (host-side, at store build) and blockwise-quantized
+    to ``page_bits``; the original device carrier is NOT retained — the
+    host truly holds only the compressed bytes the wire will move."""
+    packed = np.asarray(p.packed)
+    scale = np.asarray(p.scale)
+    hp = HostParam(bits=p.bits, orig_shape=tuple(p.orig_shape),
+                   packed_shape=tuple(packed.shape),
+                   scale_shape=tuple(scale.shape),
+                   page_bits=page_bits, payload=packed, scales=scale)
+    if hp.identity:
+        return hp
+    k = int(p.orig_shape[-1])
+    levels = np.asarray(packing.unpack(packed.reshape(-1, packed.shape[-1]),
+                                       p.bits, k), np.float32)
+    dense = levels * scale.reshape(-1, 1).astype(np.float32)
+    wire_levels, wire_scales = quantize.quantize_blockwise(
+        dense, page_bits, block=PAGE_ENC_BLOCK)
+    hp.payload = np.asarray(packing.pack(wire_levels, page_bits))
+    hp.scales = wire_scales
+    return hp
+
+
+def page_roundtrip_param(p: PackedParam, page_bits: Optional[int]
+                         ) -> PackedParam:
+    """One param encode->decode through the page wire codec — the exact
+    transform :meth:`HostPagedStore._fetch_page` applies, exposed so a
+    *resident* reference engine can pre-distort its weights identically
+    and a lossy-encoded paged serve becomes bit-exact against it."""
+    packed, scale = encode_host_param(p, page_bits).decode()
+    return PackedParam(packed=packed, scale=scale, bits=p.bits,
+                       orig_shape=tuple(p.orig_shape))
 
 
 class HostPagedStore:
@@ -408,7 +625,13 @@ class HostPagedStore:
 
     With a ``plan``, the plan's resident parameters are uploaded once and
     stay pinned in ``self.resident`` (the live MRAM image); only the paged
-    parameters flow through the page cache.
+    parameters flow through the page cache — each held host-side in its
+    plan-assigned wire encoding (:class:`HostParam`) and decoded back to
+    the device format at fetch, so a quantized cold page crosses the link
+    compressed.  ``bytes_streamed_wire`` / ``bytes_streamed_raw``
+    accumulate per swap what the link moved vs the fp32-equivalent an
+    unencoded stream would have moved; ``decode_s`` is the cumulative
+    fetch-side decode wall time.
 
     With a ``pool`` (:class:`SharedPagePool`), the store *joins* a shared
     device-bytes budget under ``name``: every fetched page is admitted to
@@ -427,8 +650,8 @@ class HostPagedStore:
         self.name = name
         self.pages = build_pages(store, page_bytes, plan=plan)
         self.device = device or jax.devices()[0]
-        # evacuate packed params to host numpy (off-chip flash image)
-        self._host: Dict[str, Tuple[np.ndarray, np.ndarray, PackedParam]] = {}
+        # evacuate packed params to the host wire image (off-chip flash)
+        self._host: Dict[str, HostParam] = {}
         self.resident: Dict[str, PackedParam] = {}
         for name, p in store.params.items():
             if plan is not None and not plan.placement_for(name).paged:
@@ -437,11 +660,15 @@ class HostPagedStore:
                     scale=jax.device_put(p.scale, self.device),
                     bits=p.bits, orig_shape=p.orig_shape)
             else:
-                self._host[name] = (np.asarray(p.packed), np.asarray(p.scale),
-                                    p)
+                pb = (plan.placement_for(name).page_bits
+                      if plan is not None else None)
+                self._host[name] = encode_host_param(p, pb)
         self._pool = ThreadPoolExecutor(max_workers=1)
         self.swap_count = 0
         self.miss_count = 0
+        self.bytes_streamed_wire = 0
+        self.bytes_streamed_raw = 0
+        self.decode_s = 0.0
         self._live: Dict[int, Dict[str, PackedParam]] = {}
         # opt-in chrome-trace hook (ServingEngine.set_tracer): per-page
         # fetch spans on the "io" track, emitted from the fetch worker
@@ -467,20 +694,29 @@ class HostPagedStore:
                     tr.complete("page", tr.now() - t0, track="io",
                                 model=self.name, page=idx, pool_hit=True)
                 return cached
+        page = self.pages[idx]
         out = {}
-        for name in self.pages[idx].param_names:
-            hp, hs, proto = self._host[name]
+        for name in page.param_names:
+            hp = self._host[name]
+            t_dec = time.perf_counter()
+            packed, scale = hp.decode()
+            self.decode_s += time.perf_counter() - t_dec
             out[name] = PackedParam(
-                packed=jax.device_put(hp, self.device),
-                scale=jax.device_put(hs, self.device),
-                bits=proto.bits, orig_shape=proto.orig_shape)
+                packed=jax.device_put(packed, self.device),
+                scale=jax.device_put(scale, self.device),
+                bits=hp.bits, orig_shape=hp.orig_shape)
         self.swap_count += 1
+        self.bytes_streamed_wire += page.wire_nbytes
+        self.bytes_streamed_raw += page.raw_nbytes
         if self.pool is not None:
-            self.pool.admit(self.name, idx, self.pages[idx].nbytes, out)
+            self.pool.admit(self.name, idx, page.nbytes, out,
+                            wire_nbytes=page.wire_nbytes,
+                            raw_nbytes=page.raw_nbytes)
         if tr is not None:
             tr.complete("page", tr.now() - t0, track="io", model=self.name,
-                        page=idx, nbytes=self.pages[idx].nbytes,
-                        pool_hit=False)
+                        page=idx, nbytes=page.nbytes,
+                        wire_nbytes=page.wire_nbytes,
+                        encoding=page.encoding, pool_hit=False)
         return out
 
     def stream(self, resident_slots: int = 2) -> "PageStream":
@@ -826,6 +1062,10 @@ class KVPageTable:
         self.swap_count = 0
         self.miss_count = 0
         self.pool_hits = 0
+        # KV rows stream in their device format ("fp" page encoding):
+        # wire == raw == device bytes, so the ledger shows ratio 1.0
+        self.bytes_streamed_wire = 0
+        self.bytes_streamed_raw = 0
         self.writebacks = 0          # blocks written back host-ward
         self.dropped = 0             # pooled blocks invalidated (slot reuse)
         self.preempt_drops = 0       # of which: mid-request preemptions
@@ -879,9 +1119,11 @@ class KVPageTable:
             v=jax.device_put(self.host["v"][:, slot, :, a:b], self.device))
         self.swap_count += 1
         self.miss_count += 1
+        nb = (b - a) * self.row_nbytes
+        self.bytes_streamed_wire += nb
+        self.bytes_streamed_raw += nb
         if self.pool is not None:
-            self.pool.admit(self.name, page_idx,
-                            (b - a) * self.row_nbytes, rows)
+            self.pool.admit(self.name, page_idx, nb, rows)
         if tr is not None:
             tr.complete("kv_block", tr.now() - t0, track="io",
                         model=self.name, page=page_idx,
@@ -1105,8 +1347,15 @@ def kv_pass_counters(page_nbytes: Dict[str, Sequence[int]],
     ``events`` is the pool's :attr:`SharedPagePool.events` log (or a
     pool-less :attr:`KVPageTable.events`); ``page_nbytes`` maps each
     *weight* member to its page sizes in access order (KV batches carry
-    their sizes inline).  ``budget_bytes=None`` models a pool-less table:
-    no cache, every fetch swaps.  Replays the runtime's exact
+    their sizes inline).  Each size is either a plain int (device bytes;
+    wire and raw default to it — the pre-encoding ledger) or a
+    ``(device, wire, raw)`` triple as produced by :func:`page_sizes`:
+    the cache simulation charges *device* bytes (what admission and
+    eviction see) while every replayed swap accumulates *wire*/*raw*
+    bytes into the member's ``bytes_wire``/``bytes_raw`` — so the
+    prediction is exact in wire bytes even when cold pages stream
+    compressed.  ``budget_bytes=None`` models a pool-less table: no
+    cache, every fetch swaps.  Replays the runtime's exact
     lookup/admit/evict/invalidate sequence, so
     :meth:`SharedPagePool.summary` counters (and a private table's
     ``swap_count``) must match member for member.  On a weights-only
@@ -1115,18 +1364,29 @@ def kv_pass_counters(page_nbytes: Dict[str, Sequence[int]],
     live_bytes = 0
     out: Dict[str, Dict[str, int]] = {}
 
+    def sizes3(entry) -> Tuple[int, int, int]:
+        if isinstance(entry, (tuple, list)):
+            dev, wire, raw = entry
+            return int(dev), int(wire), int(raw)
+        nb = int(entry)
+        return nb, nb, nb
+
     def member(m: str) -> Dict[str, int]:
         return out.setdefault(m, dict(swaps=0, misses=0, pool_hits=0,
-                                      evicted=0, dropped=0))
+                                      evicted=0, dropped=0,
+                                      bytes_wire=0, bytes_raw=0))
 
-    def fetch(model: str, idx: int, nb: int) -> None:
+    def fetch(model: str, idx: int, size) -> None:
         nonlocal live_bytes
+        nb, wire, raw = sizes3(size)
         key = (model, idx)
         if budget_bytes is not None and key in cache:
             cache.move_to_end(key)
             member(model)["pool_hits"] += 1
             return
         member(model)["swaps"] += 1
+        member(model)["bytes_wire"] += wire
+        member(model)["bytes_raw"] += raw
         if budget_bytes is None or nb > budget_bytes:
             return                  # mirrors admit's never-fits pre-check
         for victim in list(cache.keys()):
@@ -1155,19 +1415,18 @@ def kv_pass_counters(page_nbytes: Dict[str, Sequence[int]],
                     live.add(e.page)
                 else:
                     m["misses"] += 1
-                    fetch(model, e.page, int(sizes[e.page]))
+                    fetch(model, e.page, sizes[e.page])
                     live.add(e.page)
                 if e.prefetch_next is not None and e.prefetch_next not in live:
                     inflight.add(e.prefetch_next)
-                    fetch(model, e.prefetch_next,
-                          int(sizes[e.prefetch_next]))
+                    fetch(model, e.prefetch_next, sizes[e.prefetch_next])
                 if e.evicts is not None:
                     live.discard(e.evicts)
         elif kind == "kv":
             m = member(model)
             for page, nb in event[2]:
                 before = m["pool_hits"]
-                fetch(model, int(page), int(nb))
+                fetch(model, int(page), nb)
                 if m["pool_hits"] == before:
                     m["misses"] += 1     # every non-pooled KV fetch swaps
         elif kind == "kvdrop":

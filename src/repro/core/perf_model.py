@@ -80,7 +80,8 @@ def mnv2_budget_plan(budget_bytes: int = 2 * 1024 * 1024,
     case is exercised with a smaller budget or fatter weights)."""
     jobs = mobilenet_v2_jobs(weight_bits)
     sizes = {j.name: j.weight_bytes for j in jobs}
-    return plan_for_budget(sizes, budget_bytes, hot=hot, cold=cold)
+    return plan_for_budget(sizes, budget_bytes, hot=hot, cold=cold,
+                           sizes_bits=weight_bits)
 
 
 def mnv2_plan_walk(plan: PlacementPlan, op: OperatingPoint = NOMINAL,

@@ -75,11 +75,23 @@ class ScenarioCost:
 @dataclasses.dataclass(frozen=True)
 class Placement:
     """Where one parameter lives: integration scenario, packed precision,
-    and whether it is MRAM-resident or paged from background memory."""
+    whether it is MRAM-resident or paged from background memory, and — for
+    paged parameters — the *page encoding*: the precision its bytes cross
+    the host->device link at.
+
+    ``page_bits=None`` (the ``"fp"`` encoding) streams the packed device
+    buffers verbatim — bit-exact by construction, today's behaviour.
+    ``page_bits=N`` declares the page logically holds fp weights shipped
+    at N bits: when N equals ``weight_bits`` the wire form *is* the device
+    form (handed straight to the quantized matmul, still bit-exact); when
+    N differs the page is re-encoded with per-block scales
+    (``core.quantize.quantize_blockwise``) and dequantized into the packed
+    device buffer at fetch (lossy second quantization)."""
 
     scenario: str = "l1mram"
     weight_bits: int = 8
     residency: str = "resident"
+    page_bits: Optional[int] = None
 
     def __post_init__(self):
         if self.scenario not in SCENARIOS:
@@ -91,10 +103,19 @@ class Placement:
         if self.weight_bits not in (2, 4, 8):
             raise ValueError(f"weight_bits must be 2/4/8, got "
                              f"{self.weight_bits}")
+        if self.page_bits is not None and self.page_bits not in (2, 4, 8):
+            raise ValueError(f"page_bits must be None or 2/4/8, got "
+                             f"{self.page_bits}")
 
     @property
     def paged(self) -> bool:
         return self.residency == "paged"
+
+    @property
+    def page_encoding(self) -> str:
+        """Wire encoding name derived from ``page_bits``: ``"fp"`` (stream
+        the device form verbatim) or ``"int8"``/``"int4"``/``"int2"``."""
+        return "fp" if self.page_bits is None else f"int{self.page_bits}"
 
 
 # Canonical hot/cold placements for budget planning: hot weights stream
@@ -139,6 +160,18 @@ class PlacementPlan:
 
     def replace(self, **kw) -> "PlacementPlan":
         return dataclasses.replace(self, **kw)
+
+    def with_page_bits(self, page_bits: Optional[int]) -> "PlacementPlan":
+        """Return a copy whose *paged* placements (default and rules) carry
+        ``page_bits`` as their wire encoding; resident placements are left
+        untouched (nothing of theirs crosses the link at serve time)."""
+        def _enc(p: Placement) -> Placement:
+            if not p.paged:
+                return p
+            return dataclasses.replace(p, page_bits=page_bits)
+        return dataclasses.replace(
+            self, default=_enc(self.default),
+            rules=tuple((pat, _enc(p)) for pat, p in self.rules))
 
     # -- lookup -------------------------------------------------------------
     def placement_for(self, path: Optional[str]) -> Placement:
@@ -296,31 +329,51 @@ def plan_for_budget(store: StoreSizes,
                     budget_bytes: int = SIRACUSA_MRAM_BYTES, *,
                     uses: Optional[Mapping[str, float]] = None,
                     hot: Placement = HOT, cold: Placement = COLD,
-                    mode: str = "xla") -> PlacementPlan:
+                    mode: str = "xla", sizes_bits: int = 8) -> PlacementPlan:
     """Pin the highest bytes-used-per-inference parameters resident.
 
     ``store`` is a WeightStore (sizes = packed bytes) or a plain
     {name: nbytes} mapping (e.g. analytical layer weight bytes).  ``uses``
     optionally weights each parameter by how many times its bytes cross the
-    weight port per inference (default 1); the greedy score is
-    ``nbytes * uses`` — the traffic a resident slot saves.
+    weight port per inference (default 1).
+
+    Byte accounting is bits-aware: ``sizes`` are taken to be measured at
+    ``sizes_bits`` per weight (8 for the usual uint8-packed serving tree;
+    a WeightStore carries per-param bits and overrides this).  The budget
+    is charged the *resident* footprint at ``hot.weight_bits`` — an int4
+    hot set at fp/int8 sizes used to over-reserve 2x — while the greedy
+    score is the *wire* traffic a resident slot saves: the param's bytes
+    at the cold placement's page encoding (``cold.page_bits`` falling back
+    to ``cold.weight_bits``) times ``uses``.  Ties on equal score break
+    deterministically by (larger size first, then name), so equal-score
+    plans are stable across dict orderings.
 
     Returns a plan whose rules pin the chosen hot set (exact-path rules,
     ``hot`` placement) and whose default is ``cold`` for everything else.
     """
     sizes = _sizes_of(store)
     uses = uses or {}
+    bits_of = {n: p.bits for n, p in store.params.items()} \
+        if isinstance(store, WeightStore) else {}
+
+    def _at_bits(name: str, bits: int) -> int:
+        """``sizes[name]`` rescaled from its measured bits to ``bits``."""
+        have = bits_of.get(name, sizes_bits)
+        return max(1, -(-sizes[name] * bits // have))
+
+    wire_bits = cold.page_bits or cold.weight_bits
 
     def score(name: str) -> float:
-        return sizes[name] * float(uses.get(name, 1.0))
+        return _at_bits(name, wire_bits) * float(uses.get(name, 1.0))
 
-    order = sorted(sizes, key=lambda n: (-score(n), n))
+    order = sorted(sizes, key=lambda n: (-score(n), -sizes[n], n))
     rules: List[Tuple[str, Placement]] = []
     used = 0
     for name in order:
-        if used + sizes[name] <= budget_bytes:
+        resident_nb = _at_bits(name, hot.weight_bits)
+        if used + resident_nb <= budget_bytes:
             rules.append((name, hot))
-            used += sizes[name]
+            used += resident_nb
     return PlacementPlan(default=cold, rules=tuple(rules), mode=mode)
 
 

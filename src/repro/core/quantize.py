@@ -184,3 +184,60 @@ def dequant_matmul_reference(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
     """Float activations x quantized weights, computed at full precision."""
     w = qt.dequantize()          # (out, in)
     return jnp.matmul(x, w.T)
+
+
+# ---------------------------------------------------------------------------
+# Per-block wire codec — the page encoding of `repro.core.paging`.
+#
+# Cold pages cross the host->device link re-encoded at ``page_bits`` with
+# one scale per (row, block) group instead of one per output channel: the
+# finer scale granularity bounds the second-quantization error when a page
+# is shipped below the plan's compute bits, and the scales travel inside
+# the page payload (they are wire bytes, not a side channel).  These run
+# host-side on numpy — the encode happens once when the host store is
+# built, the decode on every fetch — so they are deliberately *not* jit
+# functions.
+# ---------------------------------------------------------------------------
+
+# Default scale-group width (weights per scale) of the page codec.  32 keeps
+# the scale overhead at 4/32 = 12.5% of an int8 payload while matching the
+# N-EUREKA 32-weight fetch granule.
+PAGE_SCALE_BLOCK = 32
+
+
+def quantize_blockwise(w: np.ndarray, bits: int,
+                       block: int = PAGE_SCALE_BLOCK
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-(row, block) quantization along the last axis.
+
+    Returns ``(levels, scales)`` with ``levels`` int8 of ``w.shape`` and
+    ``scales`` float32 ``(rows, ceil(k / block))``.  A trailing block
+    shorter than ``block`` (k not a multiple of the group width) gets its
+    own scale over just the tail elements.
+    """
+    if block < 1:
+        raise ValueError(f"block must be >= 1, got {block}")
+    qmin, qmax = weight_qrange(bits)
+    w = np.asarray(w, np.float32)
+    if w.ndim != 2:
+        raise ValueError(f"expected a 2-D (rows, k) tensor, got {w.shape}")
+    rows, k = w.shape
+    nblk = -(-k // block)
+    wp = np.pad(w, ((0, 0), (0, nblk * block - k)))
+    groups = wp.reshape(rows, nblk, block)
+    absmax = np.abs(groups).max(axis=2)
+    scales = np.where(absmax > 0, absmax / qmax, 1.0).astype(np.float32)
+    q = np.clip(np.round(groups / scales[:, :, None]), qmin, qmax)
+    levels = q.astype(np.int8).reshape(rows, nblk * block)[:, :k]
+    return levels, scales
+
+
+def dequantize_blockwise(levels: np.ndarray, scales: np.ndarray,
+                         block: int = PAGE_SCALE_BLOCK) -> np.ndarray:
+    """Inverse of :func:`quantize_blockwise`: levels x per-block scales."""
+    levels = np.asarray(levels)
+    rows, k = levels.shape
+    nblk = scales.shape[1]
+    lp = np.pad(levels.astype(np.float32), ((0, 0), (0, nblk * block - k)))
+    out = lp.reshape(rows, nblk, block) * scales[:, :, None].astype(np.float32)
+    return out.reshape(rows, nblk * block)[:, :k]

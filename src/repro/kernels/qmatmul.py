@@ -65,6 +65,34 @@ def _qmatmul_f32_kernel(x_ref, wp_ref, scale_ref, o_ref, *, bits: int, nk: int):
         o_ref[...] = o_ref[...] * scale_ref[...][None, :]
 
 
+def _qmatmul_f32_blockscale_kernel(x_ref, wp_ref, scale_ref, o_ref, *,
+                                   bits: int, block: int):
+    """out[m, n] = sum_k x[m, k] * unpack(wp)[n, k] * scale[n, k // block].
+
+    The per-(channel, block) scales of the page wire encoding
+    (core.quantize.quantize_blockwise) are applied to the unpacked levels
+    *inside* the reduction — the fused "run straight off the wire form"
+    path, so an encoded page never needs decoding into the per-channel
+    device format before compute.  Unlike the per-channel kernel there is
+    no final scale step: each k-block is already fully scaled when it
+    enters the MXU.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)                         # (bm, bk)
+    w = _unpack_block(wp_ref[...], bits).astype(jnp.float32)   # (bn, bk)
+    s = scale_ref[...]                                         # (bn, bk/block)
+    bn, bk = w.shape
+    w = (w.reshape(bn, bk // block, block) * s[:, :, None]).reshape(bn, bk)
+    o_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
 def _qmatmul_int8_kernel(x_ref, wp_ref, mult_ref, bias_ref, o_ref, acc_ref,
                          *, bits: int, nk: int):
     """Integer path with fused requant: uint8 act x packed W -> uint8.
@@ -131,6 +159,54 @@ def qmatmul_f32(x: jax.Array, packed: jax.Array, scale: jax.Array, *,
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bn, bk // f), lambda i, j, kk: (j, kk)),
             pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, sp)
+    return out[:m, :n]
+
+
+def qmatmul_f32_blockscale(x: jax.Array, packed: jax.Array,
+                           scales: jax.Array, *, bits: int, k_orig: int,
+                           block: int = 32, bm: int = 128, bn: int = 128,
+                           bk: int = 512, interpret: bool = False
+                           ) -> jax.Array:
+    """x (M, K) float @ packed (N, K/f) uint8 with per-(N, K/block) scales.
+
+    The wire-encoded page form (packed intN levels + per-block scales)
+    consumed directly — the At-MRAM expansion happens adjacent to the MXU
+    with the *block* scale granularity of the page codec, so a cold page
+    handed to compute run-quantized skips the host-side decode entirely.
+    ``block`` must divide ``bk`` so scale groups align with reduction
+    blocks; K tails shorter than a block are safe because the padded x
+    columns are zero.
+    """
+    f = 8 // bits
+    assert bk % f == 0 and bk % block == 0
+    m, k = x.shape
+    n = packed.shape[0]
+    assert packed.shape[1] * f >= k_orig and k == k_orig
+    assert scales.shape == (n, -(-k_orig // block))
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(packed, 0, bn), 1, bk // f)
+    kp = xp.shape[1]
+    sp = _pad_to(scales.astype(jnp.float32), 0, bn)
+    sp = jnp.pad(sp, ((0, 0), (0, kp // block - sp.shape[1])))
+    mp = xp.shape[0]
+    np_ = wp.shape[0]
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_qmatmul_f32_blockscale_kernel, bits=bits,
+                          block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk // f), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk // block), lambda i, j, kk: (j, kk)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),

@@ -30,8 +30,21 @@ the tick (``--sync-io`` restores the blocking stream-then-step tick).
 When a plan pages, single-model runs are verified bit-exact against the
 fully resident uniform plan AND — in async mode — against the
 synchronous streaming path (disable with ``--no-verify``).  Metrics are
-emitted as the ``repro.serving.metrics/v6`` JSON (stdout, and
+emitted as the ``repro.serving.metrics/v7`` JSON (stdout, and
 ``--metrics-json PATH`` to persist).
+
+Encoded (compressed) cold pages: ``--page-bits {8,4,2}`` stamps the
+plan's paged placements with a page wire encoding, so every cold page
+streams blockwise-quantized intN bytes + scales instead of the device
+format, and the fetch path dequantizes back into the packed device
+buffer.  ``--page-bits`` equal to ``--bits`` is the run-quantized
+identity (wire form IS the device form) and stays bit-exact against the
+resident plan; a narrower ``--page-bits`` is lossy, so the verify leg
+compares against a resident engine whose cold weights took the same
+encode->decode round trip (:func:`repro.core.paging.page_roundtrip_param`
+— deterministic, hence bit-exact again).  The metrics' paging section
+reports the split ledger: ``bytes_streamed_wire`` (link traffic) vs
+``bytes_streamed_raw`` (fp32-dense equivalent).
 
 Continuous batching (the 10–20 ms XR deadline machinery):
 ``--token-budget N`` re-plans a shared per-tick token budget across all
@@ -51,7 +64,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.paging import SharedPagePool, kv_pass_counters
+from repro.core.paging import (SharedPagePool, kv_pass_counters,
+                               packed_tree_store, page_roundtrip_param,
+                               page_sizes, thread_packed)
 from repro.core.placement import (Placement, PlacementPlan, packed_sizes,
                                   plan_for_budget)
 from repro.models import transformer as tfm
@@ -112,8 +127,28 @@ def _build_model(arch: str, args):
     plan = plan_for_budget(
         sizes, budget,
         hot=Placement("l1mram", args.bits, "resident"),
-        cold=Placement("l3flash", args.bits, "paged"))
+        cold=Placement("l3flash", args.bits, "paged", args.page_bits),
+        sizes_bits=args.bits)
     return cfg, packed, plan
+
+
+def _reference_packed(packed, plan, args):
+    """Packed tree the resident reference engine serves.
+
+    fp and run-quantized-identity page encodings are lossless, so the
+    reference is the original tree.  A lossy ``--page-bits`` (narrower
+    than ``--bits``) distorts every cold weight deterministically at
+    encode time, so the reference's cold params take the same
+    encode->decode round trip — the verify stays bit-exact."""
+    if args.page_bits is None or args.page_bits == args.bits:
+        return packed
+    store = packed_tree_store(packed, plan)
+    rt = {}
+    for name, p in store.params.items():
+        pl = plan.placement_for(name)
+        if pl.residency == "paged" and pl.page_bits not in (None, pl.weight_bits):
+            rt[name] = page_roundtrip_param(p, pl.page_bits)
+    return thread_packed(packed, rt) if rt else packed
 
 
 def _tenant_requests(cfg, args, salt):
@@ -204,21 +239,29 @@ def _main_multi(args):
     if pool is not None:
         ps = doc["shared_pool"]
         print(f"  shared pool: {ps['cached_pages']} pages cached "
-              f"({ps['live_bytes']}/{ps['budget_bytes']} B), "
-              f"{ps['evictions']} cross-model evictions")
+              f"({ps['live_bytes']}/{ps['budget_bytes']} B device, "
+              f"{ps['live_wire_bytes']} B wire), "
+              f"{ps['evictions']} cross-model evictions; "
+              f"{ps['bytes_streamed_wire']} B wire streamed for "
+              f"{ps['bytes_streamed_raw']} B raw")
         # kv_pass_counters replays the pool's full event log (weight
         # passes AND kv batches/drops), so one prediction covers every
-        # member; on a weights-only run it equals shared_pass_counters
+        # member; on a weights-only run it equals shared_pass_counters.
+        # page_sizes hands it (device, wire, raw) triples, so the replay
+        # predicts the wire/raw byte ledgers too, not just swap counts.
         pred = kv_pass_counters(
-            {name: [p.nbytes for p in ms.model(name).engine.pager.pages]
+            {name: page_sizes(ms.model(name).engine.pager.pages)
              for name in models
              if ms.model(name).engine.pager is not None},
             pool.budget_bytes, events=pool.events)
         pred_ok = all(
             all(ps["models"][m][k] == pred[m][k]
                 for k in ("swaps", "misses", "pool_hits", "evicted"))
+            and ps["models"][m]["bytes_streamed_wire"] == pred[m]["bytes_wire"]
+            and ps["models"][m]["bytes_streamed_raw"] == pred[m]["bytes_raw"]
             for m in pred)
-        print("  pool counters " + ("MATCH" if pred_ok else "DIVERGE FROM")
+        print("  pool counters (incl. wire/raw bytes) "
+              + ("MATCH" if pred_ok else "DIVERGE FROM")
               + " the static kv_pass_counters prediction")
     else:
         pred_ok = True
@@ -267,6 +310,15 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--bits", type=int, default=8, choices=(2, 4, 8))
+    ap.add_argument("--page-bits", type=int, default=None,
+                    choices=(2, 4, 8),
+                    help="wire encoding for COLD pages: stream blockwise-"
+                         "quantized intN payload + scales and dequantize "
+                         "at fetch (default: stream the packed device "
+                         "format verbatim). Equal to --bits is the zero-"
+                         "decode identity; narrower is lossy and verified "
+                         "against a codec-round-tripped resident "
+                         "reference")
     ap.add_argument("--scenario", default="l1mram",
                     choices=("l1mram", "l2mram", "l3mram", "l3flash"))
     ap.add_argument("--budget-mb", type=float, default=None,
@@ -350,7 +402,8 @@ def main(argv=None):
         plan = plan_for_budget(
             sizes, int(args.budget_mb * 1024 * 1024),
             hot=Placement("l1mram", args.bits, "resident"),
-            cold=Placement("l3flash", args.bits, "paged"))
+            cold=Placement("l3flash", args.bits, "paged", args.page_bits),
+            sizes_bits=args.bits)
         print(plan.summary(sizes))
         paged = plan.paged_bytes(sizes) > 0
     else:
@@ -370,12 +423,17 @@ def main(argv=None):
           f"[W{args.bits}, {place}] over {sched.ticks} ticks")
     if paged:
         pg = summary["paging"]
+        enc = "fp" if args.page_bits is None else f"int{args.page_bits}"
+        wire, raw = pg["bytes_streamed_wire"], pg["bytes_streamed_raw"]
         print(f"live paging ({'async' if args.async_io else 'sync'}): "
               f"{len(eng.pager.pages)} pages, "
               f"{eng.swap_count} swaps, {eng.miss_count} demand misses, "
               f"{pg['exposed_s'] * 1e3:.1f} ms exposed + "
               f"{pg['hidden_s'] * 1e3:.1f} ms hidden behind compute "
               f"(overlap {pg['overlap_frac'] * 100:.0f}%)")
+        if wire:
+            print(f"page wire ({enc}): {wire} B streamed for {raw} B raw "
+                  f"(x{raw / wire:.2f} compression vs fp32 dense)")
     if args.kv_paged:
         pg = summary["paging"]
         print(f"kv paging: {pg['kv_block_rows']}-row blocks, "
@@ -403,15 +461,19 @@ def main(argv=None):
         # fully resident KV cache — the pre-paging engine the paged runs
         # must match token for token
         ref, _sched2, _eng2 = _serve(
-            cfg, packed,
+            cfg, _reference_packed(packed, plan, args),
             PlacementPlan.uniform("l1mram", bits=args.bits), args,
             paged=False)
         got = {r.uid: r.generated for r in done}
         want = {r.uid: r.generated for r in ref}
         ok = got == want
+        lossy = (paged and args.page_bits is not None
+                 and args.page_bits != args.bits)
+        ref_name = ("resident plan (codec round-tripped cold weights)"
+                    if lossy else "resident plan")
         print("verify: paged tokens "
-              + ("BIT-EXACT vs resident plan" if ok
-                 else "MISMATCH vs resident plan"))
+              + (f"BIT-EXACT vs {ref_name}" if ok
+                 else f"MISMATCH vs {ref_name}"))
         if args.async_io:
             # the overlapped pipeline must change WHEN pages move, never
             # what the step computes: re-serve on the blocking sync path

@@ -337,10 +337,15 @@ class ServingEngine:
         # repoint the template tree: resident groups at the pager's pinned
         # device copies, cold groups at the HOST image — nothing stays
         # device-resident behind the pager's back.
-        host_view = {
-            name: PackedParam(packed=hp, scale=hs, bits=proto.bits,
-                              orig_shape=proto.orig_shape)
-            for name, (hp, hs, proto) in self.pager._host.items()}
+        # the template only fixes shapes/dtypes — decode each host wire
+        # image back to the device layout so re-encoded (compressed) cold
+        # groups present the same leaves a streamed page will fill
+        host_view = {}
+        for pname, hp in self.pager._host.items():
+            packed, scale = hp.decode()
+            host_view[pname] = PackedParam(packed=packed, scale=scale,
+                                           bits=hp.bits,
+                                           orig_shape=hp.orig_shape)
         self.params = thread_packed(self.params,
                                     {**self.pager.resident, **host_view})
         self._build_thread_template(set(host_view))
@@ -614,7 +619,7 @@ class ServingEngine:
         if tr is not None:
             # the measured stall split, retro-dated so [hidden][exposed]
             # render as one contiguous swap bar ending at the fence —
-            # the spans the reconciliation tests sum against metrics/v6
+            # the spans the reconciliation tests sum against metrics/v7
             stream = "kv" if kv else "weights"
             track = f"{self.trace_track}:stall"
             if hidden > 0.0:
@@ -702,6 +707,16 @@ class ServingEngine:
             overlap_frac=(self.paging_hidden_s / total) if total > 0 else 0.0,
             stall_s=self.paging_stall_s,       # v2 alias: exposed wait
             n_pages=0 if self.pager is None else len(self.pager.pages),
+            # metrics/v7: encoded-pages byte ledger for the WEIGHT page
+            # stream — wire = what crossed the link per swap (encoded
+            # payload + scales), raw = the fp32-dense equivalent, so
+            # wire/raw is the weight-page compression ratio.  The KV
+            # stream moves device-format rows (ratio 1.0) and reports
+            # through its own pool member / kv_swaps counters.
+            bytes_streamed_wire=(0 if self.pager is None
+                                 else self.pager.bytes_streamed_wire),
+            bytes_streamed_raw=(0 if self.pager is None
+                                else self.pager.bytes_streamed_raw),
             # metrics/v4: the KV share of the same budgeted page stream
             kv_swaps=0 if kv is None else kv.swap_count,
             kv_pool_hits=0 if kv is None else kv.pool_hits,

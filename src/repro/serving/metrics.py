@@ -11,12 +11,12 @@ behind compute by the async paging pipeline), deadline-miss rate per
 stream, and aggregate token throughput.
 
 Everything is emitted as one JSON document (schema
-``repro.serving.metrics/v6``) so the bench trajectory
+``repro.serving.metrics/v7``) so the bench trajectory
 (``benchmarks/serving_load.py`` -> ``BENCH_serving.json``) and the
 launcher (``repro.launch.serve --metrics-json``) share a format:
 
     {
-      "schema": "repro.serving.metrics/v6",
+      "schema": "repro.serving.metrics/v7",
       "ticks":      {"count", "latency_ms": {mean,p50,p99,max},
                      "paging_exposed_ms": {mean,p50,p99,max},
                      "paging_hidden_ms":  {mean,p50,p99,max}},
@@ -30,6 +30,7 @@ launcher (``repro.launch.serve --metrics-json``) share a format:
       "throughput": {"wall_s", "tok_per_s"},
       "paging":     {"swap_count", "miss_count", "exposed_s", "hidden_s",
                      "overlap_frac", "stall_s", "n_pages",
+                     "bytes_streamed_raw", "bytes_streamed_wire",
                      "kv_swaps", "kv_pool_hits", "kv_writebacks",
                      "kv_dropped", "kv_preempt_drops", "kv_exposed_s",
                      "kv_hidden_s", "kv_block_rows"},
@@ -46,6 +47,17 @@ Requests without a deadline never count toward the miss rate, and
 service) are excluded from it and reported under their own counter.
 Requests the admission controller REJECTED never became requests at all
 (no service, no tokens): they appear only in ``scheduler.rejected``.
+
+v7 vs v6: the ``paging`` section grew the encoded-pages byte ledger —
+``bytes_streamed_wire`` (bytes that actually crossed the host->device
+link: encoded payloads + their scales) and ``bytes_streamed_raw`` (the
+fp32-dense-equivalent an unencoded stream would have moved; equal to
+wire when pages stream in the ``"fp"`` encoding, i.e. nothing claimed
+compression).  Their ratio is the run's page-compression factor.  The
+multi shape's ``shared_pool`` section (and each of its per-model
+entries) carries the same two keys, plus ``live_wire_bytes`` next to
+``live_bytes``.  :func:`validate` rejects v6 payloads — wrong schema
+string, or a ``paging`` section without the byte ledger.
 
 v6 vs v5: the ``trace`` section is new — chrome-trace observability
 (``repro.serving.trace``): the tracer's event/track counts (zeros for an
@@ -72,19 +84,22 @@ per-tick ``paging_stall_ms`` became the ``paging_exposed_ms`` /
 ``exposed_s``.)
 
 Multi-model tenancy (``repro.serving.tenancy.MultiScheduler``) emits the
-v6 *multi* shape instead: per-model sections of the document above plus
+v7 *multi* shape instead: per-model sections of the document above plus
 the shared page pool's contention stats (KV page tables appear as their
 own ``<model>/kv`` members)::
 
     {
-      "schema": "repro.serving.metrics/v6",
+      "schema": "repro.serving.metrics/v7",
       "ticks":       {"count"},                     # MultiScheduler ticks
       "models":      {name: <single-model document, sans schema>},
-      "shared_pool": {"budget_bytes", "live_bytes", "cached_pages",
-                      "evictions",
+      "shared_pool": {"budget_bytes", "live_bytes", "live_wire_bytes",
+                      "cached_pages", "evictions",
+                      "bytes_streamed_wire", "bytes_streamed_raw",
                       "models": {name: {"swaps", "misses", "pool_hits",
                                         "evicted", "exposed_s",
-                                        "hidden_s", "n_pages"}}},
+                                        "hidden_s", "n_pages",
+                                        "bytes_streamed_wire",
+                                        "bytes_streamed_raw"}}},
       "totals":      {"requests", "tokens_out", "truncated",
                       "with_deadline", "missed", "miss_rate",
                       "preemptions", "restores", "rejected", "degraded",
@@ -111,7 +126,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-SCHEMA = "repro.serving.metrics/v6"
+SCHEMA = "repro.serving.metrics/v7"
 
 
 def quantiles(xs: List[float]) -> Dict[str, float]:
@@ -126,6 +141,7 @@ def quantiles(xs: List[float]) -> Dict[str, float]:
 def _empty_paging() -> Dict[str, Any]:
     return dict(swap_count=0, miss_count=0, exposed_s=0.0, hidden_s=0.0,
                 overlap_frac=0.0, stall_s=0.0, n_pages=0,
+                bytes_streamed_raw=0, bytes_streamed_wire=0,
                 kv_swaps=0, kv_pool_hits=0, kv_writebacks=0, kv_dropped=0,
                 kv_preempt_drops=0,
                 kv_exposed_s=0.0, kv_hidden_s=0.0, kv_block_rows=0)
@@ -358,7 +374,7 @@ class MetricsRecorder:
 
 
 # ---------------------------------------------------------------------------
-# multi-model tenancy (metrics/v6 multi shape)
+# multi-model tenancy (metrics/v7 multi shape)
 # ---------------------------------------------------------------------------
 
 def multi_summary(models: Dict[str, Dict[str, Any]],
@@ -432,6 +448,9 @@ _SINGLE_KEYS = {
     "throughput": ("wall_s", "tok_per_s"),
     "paging": ("swap_count", "miss_count", "exposed_s", "hidden_s",
                "overlap_frac", "n_pages",
+               # v7: encoded-pages byte ledger — its absence is exactly
+               # what marks a stale v6 payload
+               "bytes_streamed_raw", "bytes_streamed_wire",
                # v4: the KV-cache share of the same page stream
                "kv_swaps", "kv_pool_hits", "kv_writebacks", "kv_dropped",
                # v5: preemption's share of the dropped blocks
@@ -466,7 +485,7 @@ def _validate_single(doc: Dict[str, Any], where: str) -> None:
 
 
 def validate(doc: Dict[str, Any]) -> Dict[str, Any]:
-    """Assert ``doc`` is a well-formed ``repro.serving.metrics/v6``
+    """Assert ``doc`` is a well-formed ``repro.serving.metrics/v7``
     document (either the single-model or the multi-model shape); returns
     the document unchanged so it can be used inline.  Raises ValueError
     naming the first missing piece."""
@@ -485,13 +504,16 @@ def validate(doc: Dict[str, Any]) -> Dict[str, Any]:
             _validate_single(sub, where=f"models.{name}")
         pool = doc["shared_pool"]
         if pool:
-            for k in ("budget_bytes", "live_bytes", "cached_pages",
-                      "evictions", "models"):
+            for k in ("budget_bytes", "live_bytes", "live_wire_bytes",
+                      "cached_pages", "evictions",
+                      "bytes_streamed_wire", "bytes_streamed_raw",
+                      "models"):
                 if k not in pool:
                     raise ValueError(f"shared_pool missing {k!r}")
             for name, c in pool["models"].items():
                 for k in ("swaps", "misses", "pool_hits", "evicted",
-                          "exposed_s", "hidden_s", "n_pages"):
+                          "exposed_s", "hidden_s", "n_pages",
+                          "bytes_streamed_wire", "bytes_streamed_raw"):
                     if k not in c:
                         raise ValueError(
                             f"shared_pool.models.{name} missing {k!r}")

@@ -58,7 +58,7 @@ that claim's serving-side analogue:
   * **metrics**: TTFT / end-to-end latency / p50 / p99 / deadline-miss
     rate / tok/s / exposed-vs-hidden paging stalls / preemption and
     admission-control counters / budget utilization, recorded per tick
-    and per request and emitted as the ``repro.serving.metrics/v6``
+    and per request and emitted as the ``repro.serving.metrics/v7``
     JSON.
 
 The scheduler owns no jit state — it drives the engine's tick primitives
@@ -186,7 +186,7 @@ class Scheduler:
         # predicted-vs-measured exposed-stall accumulators: the closed
         # form (memsys.overlap_stall over the fenced pass's swap/window)
         # against what the fence actually booked — summarized as the
-        # metrics/v6 ``trace.predicted_vs_measured_stall_ratio``
+        # metrics/v7 ``trace.predicted_vs_measured_stall_ratio``
         self._pred_exposed_s = 0.0
         self._meas_exposed_s = 0.0
 
@@ -501,7 +501,7 @@ class Scheduler:
 
     def _trace_tick(self, measured_exposed_s: float) -> None:
         """Accumulate this tick's predicted-vs-measured exposed-stall
-        drift (the metrics/v6 ``trace`` section) and, when tracing,
+        drift (the metrics/v7 ``trace`` section) and, when tracing,
         render the closed-form prediction on the ``<track> (predicted)``
         overlay next to the measured fence spans."""
         eng = self.engine
@@ -624,7 +624,7 @@ class Scheduler:
 
     # -- trace introspection ---------------------------------------------------
     def trace_summary(self) -> Dict[str, object]:
-        """The metrics/v6 ``trace`` section for this scheduler: tracer
+        """The metrics/v7 ``trace`` section for this scheduler: tracer
         event/track counts (zeros when un-traced) and the run's
         predicted-vs-measured exposed-stall ratio.  The ratio is the
         summed closed-form prediction over the summed fence-measured

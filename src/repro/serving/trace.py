@@ -34,12 +34,19 @@ thread page fetches, the retro-dated stall spans), ``instant`` emits
 ``C`` (pool occupancy).  ``track`` names become ``thread_name``
 metadata, one tid per track.
 
+Since the encoded-pages refactor the ``io`` track splits its byte
+arguments wire-vs-device: a swap's ``page`` span carries ``nbytes``
+(decoded device footprint), ``wire_nbytes`` (what the link moved:
+encoded payload + scales) and ``encoding``; the ``pool_bytes`` counter
+samples both ``bytes`` (device occupancy, what the budget charges) and
+``wire_bytes`` as parallel series.
+
 :func:`validate` asserts structural validity (every ``B`` has a
 matching ``E``, ``B``/``E``/``i`` timestamps monotonic per track,
 non-negative ``X`` durations) and is what CI runs against the uploaded
 trace artefact; :func:`doc_tracks` / :func:`span_durations` /
 :func:`instant_count` are the small query helpers the reconciliation
-tests use to check trace sums against the metrics/v6 document.
+tests use to check trace sums against the metrics/v7 document.
 """
 
 from __future__ import annotations

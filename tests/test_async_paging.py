@@ -20,7 +20,7 @@ import pytest
 
 from repro.core.memsys import overlap_stall
 from repro.core.paging import (AsyncPageStream, HostPagedStore,
-                               SharedPagePool, pass_counters,
+                               SharedPagePool, page_sizes, pass_counters,
                                shared_pass_counters, thread_packed)
 from repro.core.placement import PlacementPlan, packed_sizes, plan_for_budget
 from repro.core.weight_store import freeze, uniform_policy
@@ -370,14 +370,19 @@ def test_tenant_overlap_preserves_pool_counters(rng, packed, packed_b,
     assert ms_a.pass_log == ms_s.pass_log
     sum_a, sum_s = ms_a.pool.summary(), ms_s.pool.summary()
     pred = shared_pass_counters(
-        {m: [p.nbytes for p in ms_a.model(m).engine.pager.pages]
+        {m: page_sizes(ms_a.model(m).engine.pager.pages)
          for m in ("a", "b")}, budget, passes=ms_a.pass_log)
     for m in ("a", "b"):
         got_a = {k: sum_a["models"][m][k]
                  for k in ("swaps", "misses", "pool_hits", "evicted")}
         got_s = {k: sum_s["models"][m][k]
                  for k in ("swaps", "misses", "pool_hits", "evicted")}
-        assert got_a == got_s == pred[m], (m, got_a, got_s, pred[m])
+        want = {k: pred[m][k] for k in got_a}
+        assert got_a == got_s == want, (m, got_a, got_s, pred[m])
+        # wire-byte ledger identical async vs sync, and exactly predicted
+        assert (sum_a["models"][m]["bytes_streamed_wire"]
+                == sum_s["models"][m]["bytes_streamed_wire"]
+                == pred[m]["bytes_wire"])
     if budget_kind == "tight":
         assert sum_a["evictions"] > 0      # contention actually happened
     ms_a.close()
@@ -423,7 +428,8 @@ def test_pass_log_tracks_begin_order_under_live_traffic(rng, packed,
     for m in ("a", "b"):
         got = {k: summ["models"][m][k]
                for k in ("swaps", "misses", "pool_hits", "evicted")}
-        assert got == pred[m], (m, got, pred[m], ms.pass_log)
+        assert got == {k: pred[m][k] for k in got}, (m, got, pred[m],
+                                                    ms.pass_log)
     ms.close()
 
 
@@ -494,11 +500,11 @@ def test_multischeduler_close_cancels_inflight_passes(rng, packed,
     assert not ms.pool._active_fetch
 
 
-def test_metrics_v6_schema_validates_and_rejects_stale():
+def test_metrics_v7_schema_validates_and_rejects_stale():
     from repro.serving import MetricsRecorder
     from repro.serving.metrics import SCHEMA, _empty_paging
 
-    assert SCHEMA == "repro.serving.metrics/v6"
+    assert SCHEMA == "repro.serving.metrics/v7"
     rec = MetricsRecorder(clock=lambda: 0.0)
     rec.record_tick(latency_s=0.002, paging_exposed_s=0.0005,
                     paging_hidden_s=0.002)
@@ -508,7 +514,8 @@ def test_metrics_v6_schema_validates_and_rejects_stale():
     assert doc["ticks"]["paging_hidden_ms"]["max"] == pytest.approx(2.0)
     for k in ("exposed_s", "hidden_s", "overlap_frac",
               "kv_swaps", "kv_pool_hits", "kv_writebacks", "kv_dropped",
-              "kv_exposed_s", "kv_hidden_s"):
+              "kv_exposed_s", "kv_hidden_s",
+              "bytes_streamed_wire", "bytes_streamed_raw"):
         assert k in doc["paging"]
     stale = dict(doc, schema="repro.serving.metrics/v3")
     with pytest.raises(ValueError, match="schema"):
@@ -519,6 +526,11 @@ def test_metrics_v6_schema_validates_and_rejects_stale():
                  if not k.startswith("kv_")}
     with pytest.raises(ValueError, match="kv_swaps"):
         validate(dict(doc, paging=v3_paging))
+    # a v6-shaped payload (no wire/raw byte ledgers) likewise
+    v6_paging = {k: v for k, v in _empty_paging().items()
+                 if not k.startswith("bytes_streamed")}
+    with pytest.raises(ValueError, match="bytes_streamed"):
+        validate(dict(doc, paging=v6_paging))
     broken = dict(doc, paging=dict(swap_count=0, miss_count=0,
                                    stall_s=0.0, n_pages=0))
     with pytest.raises(ValueError, match="exposed_s"):

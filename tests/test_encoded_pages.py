@@ -1,0 +1,333 @@
+"""Encoded (compressed) cold pages: the page codec, the wire/device byte
+split, and the fetch-side decode — end to end from quantize_blockwise up
+through HostPagedStore and ServingEngine.
+
+Byte vocabulary (see core/paging.Page): *device* bytes are the packed
+buffer a page occupies in the pool budget; *wire* bytes are what crosses
+the host->device link (encoded payload + scales); *raw* bytes are the
+fp32-dense equivalent the compression ratio is quoted against.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import packing, paging, quantize
+from repro.core.memsys import encoded_wire_bytes
+from repro.core.paging import (HostPagedStore, build_pages,
+                               encode_host_param, page_roundtrip_param,
+                               page_sizes, packed_tree_store, thread_packed)
+from repro.core.placement import Placement, PlacementPlan, plan_for_budget
+from repro.core.weight_store import freeze, uniform_policy
+from repro.kernels.qmatmul import qmatmul_f32, qmatmul_f32_blockscale
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import freeze_for_serving
+from repro.serving import Request, ServingEngine
+
+BLOCK = quantize.PAGE_SCALE_BLOCK
+
+
+def _params(rng, n_layers=6, d=64):
+    return {f"layer{i}": dict(w=np.asarray(rng.normal(size=(d, d)),
+                                           np.float32))
+            for i in range(n_layers)}
+
+
+# ---------------------------------------------------------------------------
+# the blockwise page codec
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [31, 33, 70, 2 * BLOCK + 5])
+def test_blockwise_codec_roundtrip_int4_odd_k(rng, k):
+    """int4 blockwise quantization at K NOT a multiple of the scale block:
+    the tail block carries its own scale and the reconstruction error is
+    bounded by half an LSB of each block's scale."""
+    w = np.asarray(rng.normal(size=(9, k)), np.float32)
+    levels, scales = quantize.quantize_blockwise(w, 4)
+    assert levels.shape == w.shape and levels.dtype == np.int8
+    assert scales.shape == (9, -(-k // BLOCK))
+    lo, hi = quantize.weight_qrange(4)
+    assert levels.min() >= lo and levels.max() <= hi
+    deq = quantize.dequantize_blockwise(levels, scales)
+    assert deq.shape == w.shape
+    # per-(row, block) half-LSB bound: |w - deq| <= scale/2 elementwise
+    nblk = scales.shape[1]
+    bound = np.repeat(scales, BLOCK, axis=1)[:, :k] * 0.5 + 1e-7
+    assert (np.abs(w - deq) <= bound).all()
+    # the codec is a projection: re-encoding its output is lossless
+    levels2, scales2 = quantize.quantize_blockwise(deq, 4)
+    np.testing.assert_array_equal(levels2, levels)
+    np.testing.assert_allclose(scales2, scales, rtol=1e-6)
+
+
+@pytest.mark.parametrize("channels,k", [(7, 50), (33, 70), (50, 33)])
+def test_quantize_weights_roundtrip_int4_odd_channels(rng, channels, k):
+    """Per-channel int4 quantize -> dequantize at channel counts that are
+    NOT multiples of the packing factor or scale block."""
+    w = np.asarray(rng.normal(size=(channels, k)), np.float32)
+    qt = quantize.quantize_weights(w, 4, channel_axis=0)
+    deq = np.asarray(qt.dequantize())
+    scale = np.asarray(qt.scale).reshape(channels, 1)
+    assert (np.abs(w - deq) <= scale * 0.5 + 1e-7).all()
+    # round trip: requantizing the dequantized weights is the identity
+    qt2 = quantize.quantize_weights(deq, 4, channel_axis=0)
+    np.testing.assert_array_equal(np.asarray(qt2.values),
+                                  np.asarray(qt.values))
+
+
+# ---------------------------------------------------------------------------
+# kernels on odd shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits,k", [(8, 77), (4, 51), (2, 33)])
+def test_qmatmul_f32_matches_dequant_reference_odd_k(rng, bits, k):
+    """Pallas qmatmul vs the dequantized-matmul oracle on K values that
+    leave a ragged tail in every packing factor.  Both paths accumulate
+    in f32 and differ only in summation order (the kernel reduces over
+    zero-padded bk blocks), so agreement is tight: rtol 1e-5."""
+    m, n = 5, 13
+    x = np.asarray(rng.normal(size=(m, k)), np.float32)
+    w = np.asarray(rng.normal(size=(n, k)), np.float32)
+    qt = quantize.quantize_weights(w, bits, channel_axis=0)
+    packed = packing.pack(qt.values, bits)
+    out = qmatmul_f32(jax.numpy.asarray(x), packed, qt.scale, bits=bits,
+                      k_orig=k, bm=16, bn=16, bk=32, interpret=True)
+    expect = quantize.dequant_matmul_reference(jax.numpy.asarray(x), qt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits,k", [(8, 70), (4, 2 * BLOCK + 5)])
+def test_qmatmul_blockscale_matches_blockwise_reference(rng, bits, k):
+    """The wire-form kernel (per-block scales applied inside the
+    reduction) equals x @ dequantize_blockwise(...)^T — the page codec's
+    decoded form — to the same f32 summation-order tolerance."""
+    m, n = 4, 9
+    x = np.asarray(rng.normal(size=(m, k)), np.float32)
+    w = np.asarray(rng.normal(size=(n, k)), np.float32)
+    levels, scales = quantize.quantize_blockwise(w, bits)
+    packed = packing.pack(levels, bits)
+    out = qmatmul_f32_blockscale(jax.numpy.asarray(x), packed,
+                                 jax.numpy.asarray(scales), bits=bits,
+                                 k_orig=k, block=BLOCK, bm=16, bn=16,
+                                 bk=2 * BLOCK, interpret=True)
+    expect = x @ quantize.dequantize_blockwise(levels, scales).T
+    np.testing.assert_allclose(np.asarray(out), expect,
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# wire-byte accounting
+# ---------------------------------------------------------------------------
+
+def test_encoded_wire_bytes_matches_codec_buffers(rng):
+    """The closed form the StallModel/planner charges equals the actual
+    byte size of the codec's output buffers, including ragged tails."""
+    for rows, k, page_bits in [(6, 64, 4), (5, 33, 2), (9, 70, 8)]:
+        w = np.asarray(rng.normal(size=(rows, k)), np.float32)
+        store = freeze({"p": dict(w=w)}, uniform_policy(8, min_size=1))
+        hp = encode_host_param(store.params["p/w"], page_bits)
+        want = encoded_wire_bytes(rows, k, page_bits, BLOCK)
+        if page_bits == 8:
+            # identity: the wire form is the device form + channel scales
+            assert hp.wire_nbytes == (store.params["p/w"].nbytes_packed
+                                      + rows * 4)
+        else:
+            assert hp.wire_nbytes == want
+
+
+def test_page_wire_split_and_compression(rng):
+    """build_pages splits every page's bytes three ways; the int8
+    identity encoding moves ~wire/raw <= 0.3 of the fp32 dense bytes."""
+    store = freeze(_params(rng), uniform_policy(8, min_size=16))
+    plan = (PlacementPlan.uniform("l3flash", bits=8, residency="paged")
+            .with_page_bits(8))
+    pages = build_pages(store, page_bytes=3 * 64 * 64, plan=plan)
+    for p in pages:
+        assert p.encoding == "int8"
+        assert p.wire_nbytes > p.nbytes          # channel scales ride along
+        assert p.raw_nbytes > p.wire_nbytes      # fp32 dense >> int8 wire
+    wire = sum(p.wire_nbytes for p in pages)
+    raw = sum(p.raw_nbytes for p in pages)
+    assert wire / raw <= 0.3 and raw / wire >= 3.5
+    # fp pages: nothing encoded -> nothing saved (raw == wire)
+    fp_pages = build_pages(store, page_bytes=3 * 64 * 64,
+                           plan=PlacementPlan.uniform(
+                               "l3flash", bits=8, residency="paged"))
+    assert all(p.encoding == "fp" and p.raw_nbytes == p.wire_nbytes
+               for p in fp_pages)
+    # page_sizes hands the (device, wire, raw) triples to the predictors
+    assert page_sizes(pages) == [(p.nbytes, p.wire_nbytes, p.raw_nbytes)
+                                 for p in pages]
+
+
+def test_build_pages_mixed_encodings_never_share_page(rng):
+    """Params of different wire encodings must not share a page (a page
+    decodes as one unit), even when their bytes would fit."""
+    store = freeze(_params(rng, n_layers=4), uniform_policy(8, min_size=16))
+    names = list(store.params)
+    plan = PlacementPlan(default=Placement("l3flash", 8, "paged", None))
+    plan = plan.with_rule(names[1], Placement("l3flash", 8, "paged", 4))
+    pages = build_pages(store, page_bytes=10 * 64 * 64, plan=plan)
+    assert len(pages) == 3                       # fp | int4 | fp
+    assert [p.encoding for p in pages] == ["fp", "int4", "fp"]
+    assert pages[1].param_names == (names[1],)
+
+
+def test_build_pages_oversized_error_names_plan_path(rng):
+    store = freeze(_params(rng, n_layers=2), uniform_policy(8, min_size=16))
+    plan = PlacementPlan.uniform("l3flash", bits=8, residency="paged")
+    with pytest.raises(ValueError, match=r"plan path .* l3flash/8b/fp.*"
+                                         r"set page_bytes >= 4096"):
+        build_pages(store, page_bytes=64 * 64 - 1, plan=plan)
+    with pytest.raises(ValueError, match=r"param .*\(fp\)"):
+        build_pages(store, page_bytes=64 * 64 - 1)
+
+
+def test_plan_for_budget_bits_aware_and_tie_break():
+    sizes = {"b": 100, "a": 100, "c": 50}
+    # bits-aware budget: a 100-byte int8-measured param costs 50 B
+    # resident at int4, so a 100 B budget pins BOTH ties
+    plan = plan_for_budget(sizes, 100,
+                           hot=Placement("l1mram", 4, "resident"),
+                           cold=Placement("l3flash", 4, "paged"),
+                           sizes_bits=8)
+    resident, _ = plan.split_names(list(sizes))
+    assert sorted(resident) == ["a", "b"]
+    # deterministic tie-break: equal score + size falls back to the name,
+    # independent of dict insertion order
+    fwd = plan_for_budget({"b": 100, "a": 100}, 100)
+    rev = plan_for_budget({"a": 100, "b": 100}, 100)
+    assert fwd.rules == rev.rules
+    assert [n for n, _ in fwd.rules] == ["a"]
+
+
+# ---------------------------------------------------------------------------
+# host store: encode at build, decode at fetch
+# ---------------------------------------------------------------------------
+
+def test_host_param_identity_decode_is_passthrough(rng):
+    store = freeze(_params(rng, n_layers=1), uniform_policy(8, min_size=16))
+    p = store.params["layer0/w"]
+    for page_bits in (None, 8):                  # fp and run-quantized id.
+        hp = encode_host_param(p, page_bits)
+        packed, scale = hp.decode()
+        np.testing.assert_array_equal(packed, np.asarray(p.packed))
+        np.testing.assert_array_equal(scale, np.asarray(p.scale))
+
+
+def test_host_param_reencode_decode_matches_roundtrip(rng):
+    """A re-encoded param holds ONLY the compressed image; decode
+    reconstructs the device form deterministically and equals the
+    page_roundtrip_param reference transform."""
+    store = freeze(_params(rng, n_layers=1), uniform_policy(8, min_size=16))
+    p = store.params["layer0/w"]
+    hp = encode_host_param(p, 4)
+    assert hp.payload.nbytes + hp.scales.nbytes == hp.wire_nbytes
+    assert hp.wire_nbytes < p.nbytes_packed      # int4 wire < int8 device
+    packed, scale = hp.decode()
+    rt = page_roundtrip_param(p, 4)
+    np.testing.assert_array_equal(packed, np.asarray(rt.packed))
+    np.testing.assert_allclose(scale, np.asarray(rt.scale), rtol=1e-6)
+    # decode is idempotent/deterministic
+    packed2, scale2 = hp.decode()
+    np.testing.assert_array_equal(packed, packed2)
+    np.testing.assert_array_equal(scale, scale2)
+
+
+@pytest.mark.parametrize("page_bits", [None, 8])
+def test_encoded_store_streams_bit_exact(rng, page_bits):
+    """fp and identity encodings stream the exact device bytes; the wire
+    ledger equals the sum of the streamed pages' wire sizes."""
+    store = freeze(_params(rng), uniform_policy(8, min_size=16))
+    plan = PlacementPlan.uniform("l3flash", bits=8, residency="paged")
+    if page_bits is not None:
+        plan = plan.with_page_bits(page_bits)
+    paged = HostPagedStore(store, page_bytes=2 * 64 * 64, plan=plan)
+    streamed = {}
+    for page, dev_params in paged.stream():
+        streamed.update(dev_params)
+    for name, p in store.params.items():
+        np.testing.assert_array_equal(np.asarray(streamed[name].packed),
+                                      np.asarray(p.packed))
+        np.testing.assert_array_equal(np.asarray(streamed[name].scale),
+                                      np.asarray(p.scale))
+    assert paged.bytes_streamed_wire == sum(p.wire_nbytes
+                                            for p in paged.pages)
+    assert paged.bytes_streamed_raw == sum(p.raw_nbytes
+                                           for p in paged.pages)
+    paged.close()
+
+
+def test_encoded_store_lossy_stream_matches_roundtrip(rng):
+    """int4 pages under an int8 store are lossy but deterministic: the
+    fetched device bytes equal the page_roundtrip_param reference, and
+    the wire ledger shows real compression."""
+    store = freeze(_params(rng), uniform_policy(8, min_size=16))
+    plan = (PlacementPlan.uniform("l3flash", bits=8, residency="paged")
+            .with_page_bits(4))
+    paged = HostPagedStore(store, page_bytes=2 * 64 * 64, plan=plan)
+    streamed = {}
+    for page, dev_params in paged.stream():
+        streamed.update(dev_params)
+    for name, p in store.params.items():
+        rt = page_roundtrip_param(p, 4)
+        np.testing.assert_array_equal(np.asarray(streamed[name].packed),
+                                      np.asarray(rt.packed))
+    assert paged.bytes_streamed_wire < paged.bytes_streamed_raw / 5
+    assert paged.decode_s >= 0.0
+    paged.close()
+
+
+# ---------------------------------------------------------------------------
+# serving end-to-end
+# ---------------------------------------------------------------------------
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  head_dim=16, remat=False)
+
+
+def _serve(cfg, packed, plan, prompts):
+    from repro.core.placement import packed_sizes
+    eng = ServingEngine(cfg, packed, batch_slots=2, max_len=64, plan=plan)
+    if plan.paged_bytes(packed_sizes(packed)) > 0:
+        eng.attach_paging()
+    for uid, prompt in enumerate(prompts):
+        eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=6))
+    toks = {r.uid: r.generated for r in eng.run_until_done()}
+    if eng.pager is not None:
+        eng.pager.close()
+    return toks, eng
+
+
+def test_serving_encoded_pages_bit_exact_and_lossy(rng):
+    params = tfm.init_params(CFG, jax.random.PRNGKey(0))
+    packed = freeze_for_serving(params, bits=8)
+    prompts = [rng.integers(0, 256, 4 + i).astype(np.int32)
+               for i in range(4)]
+    from repro.core.placement import packed_sizes
+    sizes = packed_sizes(packed)
+    plan = plan_for_budget(sizes, sum(sizes.values()) // 2)
+
+    resident, _ = _serve(CFG, packed, PlacementPlan.uniform(), prompts)
+    # fp and run-quantized identity encodings: bit-exact vs resident
+    for page_bits in (None, 8):
+        p = plan if page_bits is None else plan.with_page_bits(page_bits)
+        got, eng = _serve(CFG, packed, p, prompts)
+        assert got == resident
+        if page_bits == 8:
+            pg = eng.paging_summary()
+            assert 0 < pg["bytes_streamed_wire"] <= \
+                0.3 * pg["bytes_streamed_raw"]
+    # lossy int4 pages == serving the round-tripped tree fully resident
+    plan4 = plan.with_page_bits(4)
+    store = packed_tree_store(packed, plan4)
+    rt = {n: page_roundtrip_param(p, 4) for n, p in store.params.items()
+          if plan4.placement_for(n).paged}
+    assert rt, "plan paged nothing; the lossy leg tests nothing"
+    want, _ = _serve(CFG, thread_packed(packed, rt),
+                     PlacementPlan.uniform(), prompts)
+    got, _ = _serve(CFG, packed, plan4, prompts)
+    assert got == want

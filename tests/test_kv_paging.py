@@ -25,7 +25,7 @@ import pytest
 
 from repro.core.memsys import kv_stream_bytes, overlap_stall
 from repro.core.paging import (KVPageTable, SharedPagePool,
-                               kv_pass_counters, pass_counters,
+                               kv_pass_counters, page_sizes, pass_counters,
                                shared_pass_counters)
 from repro.core.placement import PlacementPlan, packed_sizes, plan_for_budget
 from repro.models import transformer as tfm
@@ -367,7 +367,7 @@ def test_kv_counters_pooled_prediction(rng, packed, budget_kind):
     _got, _s, eng = _serve(CFG, packed, prompts, plan=plan, paged=True,
                            kv=True, pool=pool)
     summ = pool.summary()
-    pred = kv_pass_counters({"m": [p.nbytes for p in eng.pager.pages]},
+    pred = kv_pass_counters({"m": page_sizes(eng.pager.pages)},
                             pool.budget_bytes, pool.events)
     for m in ("m", "m/kv"):
         got = {k: summ["models"][m][k]
@@ -375,6 +375,10 @@ def test_kv_counters_pooled_prediction(rng, packed, budget_kind):
         want = {k: pred[m][k]
                 for k in ("swaps", "misses", "pool_hits", "evicted")}
         assert got == want, (m, got, want)
+        # the unified replay predicts the streamed-bytes ledger of both
+        # member kinds exactly — weights in wire bytes, KV at ratio 1.0
+        assert summ["models"][m]["bytes_streamed_wire"] == pred[m]["bytes_wire"]
+        assert summ["models"][m]["bytes_streamed_raw"] == pred[m]["bytes_raw"]
     pool.close()
 
 

@@ -449,13 +449,15 @@ def test_metrics_schema_and_deadlines():
                                   exposed_s=0.001, hidden_s=0.004,
                                   overlap_frac=0.8, stall_s=0.001,
                                   n_pages=3,
+                                  bytes_streamed_wire=600,
+                                  bytes_streamed_raw=2400,
                                   kv_swaps=4, kv_pool_hits=2,
                                   kv_writebacks=3, kv_dropped=0,
                                   kv_preempt_drops=0,
                                   kv_exposed_s=0.0002, kv_hidden_s=0.001,
                                   kv_block_rows=16))
     validate(doc)
-    assert doc["schema"] == "repro.serving.metrics/v6"
+    assert doc["schema"] == "repro.serving.metrics/v7"
     assert doc["deadlines"] == dict(with_deadline=2, missed=1,
                                     miss_rate=0.5, truncated=0)
     assert doc["requests"]["count"] == 3

@@ -8,7 +8,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core.paging import SharedPagePool, pass_counters, \
+from repro.core.paging import SharedPagePool, page_sizes, pass_counters, \
     shared_pass_counters
 from repro.core.placement import PlacementPlan, packed_sizes, plan_for_budget
 from repro.models import transformer as tfm
@@ -109,14 +109,17 @@ def test_tenants_bit_exact_vs_solo_and_counters(rng, packed_a, packed_b,
     assert {r.uid: r.generated for r in done["b"]} == solo_b
 
     pred = shared_pass_counters(
-        {"a": [p.nbytes for p in ms.model("a").engine.pager.pages],
-         "b": [p.nbytes for p in ms.model("b").engine.pager.pages]},
+        {"a": page_sizes(ms.model("a").engine.pager.pages),
+         "b": page_sizes(ms.model("b").engine.pager.pages)},
         budget_bytes, resident_slots=2, passes=ms.pass_log)
     summ = ms.pool.summary()
     for m in ("a", "b"):
         got = {k: summ["models"][m][k]
                for k in ("swaps", "misses", "pool_hits", "evicted")}
-        assert got == pred[m], (m, got, pred[m])
+        assert got == {k: pred[m][k] for k in got}, (m, got, pred[m])
+        # the streamed-bytes ledger follows the same replay, exactly
+        assert summ["models"][m]["bytes_streamed_wire"] == pred[m]["bytes_wire"]
+        assert summ["models"][m]["bytes_streamed_raw"] == pred[m]["bytes_raw"]
     if budget == "tight":
         assert summ["evictions"] > 0        # contention actually happened
         assert summ["live_bytes"] <= budget_bytes
@@ -216,8 +219,10 @@ def test_pool_never_fit_page_does_not_flush_cotenants():
     pred = shared_pass_counters({"small": [40, 40], "huge": [200]},
                                 budget_bytes=100, ticks=2)
     # 'small' keeps its pool hits on tick 2; 'huge' never evicts anyone
-    assert pred["small"] == dict(swaps=2, misses=2, pool_hits=2, evicted=0)
-    assert pred["huge"] == dict(swaps=2, misses=2, pool_hits=0, evicted=0)
+    assert pred["small"] == dict(swaps=2, misses=2, pool_hits=2, evicted=0,
+                                 bytes_wire=80, bytes_raw=80)
+    assert pred["huge"] == dict(swaps=2, misses=2, pool_hits=0, evicted=0,
+                                bytes_wire=400, bytes_raw=400)
     pool = SharedPagePool(100)
 
     class _Stub:
@@ -389,5 +394,7 @@ def test_shared_pass_counters_starved_budget_closed_form():
     is a host->device swap, no pool hits, no evictions."""
     pages = {"a": [100, 100], "b": [100]}
     pred = shared_pass_counters(pages, budget_bytes=50, ticks=2)
-    assert pred["a"] == dict(swaps=4, misses=2, pool_hits=0, evicted=0)
-    assert pred["b"] == dict(swaps=2, misses=2, pool_hits=0, evicted=0)
+    assert pred["a"] == dict(swaps=4, misses=2, pool_hits=0, evicted=0,
+                             bytes_wire=400, bytes_raw=400)
+    assert pred["b"] == dict(swaps=2, misses=2, pool_hits=0, evicted=0,
+                             bytes_wire=200, bytes_raw=200)
