@@ -56,7 +56,7 @@ byte ledgers still sit on the static ``kv_pass_counters`` prediction,
 and times the fetch-side decode as the ``serving_page_decode``
 micro-line.
 
-Emits the ``repro.serving.metrics/v7`` multi document (default
+Emits the ``repro.serving.metrics/v8`` multi document (default
 ``BENCH_serving.json``; the single-model summary rides along under
 ``single_model``, the deadline gate under ``xr_gate``) — tok/s, p99
 tick latency, TTFT, deadline-miss rate, exposed/hidden paging stalls,
@@ -84,7 +84,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.paging import (SharedPagePool, kv_pass_counters,
                                page_sizes, pass_counters)
-from repro.core.placement import packed_sizes, plan_for_budget
+from repro.core.faults import FaultPlan
+from repro.core.placement import Placement, packed_sizes, plan_for_budget
 from repro.models import transformer as tfm
 from repro.parallel.sharding import freeze_for_serving
 from repro.serving import (MultiScheduler, Request, Scheduler,
@@ -98,11 +99,23 @@ STREAMS = (
 )
 
 
-def _build(arch, smoke, budget_frac, seed, page_bits=None):
+def _build(arch, smoke, budget_frac, seed, page_bits=None, wire_serve=False):
     cfg = get_config(arch)
     if smoke:
         cfg = cfg.smoke()
     params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
+    if wire_serve:
+        # wire-serve wants re-encoded int8 pages (page_bits != weight
+        # bits): an int4 device store whose cold pages stay blockwise
+        # int8 on the wire and skip the fetch decode entirely
+        packed = freeze_for_serving(params, bits=4)
+        sizes = packed_sizes(packed)
+        plan = plan_for_budget(sizes,
+                               int(sum(sizes.values()) * budget_frac),
+                               hot=Placement("l1mram", 4, "resident"),
+                               cold=Placement("l1mram", 4, "paged", 8),
+                               sizes_bits=4)
+        return cfg, packed, plan
     packed = freeze_for_serving(params, bits=8)
     sizes = packed_sizes(packed)
     plan = plan_for_budget(sizes, int(sum(sizes.values()) * budget_frac))
@@ -203,6 +216,73 @@ def _bench_multi(args, tracer=None):
     return doc, dict(tenants=list(tenants), shared_budget_bytes=budget,
                      counters_match=pred_ok,
                      bit_exact_vs_solo=exact_ok if args.smoke else None)
+
+
+def _bench_chaos(args):
+    """Chaos leg (``--fault-seed``): the SAME two-tenant pooled run twice
+    — fault-free, then under a seeded :class:`FaultPlan` — asserting the
+    headline robustness guarantee end to end: bit-exact tokens, retries
+    actually absorbed faults, and no corrupted page ever reached compute
+    (every checksum failure was caught pre-install and re-fetched)."""
+
+    def run(faults):
+        tenants = {args.arch: _build(args.arch, args.smoke,
+                                     args.budget_frac, seed=0,
+                                     page_bits=args.page_bits)}
+        name2 = args.arch2 if args.arch2 != args.arch else args.arch2 + "#2"
+        tenants[name2] = _build(args.arch2, args.smoke, args.budget_frac,
+                                seed=1, page_bits=args.page_bits)
+        cold = sum(plan.paged_bytes(packed_sizes(packed))
+                   for _c, packed, plan in tenants.values())
+        budget = max(int(cold * args.shared_budget_frac), 1)
+        ms = MultiScheduler(pool=SharedPagePool(budget) if cold else None,
+                            async_io=args.async_io, faults=faults)
+        for name, (cfg, packed, plan) in tenants.items():
+            eng = ServingEngine(cfg, packed, batch_slots=args.slots,
+                                max_len=args.max_len, plan=plan,
+                                seed=args.seed)
+            ms.add_model(name, eng, prefill_chunk=args.prefill_chunk,
+                         kv_paged=args.kv_paged and "kv" in eng.cache,
+                         kv_block_rows=args.kv_block)
+        for salt, (name, (cfg, _p, _pl)) in enumerate(tenants.items()):
+            for req in _tenant_reqs(cfg, args, salt):
+                ms.submit(name, req)
+        done = ms.run_until_done()
+        doc = validate(ms.summary())
+        ms.close()
+        toks = {name: {r.uid: r.generated for r in rs}
+                for name, rs in done.items()}
+        return toks, doc
+
+    base_toks, base_doc = run(None)
+    assert all(v == 0 for v in base_doc["totals"]["faults"].values()), \
+        "fault-free leg reported nonzero fault counters"
+    plan = FaultPlan(seed=args.fault_seed, fail_rate=args.fault_rate,
+                     bitflip_rate=args.fault_bitflip, spike_rate=0.05,
+                     spike_s=0.0005)
+    chaos_toks, doc = run(plan)
+    ft = doc["totals"]["faults"]
+    bit_exact = chaos_toks == base_toks
+    if not bit_exact:
+        raise SystemExit("chaos leg: tokens diverged from the fault-free "
+                         "run under seeded faults")
+    if ft["retries"] <= 0 or ft["checksum_failures"] <= 0:
+        raise SystemExit(f"chaos leg exercised too little ({ft}) — it "
+                         f"must see at least one retried transient AND "
+                         f"one CRC-caught bit-flip; raise the rates or "
+                         f"pick a seed that hits the tenants' pages")
+    # every corrupted wire payload must have been caught by the page CRC
+    # and re-fetched; none may survive to an install (bit-exact tokens
+    # above are the end-to-end evidence, this is the ledger-level check)
+    if ft["checksum_failures"] != ft["refetches"]:
+        raise SystemExit(f"chaos leg: {ft['checksum_failures']} checksum "
+                         f"failures but {ft['refetches']} refetches")
+    doc["chaos"] = dict(fault_plan=dict(seed=args.fault_seed,
+                                        fail_rate=args.fault_rate,
+                                        bitflip_rate=args.fault_bitflip,
+                                        spike_rate=0.05),
+                        bit_exact_vs_fault_free=bit_exact)
+    return doc
 
 
 class _VirtualClock:
@@ -399,12 +479,31 @@ def main(argv=None):
                          "continuous XR-gate leg) as ONE Chrome Trace "
                          "Event JSON at this path; open in "
                          "chrome://tracing or ui.perfetto.dev")
+    ap.add_argument("--wire-serve", action="store_true",
+                    help="solo leg: int4 device store whose cold pages "
+                         "are re-encoded int8 and served straight from "
+                         "the wire form by the blockscale matmul (no "
+                         "fetch decode); incompatible with --page-bits")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="run the chaos leg: repeat the two-tenant run "
+                         "under a FaultPlan with this seed and assert "
+                         "bit-exact tokens vs the fault-free leg "
+                         "(writes BENCH_serving_chaos.json)")
+    ap.add_argument("--fault-rate", type=float, default=0.15,
+                    help="chaos leg transient fetch-failure probability")
+    ap.add_argument("--fault-bitflip", type=float, default=0.15,
+                    help="chaos leg wire bit-flip probability")
+    ap.add_argument("--chaos-out", default="BENCH_serving_chaos.json")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.wire_serve and args.page_bits is not None:
+        ap.error("--wire-serve fixes the page encoding (int8 over an "
+                 "int4 store); drop --page-bits")
 
     cfg, packed, plan = _build(args.arch, args.smoke, args.budget_frac,
-                               seed=0, page_bits=args.page_bits)
+                               seed=0, page_bits=args.page_bits,
+                               wire_serve=args.wire_serve)
     sizes = packed_sizes(packed)
     budget = int(sum(sizes.values()) * args.budget_frac)
     print(plan.summary(sizes))
@@ -413,7 +512,7 @@ def main(argv=None):
     eng = ServingEngine(cfg, packed, batch_slots=args.slots,
                         max_len=args.max_len, plan=plan, seed=args.seed)
     if plan.paged_bytes(sizes) > 0:
-        eng.attach_paging()
+        eng.attach_paging(wire_serve=args.wire_serve)
     if args.kv_paged:
         eng.attach_kv_paging(args.kv_block)
     # the solo leg runs under the SAME continuous-batching token budget
@@ -516,11 +615,20 @@ def main(argv=None):
                      / max(reps * len(host), 1) * 1e6)
         page_decode = dict(
             decode_us_per_param=decode_us, params=len(host),
-            encoding=("fp" if args.page_bits is None
+            encoding=("int8" if args.wire_serve
+                      else "fp" if args.page_bits is None
                       else f"int{args.page_bits}"),
             decode_s_in_run=eng.pager.decode_s,
+            # wire-serve: wire bytes that never paid the decode above
+            # (served straight to the blockscale matmul)
+            decode_skipped_bytes=eng.pager.decode_skipped_bytes,
             bytes_streamed_wire=eng.pager.bytes_streamed_wire,
             bytes_streamed_raw=eng.pager.bytes_streamed_raw)
+        if args.wire_serve:
+            assert eng.pager.decode_skipped_bytes > 0, \
+                "--wire-serve streamed every page through the decode path"
+            assert eng.pager.decode_s == 0.0, \
+                "--wire-serve still paid fetch decode time"
     if eng.pager is not None:
         eng.pager.close()
     if eng.kv_table is not None:
@@ -608,6 +716,7 @@ def main(argv=None):
               f"encoding={pd['encoding']}"
               f";params={pd['params']}"
               f";decode_ms_in_run={pd['decode_s_in_run'] * 1e3:.2f}"
+              f";decode_skipped_bytes={pd['decode_skipped_bytes']}"
               f";wire_bytes={pd['bytes_streamed_wire']}"
               f";raw_bytes={pd['bytes_streamed_raw']}"
               f";compression={ratio:.2f}x")
@@ -641,6 +750,20 @@ def main(argv=None):
           f";evictions={pool.get('evictions', 0)}"
           f";counters_match={multi_cfg['counters_match']}"
           f";bit_exact={multi_cfg['bit_exact_vs_solo']}")
+    if args.fault_seed is not None:
+        chaos_doc = _bench_chaos(args)
+        with open(args.chaos_out, "w") as fh:
+            json.dump(chaos_doc, fh, indent=2)
+            fh.write("\n")
+        cf = chaos_doc["totals"]["faults"]
+        print(f"serving_chaos,{cf['injected']},"
+              f"retries={cf['retries']}"
+              f";checksum_failures={cf['checksum_failures']}"
+              f";refetches={cf['refetches']}"
+              f";fetch_timeouts={cf['fetch_timeouts']}"
+              f";deferred_ticks={cf['deferred_ticks']}"
+              f";bit_exact={chaos_doc['chaos']['bit_exact_vs_fault_free']}"
+              f";out={args.chaos_out}")
     print(f"served {len(done)} single-model + {tot['requests']} tenant "
           f"requests over {sched.ticks} ticks; metrics -> {args.out}")
     return multi_doc

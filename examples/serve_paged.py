@@ -125,12 +125,12 @@ def main():
     prompts = [rng.integers(0, scfg.vocab_size, 6 + uid).astype(np.int32)
                for uid in range(4)]
 
-    def serve(plan, paged, async_io=True, tree=None):
+    def serve(plan, paged, async_io=True, tree=None, faults=None):
         eng = ServingEngine(scfg, spacked if tree is None else tree,
                             batch_slots=2, max_len=64,
                             plan=plan)
         if paged:
-            eng.attach_paging()
+            eng.attach_paging(faults=faults)
         sched = Scheduler(eng, prefill_chunk=8, async_io=async_io)
         for uid, prompt in enumerate(prompts):
             sched.submit(Request(uid=uid, prompt=prompt, max_new_tokens=6))
@@ -181,6 +181,25 @@ def main():
     print(f"  encoded pages (int4 wire, lossy): {len(rt)} cold params "
           f"round-tripped; tokens bit-exact vs the round-tripped "
           f"resident reference")
+
+    # CHAOS (repro.launch.serve --fault-seed): the same paged serve under
+    # a seeded FaultPlan — transient fetch failures retried with backoff,
+    # wire bit-flips caught by the per-page CRC and re-fetched.  Faults
+    # cost retries, never tokens: the generation stays bit-exact vs the
+    # fully resident plan.  Every decision is a pure hash of
+    # (seed, kind, model, page, attempt), so this run's fault sequence
+    # is identical on every machine.
+    from repro.core.faults import FaultPlan
+    chaos, ceng, csched = serve(
+        splan, paged=True,
+        faults=FaultPlan(seed=3, fail_rate=0.2, bitflip_rate=0.2))
+    assert chaos == resident            # recovery is invisible to tokens
+    ft = csched.faults_summary()
+    assert ft["injected"] > 0 and ft["retries"] > 0
+    assert ft["checksum_failures"] == ft["refetches"]   # no corrupt install
+    print(f"  chaos serve (seed 3): {ft['injected']} faults injected, "
+          f"{ft['retries']} retries, {ft['checksum_failures']} CRC misses "
+          f"all re-fetched — tokens bit-exact vs resident")
     print("serve_paged OK")
 
 

@@ -1,3 +1,6 @@
-from repro.checkpoint.manager import CheckpointManager, save_pytree, restore_pytree
+from repro.checkpoint.manager import (CheckpointManager,
+                                      CheckpointRestoreError,
+                                      save_pytree, restore_pytree)
 
-__all__ = ["CheckpointManager", "save_pytree", "restore_pytree"]
+__all__ = ["CheckpointManager", "CheckpointRestoreError",
+           "save_pytree", "restore_pytree"]

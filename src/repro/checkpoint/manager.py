@@ -32,6 +32,21 @@ import jax
 import numpy as np
 
 
+class CheckpointRestoreError(RuntimeError):
+    """A restore failed; names the step (and root) it failed for.
+
+    Raised when no checkpoint exists to restore, or when the named step's
+    directory is unreadable (missing/corrupt manifest, missing leaf file)
+    — i.e. everything short of a structural mismatch with the caller's
+    ``tree_like``, which keeps its specific KeyError/ValueError."""
+
+    def __init__(self, message: str, *, step: Optional[int] = None,
+                 root: Optional[Path] = None):
+        self.step = step
+        self.root = root
+        super().__init__(message)
+
+
 def _flatten(tree: Any) -> List[Tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = []
@@ -164,7 +179,15 @@ class CheckpointManager:
                 shardings: Any = None) -> Tuple[int, Any]:
         step = step if step is not None else self.latest_step()
         if step is None:
-            raise FileNotFoundError(f"no checkpoints under {self.root}")
-        tree = restore_pytree(tree_like, self.root / f"step_{step:08d}",
-                              shardings)
+            raise CheckpointRestoreError(
+                f"no checkpoints under {self.root}", root=self.root)
+        try:
+            tree = restore_pytree(tree_like, self.root / f"step_{step:08d}",
+                                  shardings)
+        except (OSError, json.JSONDecodeError) as e:
+            # a half-written .tmp never reaches all_steps(), so landing
+            # here means the renamed directory itself is damaged
+            raise CheckpointRestoreError(
+                f"checkpoint step {step} under {self.root} is unreadable: "
+                f"{e}", step=step, root=self.root) from e
         return step, tree

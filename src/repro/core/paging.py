@@ -30,15 +30,22 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import zlib
 from collections import OrderedDict
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from repro.core import packing, quantize
-from repro.core.placement import Placement, PlacementPlan, path_key
+from repro.core.faults import (FaultsArg, PageChecksumError, PageFetchError,
+                               PageFetchTimeout, ScheduleError,
+                               TransientFetchFault, as_injector,
+                               new_fault_counters)
+from repro.core.placement import Placement, PlacementPlan, path_key, \
+    wire_served_bits
 from repro.core.weight_store import WeightStore, PackedParam, SIRACUSA_MRAM_BYTES
 
 # Scale-group width of the intN page wire codec (weights per f32 scale).
@@ -70,6 +77,11 @@ class Page:
     wire_nbytes: Optional[int] = None
     raw_nbytes: Optional[int] = None
     encoding: str = "fp"
+    # CRC32 over the page's wire image (the ECC analogue of the At-MRAM
+    # read path): a chain over the member params' own wire checksums,
+    # stamped by build_pages(host=...) and verified by the fetch path
+    # BEFORE decode/install.  None = unchecksummed (no host image given).
+    crc32: Optional[int] = None
 
     def __post_init__(self):
         if self.wire_nbytes is None:
@@ -117,9 +129,24 @@ def _param_page_sizes(p: PackedParam, placement: Optional[Placement]
     return enc, dev, wire, n_weights * 4
 
 
+def page_crc(host_params: Sequence["HostParam"]) -> Optional[int]:
+    """Chain the member params' wire CRCs into one page-level checksum.
+
+    Chaining the 4-byte CRC words (rather than re-hashing the concatenated
+    payloads) lets the fetch path verify per-param buffers it already
+    holds without materialising one contiguous wire image."""
+    acc = 0
+    for hp in host_params:
+        if hp is None or hp.crc32 is None:
+            return None
+        acc = zlib.crc32(int(hp.crc32).to_bytes(4, "little"), acc)
+    return acc & 0xFFFFFFFF
+
+
 def build_pages(store: WeightStore, page_bytes: int = SIRACUSA_MRAM_BYTES,
                 order: Optional[Sequence[str]] = None,
-                plan: Optional[PlacementPlan] = None) -> List[Page]:
+                plan: Optional[PlacementPlan] = None,
+                host: Optional[Dict[str, "HostParam"]] = None) -> List[Page]:
     """Greedy first-fit pagination preserving access (layer) order.
 
     Keeping pages contiguous in access order is what makes proactive
@@ -133,6 +160,12 @@ def build_pages(store: WeightStore, page_bytes: int = SIRACUSA_MRAM_BYTES,
     encodings never share a page (a page is decoded as one unit, and its
     scales travel inside its payload), so an encoding change closes the
     current page even when bytes would still fit.
+
+    When ``host`` is given (the store's :class:`HostParam` wire images,
+    fp and encoded alike), each page is stamped with a CRC32 over its
+    wire bytes (:func:`page_crc`) and the fetch path verifies it before
+    installing the page — corruption on the link re-fetches instead of
+    silently decoding garbage.
     """
     names = list(order) if order is not None else list(store.params.keys())
     if plan is not None:
@@ -144,8 +177,10 @@ def build_pages(store: WeightStore, page_bytes: int = SIRACUSA_MRAM_BYTES,
 
     def _close():
         nonlocal cur, cur_dev, cur_wire, cur_raw
+        crc = (page_crc([host.get(n) for n in cur])
+               if host is not None else None)
         pages.append(Page(len(pages), tuple(cur), cur_dev, cur_wire,
-                          cur_raw, cur_enc))
+                          cur_raw, cur_enc, crc))
         cur, cur_dev, cur_wire, cur_raw = [], 0, 0, 0
 
     for name in names:
@@ -236,21 +271,29 @@ def make_schedule(n_pages: int, resident_slots: int = 2) -> List[PageScheduleEnt
 def validate_schedule(entries: Sequence[PageScheduleEntry],
                       resident_slots: int = 2) -> None:
     """Invariants (property-tested): every page resident before use, the
-    in-use page is never evicted, residency never exceeds the slot count."""
+    in-use page is never evicted, residency never exceeds the slot count.
+
+    Violations raise :class:`repro.core.faults.ScheduleError` (with the
+    offending page attached) — a *programming* error, distinct from the
+    fault-path :class:`~repro.core.faults.PageFetchError` family a caller
+    may want to retry or degrade on."""
     resident: List[int] = []
     for e in entries:
         if e.page not in resident:
             resident.append(e.page)      # demand fetch (cold miss)
         if e.evicts is not None:
             if e.evicts == e.page:
-                raise AssertionError("schedule evicts the in-use page")
+                raise ScheduleError(
+                    f"schedule evicts the in-use page {e.page}",
+                    page=e.page)
             if e.evicts in resident:
                 resident.remove(e.evicts)
         if e.prefetch_next is not None and e.prefetch_next not in resident:
             resident.append(e.prefetch_next)
         if len(resident) > resident_slots:
-            raise AssertionError(
-                f"residency {resident} exceeds {resident_slots} slots")
+            raise ScheduleError(
+                f"residency {resident} exceeds {resident_slots} slots at "
+                f"page {e.page}", page=e.page)
 
 
 class SharedPagePool:
@@ -440,7 +483,7 @@ class SharedPagePool:
     def summary(self) -> Dict[str, Any]:
         """Per-model swap/miss/pool-hit/evict counters, the wire/raw
         streamed-bytes ledger, and the exposed/hidden stall split + pool
-        state — the ``shared_pool`` section of the metrics/v7 JSON.  The
+        state — the ``shared_pool`` section of the metrics/v8 JSON.  The
         stall seconds here are the pool's per-model *view* of the same
         wall time the engines report in their own ``paging`` sections;
         totals must sum ONE of the two, never both.  ``bytes_streamed_*``
@@ -552,6 +595,9 @@ class HostParam:
     page_bits: Optional[int]          # wire bits (None = fp/verbatim)
     payload: np.ndarray
     scales: np.ndarray
+    # CRC32 over (payload, scales) bytes — the param's share of its page's
+    # wire checksum (:func:`page_crc`); stamped by encode_host_param
+    crc32: Optional[int] = None
 
     @property
     def identity(self) -> bool:
@@ -565,16 +611,34 @@ class HostParam:
     def wire_nbytes(self) -> int:
         return int(self.payload.nbytes) + int(self.scales.nbytes)
 
-    def decode(self) -> Tuple[np.ndarray, np.ndarray]:
+    def wire_crc(self, payload: Optional[np.ndarray] = None,
+                 scales: Optional[np.ndarray] = None) -> int:
+        """CRC32 of the wire image — of the stored buffers, or of the
+        buffers a fetch actually received (to verify before decode)."""
+        payload = self.payload if payload is None else payload
+        scales = self.scales if scales is None else scales
+        crc = zlib.crc32(np.ascontiguousarray(payload).tobytes())
+        crc = zlib.crc32(np.ascontiguousarray(scales).tobytes(), crc)
+        return crc & 0xFFFFFFFF
+
+    def decode(self, payload: Optional[np.ndarray] = None,
+               scales: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
         """Wire form -> device form ``(packed, scale)``, host-side.
 
         Identity encodings return the stored buffers untouched (zero
-        decode cost — the fetch path device_puts them directly)."""
+        decode cost — the fetch path device_puts them directly).  The
+        optional ``payload``/``scales`` overrides decode a *transferred*
+        copy of the wire buffers instead of the pristine host image — the
+        fault-injection path uses this so a simulated in-flight bit-flip
+        genuinely reaches the decode (and, absent checksums, the device)."""
+        payload = self.payload if payload is None else payload
+        scales = self.scales if scales is None else scales
         if self.identity:
-            return self.payload, self.scales
+            return payload, scales
         k = int(self.orig_shape[-1])
-        levels = np.asarray(packing.unpack(self.payload, self.page_bits, k))
-        dense = quantize.dequantize_blockwise(levels, self.scales,
+        levels = np.asarray(packing.unpack(payload, self.page_bits, k))
+        dense = quantize.dequantize_blockwise(levels, scales,
                                               block=PAGE_ENC_BLOCK)
         qt = quantize.quantize_weights(dense, self.bits, channel_axis=0)
         packed = np.asarray(packing.pack(qt.values, self.bits))
@@ -594,16 +658,17 @@ def encode_host_param(p: PackedParam, page_bits: Optional[int]) -> HostParam:
                    packed_shape=tuple(packed.shape),
                    scale_shape=tuple(scale.shape),
                    page_bits=page_bits, payload=packed, scales=scale)
-    if hp.identity:
-        return hp
-    k = int(p.orig_shape[-1])
-    levels = np.asarray(packing.unpack(packed.reshape(-1, packed.shape[-1]),
-                                       p.bits, k), np.float32)
-    dense = levels * scale.reshape(-1, 1).astype(np.float32)
-    wire_levels, wire_scales = quantize.quantize_blockwise(
-        dense, page_bits, block=PAGE_ENC_BLOCK)
-    hp.payload = np.asarray(packing.pack(wire_levels, page_bits))
-    hp.scales = wire_scales
+    if not hp.identity:
+        k = int(p.orig_shape[-1])
+        levels = np.asarray(packing.unpack(packed.reshape(-1,
+                                                          packed.shape[-1]),
+                                           p.bits, k), np.float32)
+        dense = levels * scale.reshape(-1, 1).astype(np.float32)
+        wire_levels, wire_scales = quantize.quantize_blockwise(
+            dense, page_bits, block=PAGE_ENC_BLOCK)
+        hp.payload = np.asarray(packing.pack(wire_levels, page_bits))
+        hp.scales = wire_scales
+    hp.crc32 = hp.wire_crc()
     return hp
 
 
@@ -616,6 +681,61 @@ def page_roundtrip_param(p: PackedParam, page_bits: Optional[int]
     packed, scale = encode_host_param(p, page_bits).decode()
     return PackedParam(packed=packed, scale=scale, bits=p.bits,
                        orig_shape=tuple(p.orig_shape))
+
+
+def page_crc_of_buffers(wire: Sequence[Tuple[str, "HostParam", np.ndarray,
+                                             np.ndarray]]) -> int:
+    """Page CRC recomputed from the buffers a fetch actually received —
+    the verify-side counterpart of :func:`page_crc`."""
+    acc = 0
+    for _name, hp, payload, scales in wire:
+        c = hp.wire_crc(payload=payload, scales=scales)
+        acc = zlib.crc32(c.to_bytes(4, "little"), acc)
+    return acc & 0xFFFFFFFF
+
+
+def retry_fetch(store: Any, idx: int, attempt_fn: Callable[[int], Any]) -> Any:
+    """Run one logical page fetch under the store's retry policy.
+
+    ``attempt_fn(attempt)`` performs attempt number ``attempt`` (0-based)
+    and either returns the fetched result or raises
+    :class:`~repro.core.faults.TransientFetchFault` (injected failure) /
+    :class:`~repro.core.faults.PageChecksumError` (wire corruption caught
+    before install).  Both retry with the plan's bounded deterministic
+    exponential backoff; exhausting ``max_attempts`` raises a typed
+    :class:`~repro.core.faults.PageFetchError` naming model/page/attempts.
+    Runs on the fetch worker thread — the backoff sleeps are I/O latency,
+    visible to ``fence()`` like any other stream time.  Counters land on
+    ``store.fault_counters``; a store with no fault plan has a budget of
+    one attempt (nothing injects faults into it, and a genuine checksum
+    mismatch would re-read the same host bytes anyway)."""
+    inj = store.faults
+    plan = inj.plan if inj is not None else None
+    max_attempts = plan.max_attempts if plan is not None else 1
+    attempt = 0
+    while True:
+        try:
+            return attempt_fn(attempt)
+        except (TransientFetchFault, PageChecksumError) as e:
+            if isinstance(e, TransientFetchFault):
+                store.fault_counters["injected"] += 1
+                if store.tracer is not None:
+                    store.tracer.instant("fault", track="io",
+                                         model=store.name, page=idx,
+                                         kind="fail", attempt=attempt)
+            else:
+                store.fault_counters["checksum_failures"] += 1
+                store.fault_counters["refetches"] += 1
+            attempt += 1
+            if attempt >= max_attempts:
+                raise PageFetchError(model=store.name, page=idx,
+                                     attempts=attempt, last_error=e) from e
+            store.fault_counters["retries"] += 1
+            if store.tracer is not None:
+                store.tracer.instant("retry", track="io", model=store.name,
+                                     page=idx, attempt=attempt,
+                                     cause=type(e).__name__)
+            time.sleep(plan.backoff(attempt))
 
 
 class HostPagedStore:
@@ -637,20 +757,32 @@ class HostPagedStore:
     device-bytes budget under ``name``: every fetched page is admitted to
     the pool (cross-model LRU eviction), and pages still pooled from an
     earlier pass are reused without a host->device swap.
+
+    With ``faults`` (a :class:`~repro.core.faults.FaultPlan` or a shared
+    :class:`~repro.core.faults.FaultInjector`), every fetch attempt runs
+    under seeded fault injection; transient failures and checksum
+    mismatches retry with bounded deterministic backoff
+    (:func:`retry_fetch`), and ``fault_counters`` ledgers what was
+    injected and survived.  Because every page carries a CRC32 over its
+    wire bytes and a corrupted fetch re-reads the pristine host image,
+    decode output stays bit-exact vs the fault-free run for any plan
+    within the retry budget.
     """
 
     def __init__(self, store: WeightStore, page_bytes: int,
                  device: Optional[jax.Device] = None,
                  plan: Optional[PlacementPlan] = None,
                  pool: Optional[SharedPagePool] = None,
-                 name: str = "default"):
+                 name: str = "default",
+                 faults: FaultsArg = None):
         self.store = store
         self.plan = plan
         self.pool = pool
         self.name = name
-        self.pages = build_pages(store, page_bytes, plan=plan)
         self.device = device or jax.devices()[0]
         # evacuate packed params to the host wire image (off-chip flash)
+        # BEFORE paginating, so build_pages can stamp each page's CRC32
+        # over the wire bytes it will actually move
         self._host: Dict[str, HostParam] = {}
         self.resident: Dict[str, PackedParam] = {}
         for name, p in store.params.items():
@@ -663,12 +795,24 @@ class HostPagedStore:
                 pb = (plan.placement_for(name).page_bits
                       if plan is not None else None)
                 self._host[name] = encode_host_param(p, pb)
+        self.pages = build_pages(store, page_bytes, plan=plan,
+                                 host=self._host)
+        # wire-serve (plan.wire_serve=True): cold params whose fetch skips
+        # the host decode entirely — the blockscale matmul consumes the
+        # page's wire form directly (placement.wire_served_bits is the
+        # single predicate the store and the model's `linear` both obey)
+        self.wire_served = {n for n in self._host
+                            if wire_served_bits(plan, n) is not None}
         self._pool = ThreadPoolExecutor(max_workers=1)
         self.swap_count = 0
         self.miss_count = 0
         self.bytes_streamed_wire = 0
         self.bytes_streamed_raw = 0
         self.decode_s = 0.0
+        self.decode_skipped_bytes = 0
+        self.faults = as_injector(faults)
+        self.fault_counters = new_fault_counters()
+        self._closed = False
         self._live: Dict[int, Dict[str, PackedParam]] = {}
         # opt-in chrome-trace hook (ServingEngine.set_tracer): per-page
         # fetch spans on the "io" track, emitted from the fetch worker
@@ -687,6 +831,9 @@ class HostPagedStore:
     def _fetch_page(self, idx: int) -> Dict[str, PackedParam]:
         tr = self.tracer
         t0 = tr.now() if tr is not None else 0.0
+        if self._closed:
+            raise CancelledError(f"{self.name}: store closed before fetch "
+                                 f"of page {idx} started")
         if self.pool is not None:
             cached = self.pool.lookup(self.name, idx)
             if cached is not None:
@@ -695,16 +842,14 @@ class HostPagedStore:
                                 model=self.name, page=idx, pool_hit=True)
                 return cached
         page = self.pages[idx]
-        out = {}
-        for name in page.param_names:
-            hp = self._host[name]
-            t_dec = time.perf_counter()
-            packed, scale = hp.decode()
-            self.decode_s += time.perf_counter() - t_dec
-            out[name] = PackedParam(
-                packed=jax.device_put(packed, self.device),
-                scale=jax.device_put(scale, self.device),
-                bits=hp.bits, orig_shape=hp.orig_shape)
+        out = retry_fetch(self, idx,
+                          lambda attempt: self._fetch_page_once(idx, page,
+                                                                attempt))
+        if self._closed:
+            # close(wait=False) landed while this fetch was decoding:
+            # drop the page instead of installing into a closed store
+            raise CancelledError(f"{self.name}: store closed during fetch "
+                                 f"of page {idx}")
         self.swap_count += 1
         self.bytes_streamed_wire += page.wire_nbytes
         self.bytes_streamed_raw += page.raw_nbytes
@@ -717,6 +862,69 @@ class HostPagedStore:
                         page=idx, nbytes=page.nbytes,
                         wire_nbytes=page.wire_nbytes,
                         encoding=page.encoding, pool_hit=False)
+        return out
+
+    def _fetch_page_once(self, idx: int, page: Page,
+                         attempt: int) -> Dict[str, PackedParam]:
+        """One fetch attempt: inject faults, transfer the wire buffers,
+        verify the page CRC *before* decoding, decode, device_put.
+
+        Corruption (an injected bit-flip) lands on a transient copy of
+        the wire payload — the pristine host image is never touched, so
+        the retry a checksum mismatch triggers re-reads clean bytes."""
+        inj = self.faults
+        if inj is not None:
+            self.fault_counters["injected"] += inj.pre_fetch(self.name, idx,
+                                                             attempt)
+        wire: List[Tuple[str, HostParam, np.ndarray, np.ndarray]] = []
+        for name in page.param_names:
+            hp = self._host[name]
+            payload = hp.payload
+            if inj is not None:
+                flipped = inj.corrupt(self.name, idx, attempt,
+                                      np.ascontiguousarray(payload).tobytes())
+                if flipped is not None:
+                    self.fault_counters["injected"] += 1
+                    if self.tracer is not None:
+                        self.tracer.instant("fault", track="io",
+                                            model=self.name, page=idx,
+                                            kind="bitflip", param=name,
+                                            attempt=attempt)
+                    payload = np.frombuffer(
+                        flipped, dtype=payload.dtype).reshape(payload.shape)
+            wire.append((name, hp, payload, hp.scales))
+        if page.crc32 is not None:
+            got = page_crc_of_buffers(wire)
+            if got != page.crc32:
+                raise PageChecksumError(model=self.name, page=idx,
+                                        expected=page.crc32, got=got)
+        out: Dict[str, PackedParam] = {}
+        for name, hp, payload, scales in wire:
+            if name in self.wire_served:
+                # wire-serve fast path: ship the blockwise wire form
+                # (packed page_bits levels + per-block scales) as-is; the
+                # blockscale matmul expands it adjacent to the compute.
+                # CRC already verified above, so corrupted wire bytes
+                # never reach the device on this path either.
+                self.decode_skipped_bytes += hp.wire_nbytes
+                # the codec flattens to (rows, k); restore the device
+                # carrier's leading dims (stacked-layer params scan over
+                # the leading axis)
+                lead = hp.packed_shape[:-1]
+                out[name] = PackedParam(
+                    packed=jax.device_put(payload.reshape(*lead, -1),
+                                          self.device),
+                    scale=jax.device_put(scales.reshape(*lead, -1),
+                                         self.device),
+                    bits=hp.page_bits, orig_shape=hp.orig_shape)
+                continue
+            t_dec = time.perf_counter()
+            packed, scale = hp.decode(payload=payload, scales=scales)
+            self.decode_s += time.perf_counter() - t_dec
+            out[name] = PackedParam(
+                packed=jax.device_put(packed, self.device),
+                scale=jax.device_put(scale, self.device),
+                bits=hp.bits, orig_shape=hp.orig_shape)
         return out
 
     def stream(self, resident_slots: int = 2) -> "PageStream":
@@ -748,7 +956,11 @@ class HostPagedStore:
     def close(self, wait: bool = True):
         """Shut the prefetch worker down.  ``wait=True`` (default) blocks
         until in-flight swaps finish — never leak a ``_fetch_page`` past
-        interpreter teardown; ``wait=False`` cancels what it can instead."""
+        interpreter teardown; ``wait=False`` cancels what it can instead.
+        Either way the closed flag is raised FIRST, so a fetch already
+        running on the worker (which ``cancel_futures`` cannot stop)
+        aborts before installing its page into the store or pool."""
+        self._closed = True
         self._pool.shutdown(wait=wait, cancel_futures=not wait)
 
     def __enter__(self) -> "HostPagedStore":
@@ -789,7 +1001,10 @@ class PageStream:
     def close(self):
         for fut in self._inflight.values():
             if not fut.cancel():
-                fut.result()        # already running: drain, don't leak
+                try:
+                    fut.result()    # already running: drain, don't leak
+                except CancelledError:
+                    pass            # store closed mid-fetch: nothing to keep
         self._inflight.clear()
         self._store._live.clear()   # slots reclaimed between passes
         self._gen.close()
@@ -817,7 +1032,10 @@ class PageStream:
         finally:
             for fut in self._inflight.values():
                 if not fut.cancel():
-                    fut.result()
+                    try:
+                        fut.result()
+                    except CancelledError:
+                        pass        # store closed mid-fetch: drop the page
             self._inflight.clear()
             st._live.clear()
 
@@ -919,11 +1137,19 @@ class AsyncPageStream:
         """True once fenced (or closed) — the pass can't be consumed twice."""
         return self._result is not None or self._closed
 
-    def fence(self) -> Dict[str, PackedParam]:
+    def fence(self, timeout_s: Optional[float] = None
+              ) -> Dict[str, PackedParam]:
         """Join the pass: block until every page is device-ready, thread
         nothing (the caller owns template threading), and record the
         exposed/hidden stall split.  Idempotent — a second fence returns
-        the same params without re-waiting or re-accounting."""
+        the same params without re-waiting or re-accounting.
+
+        ``timeout_s`` bounds the TOTAL wait across the pass's remaining
+        fetches; exceeding it raises
+        :class:`~repro.core.faults.PageFetchTimeout` and leaves the pass
+        fully resumable — no futures are dropped, no stall is accounted,
+        and a later ``fence()`` picks up exactly where this one gave up
+        (the degradation hook the scheduler's tick deferral rides)."""
         if self._closed:
             raise RuntimeError("fence() after close(): the pass was "
                                "cancelled")
@@ -931,8 +1157,17 @@ class AsyncPageStream:
             return self._result
         t_fence = time.perf_counter()
         dev: Dict[str, PackedParam] = {}
-        for _idx, fut in self._futures:
-            dev.update(fut.result())
+        for n_done, (_idx, fut) in enumerate(self._futures):
+            try:
+                remaining = (None if timeout_s is None else
+                             max(0.0, timeout_s - (time.perf_counter()
+                                                   - t_fence)))
+                dev.update(fut.result(timeout=remaining))
+            except FuturesTimeout:
+                self._store.fault_counters["fetch_timeouts"] += 1
+                raise PageFetchTimeout(
+                    model=self._store.name, timeout_s=timeout_s,
+                    pending=len(self._futures) - n_done) from None
         jax.block_until_ready([p.packed for p in dev.values()])
         t_join = time.perf_counter()
         # a result() can return a hair before the completion callback
@@ -1042,7 +1277,8 @@ class KVPageTable:
     def __init__(self, cache_kv: Dict[str, Any], *, block_rows: int = 16,
                  pool: Optional[SharedPagePool] = None,
                  name: str = "default/kv",
-                 device: Optional[jax.Device] = None):
+                 device: Optional[jax.Device] = None,
+                 faults: FaultsArg = None):
         if block_rows < 1:
             raise ValueError(f"block_rows must be >= 1, got {block_rows}")
         k = np.asarray(cache_kv["k"])
@@ -1069,6 +1305,13 @@ class KVPageTable:
         self.writebacks = 0          # blocks written back host-ward
         self.dropped = 0             # pooled blocks invalidated (slot reuse)
         self.preempt_drops = 0       # of which: mid-request preemptions
+        # KV rows move host numpy -> device directly (no wire codec), so
+        # there is nothing for a bit-flip to corrupt pre-checksum: the
+        # injector's transient failures / latency faults apply, bitflips
+        # don't (weight pages carry the CRC-checked wire path)
+        self.faults = as_injector(faults)
+        self.fault_counters = new_fault_counters()
+        self._closed = False
         # pool-less prediction log (pooled tables log into pool.events)
         self.events: List[Tuple] = []
         self._pending_drops: set = set()
@@ -1104,6 +1347,9 @@ class KVPageTable:
     def _fetch_block(self, page_idx: int) -> Dict[str, Any]:
         tr = self.tracer
         t0 = tr.now() if tr is not None else 0.0
+        if self._closed:
+            raise CancelledError(f"{self.name}: table closed before fetch "
+                                 f"of page {page_idx} started")
         if self.pool is not None:
             cached = self.pool.lookup(self.name, page_idx)
             if cached is not None:
@@ -1114,9 +1360,12 @@ class KVPageTable:
                                 pool_hit=True)
                 return cached
         slot, a, b = self._block_rows_span(page_idx)
-        rows = dict(
-            k=jax.device_put(self.host["k"][:, slot, :, a:b], self.device),
-            v=jax.device_put(self.host["v"][:, slot, :, a:b], self.device))
+        rows = retry_fetch(self, page_idx,
+                           lambda attempt: self._fetch_block_once(
+                               page_idx, slot, a, b, attempt))
+        if self._closed:
+            raise CancelledError(f"{self.name}: table closed during fetch "
+                                 f"of page {page_idx}")
         self.swap_count += 1
         self.miss_count += 1
         nb = (b - a) * self.row_nbytes
@@ -1129,6 +1378,15 @@ class KVPageTable:
                         model=self.name, page=page_idx,
                         nbytes=(b - a) * self.row_nbytes, pool_hit=False)
         return rows
+
+    def _fetch_block_once(self, page_idx: int, slot: int, a: int, b: int,
+                          attempt: int) -> Dict[str, Any]:
+        if self.faults is not None:
+            self.fault_counters["injected"] += self.faults.pre_fetch(
+                self.name, page_idx, attempt)
+        return dict(
+            k=jax.device_put(self.host["k"][:, slot, :, a:b], self.device),
+            v=jax.device_put(self.host["v"][:, slot, :, a:b], self.device))
 
     def writeback(self, slot: int, block_lo: int, block_hi: int,
                   cache_kv: Dict[str, Any]) -> None:
@@ -1202,6 +1460,10 @@ class KVPageTable:
         return KVPageStream(self, full_blocks)
 
     def close(self, wait: bool = True) -> None:
+        # flag first: a block fetch already running on the worker aborts
+        # before installing into the pool (same discipline as
+        # HostPagedStore.close)
+        self._closed = True
         self._exec.shutdown(wait=wait, cancel_futures=not wait)
 
     def __enter__(self) -> "KVPageTable":
@@ -1282,12 +1544,19 @@ class KVPageStream:
     def done(self) -> bool:
         return self._result is not None or self._closed
 
-    def fence(self, full_blocks: Optional[Dict[int, int]] = None
+    def fence(self, full_blocks: Optional[Dict[int, int]] = None,
+              timeout_s: Optional[float] = None
               ) -> Dict[int, Dict[str, Any]]:
         """Join the pass: demand-fetch blocks completed since begin, wait
         for every page, and record the exposed/hidden split.  Returns
         {page_index: {"k": rows, "v": rows}} for the engine to scatter.
-        Idempotent, like :meth:`AsyncPageStream.fence`."""
+        Idempotent, like :meth:`AsyncPageStream.fence`.
+
+        ``timeout_s`` bounds the total wait; on expiry the fence raises
+        :class:`~repro.core.faults.PageFetchTimeout` and stays resumable:
+        demand fetches submitted here are folded into ``_begun`` *before*
+        the join, so a re-fence after a deferred tick neither re-submits
+        nor re-logs them."""
         if self._closed:
             raise RuntimeError("fence() after close(): the pass was "
                                "cancelled")
@@ -1297,9 +1566,21 @@ class KVPageStream:
         if full_blocks is not None:
             self._submit(self._page_list(full_blocks, already=self._begun),
                          track=False)
+            for slot, n in full_blocks.items():
+                self._begun[int(slot)] = max(self._begun.get(int(slot), 0),
+                                             int(n))
         out: Dict[int, Dict[str, Any]] = {}
-        for p, fut in self._futures:
-            out[p] = fut.result()
+        for n_done, (p, fut) in enumerate(self._futures):
+            try:
+                remaining = (None if timeout_s is None else
+                             max(0.0, timeout_s - (time.perf_counter()
+                                                   - t_fence)))
+                out[p] = fut.result(timeout=remaining)
+            except FuturesTimeout:
+                self._table.fault_counters["fetch_timeouts"] += 1
+                raise PageFetchTimeout(
+                    model=self._table.name, timeout_s=timeout_s,
+                    pending=len(self._futures) - n_done) from None
         jax.block_until_ready([r for rows in out.values()
                                for r in rows.values()])
         t_join = time.perf_counter()

@@ -143,6 +143,10 @@ class PlacementPlan:
     default: Placement = Placement()
     rules: Tuple[Tuple[str, Placement], ...] = ()
     mode: str = "xla"
+    # serve int8-encoded cold pages straight from their wire form (packed
+    # blockwise levels + per-block scales) via the blockscale matmul
+    # kernel, skipping the host-side fetch decode; see wire_served_bits
+    wire_serve: bool = False
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -290,6 +294,31 @@ def linear_dispatch(engine: Any, path: Optional[str]
     plan = as_plan(engine)
     p = plan.placement_for(path)
     return p.scenario, plan.mode, p.weight_bits
+
+
+def wire_served_bits(engine: Any, path: Optional[str]) -> Optional[int]:
+    """Wire bits when this param is served straight from its page wire
+    form, else None.
+
+    The single source of truth for the wire-serve fast path: the paged
+    store uses it to decide which fetched params skip the host decode
+    (device_put the wire buffers), and :func:`repro.models.layers.linear`
+    uses it to dispatch those params to the blockscale matmul.  Both
+    sides MUST agree, so the predicate lives here: the plan opted in
+    (``wire_serve=True``), the param is paged through the ``l1mram``
+    linear path, and its wire encoding is a *re-encoded* int8 (an
+    identity encoding has nothing to skip; int2/int4 stay on the host
+    decode until the blockscale kernel path earns their tolerance)."""
+    if isinstance(engine, Mapping) or engine is None:
+        return None
+    plan = as_plan(engine)
+    if not getattr(plan, "wire_serve", False):
+        return None
+    p = plan.placement_for(path)
+    if (p.paged and p.scenario == "l1mram" and p.page_bits == 8
+            and p.page_bits != p.weight_bits):
+        return p.page_bits
+    return None
 
 
 def dp_axes_of(engine: Any) -> Tuple[str, ...]:

@@ -75,6 +75,32 @@ def quant_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array, *,
     return out.reshape(*lead, -1)
 
 
+def quant_matmul_blockscale(x: jax.Array, packed: jax.Array,
+                            scales: jax.Array, *, bits: int, k_orig: int,
+                            block: int = 32, mode: Mode = DEFAULT_MODE,
+                            bm: int = 128, bn: int = 128, bk: int = 512
+                            ) -> jax.Array:
+    """Float activations x *wire-form* packed weights -> f32.
+
+    The page codec's blockwise form (packed intN levels + per-(row,
+    ``block``) f32 scales) consumed directly — the serving fast path for
+    int8-encoded cold pages that skip the host-side fetch decode
+    (:func:`repro.core.placement.wire_served_bits`).  x may have leading
+    dims."""
+    _check_mode(mode)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if mode == "xla":
+        out = _ref.qmatmul_f32_blockscale(x2, packed, scales, bits=bits,
+                                          k_orig=k_orig, block=block)
+    else:
+        out = _qmm.qmatmul_f32_blockscale(x2, packed, scales, bits=bits,
+                                          k_orig=k_orig, block=block,
+                                          bm=bm, bn=bn, bk=bk,
+                                          interpret=(mode == "interpret"))
+    return out.reshape(*lead, -1)
+
+
 def quant_matmul_int8(x_q: jax.Array, packed: jax.Array, mult: jax.Array,
                       bias: jax.Array, *, bits: int, k_orig: int,
                       mode: Mode = DEFAULT_MODE,

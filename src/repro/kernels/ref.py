@@ -25,6 +25,23 @@ def qmatmul_f32(x: jax.Array, packed: jax.Array, scale: jax.Array, *,
     return jnp.matmul(x.astype(jnp.float32), w.T)
 
 
+def qmatmul_f32_blockscale(x: jax.Array, packed: jax.Array,
+                           scales: jax.Array, *, bits: int, k_orig: int,
+                           block: int = 32) -> jax.Array:
+    """Wire-form matmul oracle: x @ dequantize_blockwise(levels, scales)^T.
+
+    Same math as the Pallas blockscale kernel — intN levels expanded with
+    per-(row, block) scales inside the reduction — so a cold page served
+    straight from its wire encoding needs no host-side decode."""
+    levels = packing.unpack(packed, bits, k_orig).astype(jnp.float32)
+    n, k = levels.shape
+    nblk = scales.shape[1]
+    lp = jnp.pad(levels, ((0, 0), (0, nblk * block - k)))
+    w = (lp.reshape(n, nblk, block)
+         * scales[:, :, None].astype(jnp.float32)).reshape(n, nblk * block)
+    return jnp.matmul(x.astype(jnp.float32), w[:, :k].T)
+
+
 def qmatmul_int8(x_q: jax.Array, packed: jax.Array, mult: jax.Array,
                  bias: jax.Array, *, bits: int, k_orig: int) -> jax.Array:
     w = packing.unpack(packed, bits, k_orig).astype(jnp.int32)

@@ -30,7 +30,7 @@ the tick (``--sync-io`` restores the blocking stream-then-step tick).
 When a plan pages, single-model runs are verified bit-exact against the
 fully resident uniform plan AND — in async mode — against the
 synchronous streaming path (disable with ``--no-verify``).  Metrics are
-emitted as the ``repro.serving.metrics/v7`` JSON (stdout, and
+emitted as the ``repro.serving.metrics/v8`` JSON (stdout, and
 ``--metrics-json PATH`` to persist).
 
 Encoded (compressed) cold pages: ``--page-bits {8,4,2}`` stamps the
@@ -85,20 +85,37 @@ def _requests(cfg, n, max_new, seed=0):
             for uid in range(n)]
 
 
+def _fault_plan(args):
+    """--fault-seed's seeded FaultPlan, or None when chaos is off."""
+    if args.fault_seed is None:
+        return None
+    from repro.core.faults import FaultPlan
+    return FaultPlan(seed=args.fault_seed, fail_rate=args.fault_rate,
+                     bitflip_rate=args.fault_bitflip)
+
+
+def _fetch_timeout_s(args):
+    return (None if args.fetch_timeout_ms is None
+            else args.fetch_timeout_ms / 1e3)
+
+
 def _serve(cfg, packed, plan, args, paged: bool,
-           async_io: bool = None, kv_paged: bool = False, tracer=None):
+           async_io: bool = None, kv_paged: bool = False, tracer=None,
+           faults=None):
     eng = ServingEngine(cfg, packed, batch_slots=args.slots,
                         max_len=args.max_len, plan=plan, seed=args.seed)
     if paged:
-        eng.attach_paging()
+        eng.attach_paging(faults=faults)
     if kv_paged:
-        eng.attach_kv_paging(args.kv_block)
+        eng.attach_kv_paging(args.kv_block, faults=faults)
     sched = Scheduler(eng, prefill_chunk=args.prefill_chunk,
                       async_io=args.async_io if async_io is None
                       else async_io,
                       token_budget=args.token_budget,
                       preemptive=args.preemptive,
                       admission=args.admission,
+                      fetch_timeout_s=(_fetch_timeout_s(args)
+                                       if faults is not None else None),
                       tracer=tracer, trace_track=args.arch)
     sched.add_stream("xr", priority=1, deadline_ms=args.deadline_ms)
     sched.add_stream("background")
@@ -162,6 +179,8 @@ def _serve_tenants(models, args, pool, tracer=None):
                         token_budget=args.token_budget,
                         preemptive=args.preemptive,
                         admission=args.admission,
+                        fetch_timeout_s=_fetch_timeout_s(args),
+                        faults=_fault_plan(args),
                         tracer=tracer)
     for name, (cfg, packed, plan) in models.items():
         eng = ServingEngine(cfg, packed, batch_slots=args.slots,
@@ -371,6 +390,25 @@ def main(argv=None):
                          "preempt/evict instants, and the predicted-vs-"
                          "measured stall overlay); open in "
                          "chrome://tracing or ui.perfetto.dev")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="chaos mode: run every page fetch under a "
+                         "seeded FaultPlan (transient failures retried "
+                         "with backoff, wire bit-flips caught by the "
+                         "page CRC and re-fetched); the verify leg then "
+                         "demonstrates tokens stay bit-exact vs the "
+                         "fault-free resident reference")
+    ap.add_argument("--fault-rate", type=float, default=0.15,
+                    help="transient fetch-failure probability per "
+                         "(page, attempt) under --fault-seed")
+    ap.add_argument("--fault-bitflip", type=float, default=0.15,
+                    help="wire bit-flip probability per (page, attempt) "
+                         "under --fault-seed")
+    ap.add_argument("--fetch-timeout-ms", type=float, default=None,
+                    help="fence deadline per tick: a page stream that "
+                         "exceeds it defers that model's tick (the pass "
+                         "stays resumable) instead of blocking the "
+                         "scheduler; counted as faults.fetch_timeouts/"
+                         "deferred_ticks")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-verify", action="store_true",
                     help="skip the bit-exact check of the paged run "
@@ -412,11 +450,13 @@ def main(argv=None):
 
     tracer = Tracer() if args.trace_json else None
     done, sched, eng = _serve(cfg, packed, plan, args, paged,
-                              kv_paged=args.kv_paged, tracer=tracer)
+                              kv_paged=args.kv_paged, tracer=tracer,
+                              faults=_fault_plan(args))
     total_tokens = sum(len(r.generated) for r in done)
     place = ("mixed:" + "+".join(plan.scenarios_used())
              if not plan.is_uniform else plan.default.scenario)
-    summary = sched.metrics.summary(paging=eng.paging_summary())
+    summary = sched.metrics.summary(paging=eng.paging_summary(),
+                                    faults=sched.faults_summary())
     thr = summary["throughput"]
     print(f"served {len(done)} requests, {total_tokens} tokens in "
           f"{thr['wall_s']:.2f}s ({thr['tok_per_s']:.1f} tok/s) "
@@ -446,6 +486,13 @@ def main(argv=None):
         dl = summary["deadlines"]
         print(f"deadlines: {dl['missed']}/{dl['with_deadline']} missed "
               f"({dl['miss_rate'] * 100:.0f}% at {args.deadline_ms} ms)")
+    if args.fault_seed is not None or args.fetch_timeout_ms is not None:
+        ft = summary["faults"]
+        print(f"faults: {ft['injected']} injected, {ft['retries']} "
+              f"retries, {ft['checksum_failures']} checksum failures "
+              f"(all re-fetched: {ft['refetches']}), "
+              f"{ft['fetch_timeouts']} fetch timeouts, "
+              f"{ft['deferred_ticks']} ticks deferred")
     if args.token_budget or args.preemptive or args.admission:
         sc = summary["scheduler"]
         print(f"scheduler: {sc['preemptions']} preemptions / "
@@ -479,7 +526,8 @@ def main(argv=None):
             # what the step computes: re-serve on the blocking sync path
             sref, ssched, seng = _serve(cfg, packed, plan, args,
                                         paged=paged, async_io=False,
-                                        kv_paged=args.kv_paged)
+                                        kv_paged=args.kv_paged,
+                                        faults=_fault_plan(args))
             sync_tokens = {r.uid: r.generated for r in sref}
             sync_ok = got == sync_tokens
             ctr_ok = (seng.swap_count == eng.swap_count
@@ -499,11 +547,13 @@ def main(argv=None):
                 seng.kv_table.close()
 
     print(sched.metrics.to_json(paging=eng.paging_summary(),
-                                trace=sched.trace_summary()))
+                                trace=sched.trace_summary(),
+                                faults=sched.faults_summary()))
     if args.metrics_json:
         sched.metrics.write(args.metrics_json,
                             paging=eng.paging_summary(),
-                            trace=sched.trace_summary())
+                            trace=sched.trace_summary(),
+                            faults=sched.faults_summary())
         print(f"metrics written to {args.metrics_json}")
     if tracer is not None:
         validate_trace(tracer.to_dict())

@@ -39,7 +39,15 @@ def linear(x: jax.Array, w, *, engine: Optional[Any] = None,
     if isinstance(w, dict) and "packed" in w:
         scenario, mode, bits = placement.linear_dispatch(engine, path)
         k_orig = x.shape[-1]
-        if scenario == "l1mram":
+        wire_bits = placement.wire_served_bits(engine, path)
+        if wire_bits is not None:
+            # wire-serve fast path: this param's cold page skipped the
+            # host decode, so "packed"/"scale" hold the page codec's
+            # blockwise wire form — expand it adjacent to the matmul
+            out = kops.quant_matmul_blockscale(x, w["packed"], w["scale"],
+                                               bits=wire_bits,
+                                               k_orig=k_orig, mode=mode)
+        elif scenario == "l1mram":
             out = kops.quant_matmul(x, w["packed"], w["scale"], bits=bits,
                                     k_orig=k_orig, mode=mode)
         else:

@@ -299,7 +299,9 @@ class ServingEngine:
     def attach_paging(self, page_bytes: Optional[int] = None,
                       resident_slots: int = 2, *,
                       pool: Optional[Any] = None,
-                      name: Optional[str] = None) -> "ServingEngine":
+                      name: Optional[str] = None,
+                      faults: Optional[Any] = None,
+                      wire_serve: bool = False) -> "ServingEngine":
         """Put the plan's paged parameters behind a
         :class:`~repro.core.paging.HostPagedStore`.
 
@@ -313,7 +315,20 @@ class ServingEngine:
         store JOINS the pool's shared device-bytes budget under ``name``
         instead of assuming a private cache — the multi-model tenancy
         path, where every tenant's cold pages contend for one budget and
-        cross-model eviction is the pool's call."""
+        cross-model eviction is the pool's call.
+
+        ``faults`` (a :class:`~repro.core.faults.FaultPlan` or shared
+        :class:`~repro.core.faults.FaultInjector`) puts every page fetch
+        under seeded fault injection with CRC-verified retry — see
+        :mod:`repro.core.faults`.
+
+        ``wire_serve=True`` serves int8-re-encoded cold pages straight
+        from their wire form: the fetch skips the host decode, the device
+        holds the packed blockwise levels + per-block scales, and
+        ``linear`` dispatches those params to the blockscale matmul
+        (:func:`repro.core.placement.wire_served_bits`).  Params the
+        predicate excludes (fp/identity pages, non-int8 encodings, other
+        scenarios) keep the host-decode path unchanged."""
         from repro.core.paging import HostPagedStore, packed_tree_store, \
             thread_packed
         from repro.core.weight_store import PackedParam
@@ -321,6 +336,12 @@ class ServingEngine:
         if resident_slots < 1:
             raise ValueError(f"resident_slots must be >= 1, got "
                              f"{resident_slots}")
+        if wire_serve:
+            # flip the plan BEFORE building the store and template so the
+            # jitted model (which reads self.plan at trace time) and the
+            # fetch path agree on which params arrive in wire form
+            self.plan = self.plan.replace(wire_serve=True)
+            self.engine = self.plan
         store = packed_tree_store(self.params, self.plan)
         paged = [n for n in store.params
                  if self.plan.placement_for(n).paged]
@@ -332,7 +353,8 @@ class ServingEngine:
         self.pager = HostPagedStore(store, page_bytes, plan=self.plan,
                                     pool=pool,
                                     name=name if name is not None
-                                    else "default")
+                                    else "default",
+                                    faults=faults)
         self.page_resident_slots = resident_slots
         # repoint the template tree: resident groups at the pager's pinned
         # device copies, cold groups at the HOST image — nothing stays
@@ -342,6 +364,18 @@ class ServingEngine:
         # groups present the same leaves a streamed page will fill
         host_view = {}
         for pname, hp in self.pager._host.items():
+            if pname in self.pager.wire_served:
+                # wire-served leaves keep the {"packed","scale"} dict keys
+                # but hold the WIRE buffers — the treedef stays stable and
+                # the jit traces once with wire shapes (leading dims
+                # restored to the device carrier's, as the fetch path does)
+                lead = hp.packed_shape[:-1]
+                host_view[pname] = PackedParam(
+                    packed=hp.payload.reshape(*lead, -1),
+                    scale=hp.scales.reshape(*lead, -1),
+                    bits=hp.page_bits,
+                    orig_shape=hp.orig_shape)
+                continue
             packed, scale = hp.decode()
             host_view[pname] = PackedParam(packed=packed, scale=scale,
                                            bits=hp.bits,
@@ -387,7 +421,8 @@ class ServingEngine:
     # -- KV-cache paging through the same pool --------------------------------
     def attach_kv_paging(self, block_rows: int = 16, *,
                          pool: Optional[Any] = None,
-                         name: Optional[str] = None) -> "ServingEngine":
+                         name: Optional[str] = None,
+                         faults: Optional[Any] = None) -> "ServingEngine":
         """Page the per-slot KV cache through the SAME device-bytes
         budget (and the same begin/fence overlap) the weight pages use.
 
@@ -419,7 +454,7 @@ class ServingEngine:
             name = (self.pager.name if self.pager is not None
                     else "default") + "/kv"
         self.kv_table = KVPageTable(self.cache["kv"], block_rows=block_rows,
-                                    pool=pool, name=name)
+                                    pool=pool, name=name, faults=faults)
         self._kv_synced[:] = 0
         if self.tracer is not None:
             self.set_tracer(self.tracer)   # reach the new table/pool
@@ -552,7 +587,7 @@ class ServingEngine:
             self.tracer.instant("begin_pass", track=self.trace_track,
                                 streams="+".join(kicked))
 
-    def fence_tick_params(self) -> Any:
+    def fence_tick_params(self, timeout_s: Optional[float] = None) -> Any:
         """The params tree for this tick, fencing at first use.
 
         Without paging this is just the packed store.  With paging, the
@@ -564,7 +599,14 @@ class ServingEngine:
         fused step needs every layer resident at once (the stacked scan),
         so the page cache models the *traffic* (swap/miss counters, stall
         time) while the tick's working set is materialized in full — the
-        TPU-native reading of the two live MRAM pages."""
+        TPU-native reading of the two live MRAM pages.
+
+        ``timeout_s`` bounds the tick's I/O wait: on expiry the fence
+        raises :class:`~repro.core.faults.PageFetchTimeout` and the
+        in-flight streams stay owned by the engine, untouched — no page
+        is threaded, no stall is accounted, and the next call resumes
+        the SAME passes (stream fences are idempotent), so a scheduler
+        can defer the tick instead of stalling the world."""
         self.last_stall_s = 0.0
         self.last_hidden_s = 0.0
         if self.pager is None and self.kv_table is None:
@@ -573,16 +615,23 @@ class ServingEngine:
                   and self._inflight_kv is None)
         if demand:
             self.begin_tick_params()
+        ps = self._inflight_pass
+        ks = self._inflight_kv
+        # fence BOTH streams before consuming either: a timeout raises
+        # with the passes still in flight (a fenced stream's result is
+        # cached, so the retry re-joins it for free), and the accounting
+        # below runs exactly once, on the tick that actually consumes
+        dev = ps.fence(timeout_s=timeout_s) if ps is not None else None
+        blocks = (ks.fence(self._kv_full_blocks(), timeout_s=timeout_s)
+                  if ks is not None else None)
+        self._inflight_pass = None
+        self._inflight_kv = None
         params = self.params
-        if self.pager is not None:
-            ps, self._inflight_pass = self._inflight_pass, None
-            dev = ps.fence()
+        if ps is not None:
             self.last_overlap = self._account_fence(
                 ps, demand, self.pager.pool, self.pager.name)
             params = self._thread_tick(dev)
-        if self.kv_table is not None:
-            ks, self._inflight_kv = self._inflight_kv, None
-            blocks = ks.fence(self._kv_full_blocks())
+        if ks is not None:
             self.last_kv_overlap = self._account_fence(
                 ks, demand, self.kv_table.pool, self.kv_table.name,
                 kv=True)
@@ -619,7 +668,7 @@ class ServingEngine:
         if tr is not None:
             # the measured stall split, retro-dated so [hidden][exposed]
             # render as one contiguous swap bar ending at the fence —
-            # the spans the reconciliation tests sum against metrics/v7
+            # the spans the reconciliation tests sum against metrics/v8
             stream = "kv" if kv else "weights"
             track = f"{self.trace_track}:stall"
             if hidden > 0.0:
@@ -707,7 +756,7 @@ class ServingEngine:
             overlap_frac=(self.paging_hidden_s / total) if total > 0 else 0.0,
             stall_s=self.paging_stall_s,       # v2 alias: exposed wait
             n_pages=0 if self.pager is None else len(self.pager.pages),
-            # metrics/v7: encoded-pages byte ledger for the WEIGHT page
+            # metrics/v8: encoded-pages byte ledger for the WEIGHT page
             # stream — wire = what crossed the link per swap (encoded
             # payload + scales), raw = the fp32-dense equivalent, so
             # wire/raw is the weight-page compression ratio.  The KV
@@ -717,6 +766,11 @@ class ServingEngine:
                                  else self.pager.bytes_streamed_wire),
             bytes_streamed_raw=(0 if self.pager is None
                                 else self.pager.bytes_streamed_raw),
+            # wire-serve: wire bytes that never paid a fetch decode
+            # (served straight to the blockscale matmul); 0 unless the
+            # engine attached with wire_serve=True
+            decode_skipped_bytes=(0 if self.pager is None
+                                  else self.pager.decode_skipped_bytes),
             # metrics/v4: the KV share of the same budgeted page stream
             kv_swaps=0 if kv is None else kv.swap_count,
             kv_pool_hits=0 if kv is None else kv.pool_hits,
@@ -726,6 +780,16 @@ class ServingEngine:
             kv_exposed_s=self.kv_stall_s,
             kv_hidden_s=self.kv_hidden_s,
             kv_block_rows=0 if kv is None else kv.block_rows)
+
+    def faults_summary(self) -> Dict[str, int]:
+        """Fault-path counters summed over the engine's paging components
+        (weight pager + KV table) — the per-model body of the metrics v8
+        ``faults`` section.  The scheduler layers ``deferred_ticks`` on
+        top (tick deferral is its decision, not the stores')."""
+        from repro.core.faults import merge_fault_counters
+        parts = [s.fault_counters for s in (self.pager, self.kv_table)
+                 if s is not None]
+        return merge_fault_counters(parts)
 
     # -- slot management ------------------------------------------------------
     def submit(self, req: Request) -> None:

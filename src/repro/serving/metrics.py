@@ -11,12 +11,12 @@ behind compute by the async paging pipeline), deadline-miss rate per
 stream, and aggregate token throughput.
 
 Everything is emitted as one JSON document (schema
-``repro.serving.metrics/v7``) so the bench trajectory
+``repro.serving.metrics/v8``) so the bench trajectory
 (``benchmarks/serving_load.py`` -> ``BENCH_serving.json``) and the
 launcher (``repro.launch.serve --metrics-json``) share a format:
 
     {
-      "schema": "repro.serving.metrics/v7",
+      "schema": "repro.serving.metrics/v8",
       "ticks":      {"count", "latency_ms": {mean,p50,p99,max},
                      "paging_exposed_ms": {mean,p50,p99,max},
                      "paging_hidden_ms":  {mean,p50,p99,max}},
@@ -36,6 +36,8 @@ launcher (``repro.launch.serve --metrics-json``) share a format:
                      "kv_hidden_s", "kv_block_rows"},
       "trace":      {"events", "tracks",
                      "predicted_vs_measured_stall_ratio"},
+      "faults":     {"injected", "retries", "checksum_failures",
+                     "refetches", "fetch_timeouts", "deferred_ticks"},
       "streams":    {name: {"count", "missed", "miss_rate", "truncated",
                             "p99_ttft_ms"}}
     }
@@ -47,6 +49,17 @@ Requests without a deadline never count toward the miss rate, and
 service) are excluded from it and reported under their own counter.
 Requests the admission controller REJECTED never became requests at all
 (no service, no tokens): they appear only in ``scheduler.rejected``.
+
+v8 vs v7: the ``faults`` section is new — fault-tolerant page I/O
+(``repro.core.faults``): counts of injected faults, fetch ``retries``,
+CRC32 ``checksum_failures`` caught before install, the ``refetches``
+they triggered, ``fetch_timeouts`` raised by deadline-bounded fences,
+and ``deferred_ticks`` — ticks the scheduler degraded gracefully
+(skipped compute, left the pass resumable) instead of blocking past the
+fetch deadline.  All zeros for a fault-free, deadline-free run.  The
+multi shape's ``totals`` grows a summed ``faults`` dict with the same
+keys.  :func:`validate` rejects v7 payloads — wrong schema string, or a
+document without the ``faults`` section.
 
 v7 vs v6: the ``paging`` section grew the encoded-pages byte ledger —
 ``bytes_streamed_wire`` (bytes that actually crossed the host->device
@@ -84,12 +97,12 @@ per-tick ``paging_stall_ms`` became the ``paging_exposed_ms`` /
 ``exposed_s``.)
 
 Multi-model tenancy (``repro.serving.tenancy.MultiScheduler``) emits the
-v7 *multi* shape instead: per-model sections of the document above plus
+v8 *multi* shape instead: per-model sections of the document above plus
 the shared page pool's contention stats (KV page tables appear as their
 own ``<model>/kv`` members)::
 
     {
-      "schema": "repro.serving.metrics/v7",
+      "schema": "repro.serving.metrics/v8",
       "ticks":       {"count"},                     # MultiScheduler ticks
       "models":      {name: <single-model document, sans schema>},
       "shared_pool": {"budget_bytes", "live_bytes", "live_wire_bytes",
@@ -105,7 +118,8 @@ own ``<model>/kv`` members)::
                       "preemptions", "restores", "rejected", "degraded",
                       "wall_s", "tok_per_s",
                       "paging_exposed_s", "paging_hidden_s",
-                      "overlap_frac"}
+                      "overlap_frac",
+                      "faults": {summed per-model fault counters}}
     }
 
 The ``totals`` paging seconds are summed from the per-model ``paging``
@@ -126,7 +140,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-SCHEMA = "repro.serving.metrics/v7"
+SCHEMA = "repro.serving.metrics/v8"
 
 
 def quantiles(xs: List[float]) -> Dict[str, float]:
@@ -145,6 +159,13 @@ def _empty_paging() -> Dict[str, Any]:
                 kv_swaps=0, kv_pool_hits=0, kv_writebacks=0, kv_dropped=0,
                 kv_preempt_drops=0,
                 kv_exposed_s=0.0, kv_hidden_s=0.0, kv_block_rows=0)
+
+
+def _empty_faults() -> Dict[str, int]:
+    # the fault-free default: nothing injected, nothing retried, no
+    # deadline ever missed — what a run without a FaultPlan reports
+    return dict(injected=0, retries=0, checksum_failures=0, refetches=0,
+                fetch_timeouts=0, deferred_ticks=0)
 
 
 def _empty_trace() -> Dict[str, Any]:
@@ -284,7 +305,8 @@ class MetricsRecorder:
         return self._t_last - self._t0
 
     def summary(self, paging: Optional[Dict[str, Any]] = None,
-                trace: Optional[Dict[str, Any]] = None
+                trace: Optional[Dict[str, Any]] = None,
+                faults: Optional[Dict[str, int]] = None
                 ) -> Dict[str, Any]:
         ttfts = [r.ttft_s * 1e3 for r in self.records if r.ttft_s is not None]
         lats = [r.latency_s * 1e3 for r in self.records
@@ -343,6 +365,9 @@ class MetricsRecorder:
             },
             "paging": dict(paging if paging is not None else _empty_paging()),
             "trace": dict(trace if trace is not None else _empty_trace()),
+            # store-level fault dicts may lack the scheduler-level
+            # "deferred_ticks"; the empty template fills any gap
+            "faults": {**_empty_faults(), **(faults or {})},
             "streams": streams,
         }
 
@@ -361,20 +386,23 @@ class MetricsRecorder:
         }
 
     def to_json(self, paging: Optional[Dict[str, Any]] = None,
-                trace: Optional[Dict[str, Any]] = None, **extra) -> str:
-        doc = self.summary(paging=paging, trace=trace)
+                trace: Optional[Dict[str, Any]] = None,
+                faults: Optional[Dict[str, int]] = None, **extra) -> str:
+        doc = self.summary(paging=paging, trace=trace, faults=faults)
         doc.update(extra)
         return json.dumps(doc, indent=2, sort_keys=False)
 
     def write(self, path: str, paging: Optional[Dict[str, Any]] = None,
-              trace: Optional[Dict[str, Any]] = None, **extra) -> None:
+              trace: Optional[Dict[str, Any]] = None,
+              faults: Optional[Dict[str, int]] = None, **extra) -> None:
         with open(path, "w") as fh:
-            fh.write(self.to_json(paging=paging, trace=trace, **extra)
+            fh.write(self.to_json(paging=paging, trace=trace,
+                                  faults=faults, **extra)
                      + "\n")
 
 
 # ---------------------------------------------------------------------------
-# multi-model tenancy (metrics/v7 multi shape)
+# multi-model tenancy (metrics/v8 multi shape)
 # ---------------------------------------------------------------------------
 
 def multi_summary(models: Dict[str, Dict[str, Any]],
@@ -407,6 +435,9 @@ def multi_summary(models: Dict[str, Dict[str, Any]],
                            for d in sections.values())
                     for k in ("preemptions", "restores", "rejected",
                               "degraded")}
+    fault_totals = {k: sum(int(d.get("faults", {}).get(k, 0))
+                           for d in sections.values())
+                    for k in _empty_faults()}
     # the tenants share one wall clock window, so aggregate throughput is
     # total tokens over the longest per-model span, not the sum of spans
     wall = max((d["throughput"]["wall_s"] for d in sections.values()),
@@ -430,6 +461,7 @@ def multi_summary(models: Dict[str, Dict[str, Any]],
             "paging_hidden_s": hidden,
             "overlap_frac": (hidden / (exposed + hidden)
                              if (exposed + hidden) > 0 else 0.0),
+            "faults": fault_totals,
         },
     }
 
@@ -459,13 +491,18 @@ _SINGLE_KEYS = {
     # v6: chrome-trace observability — its absence is exactly what marks
     # a stale v5 payload
     "trace": ("events", "tracks", "predicted_vs_measured_stall_ratio"),
+    # v8: fault-tolerant page I/O — its absence is exactly what marks a
+    # stale v7 payload
+    "faults": ("injected", "retries", "checksum_failures", "refetches",
+               "fetch_timeouts", "deferred_ticks"),
 }
 
 _TOTALS_KEYS = ("requests", "tokens_out", "truncated", "with_deadline",
                 "missed", "miss_rate",
                 "preemptions", "restores", "rejected", "degraded",
                 "wall_s", "tok_per_s",
-                "paging_exposed_s", "paging_hidden_s", "overlap_frac")
+                "paging_exposed_s", "paging_hidden_s", "overlap_frac",
+                "faults")
 
 
 def _validate_single(doc: Dict[str, Any], where: str) -> None:
@@ -485,7 +522,7 @@ def _validate_single(doc: Dict[str, Any], where: str) -> None:
 
 
 def validate(doc: Dict[str, Any]) -> Dict[str, Any]:
-    """Assert ``doc`` is a well-formed ``repro.serving.metrics/v7``
+    """Assert ``doc`` is a well-formed ``repro.serving.metrics/v8``
     document (either the single-model or the multi-model shape); returns
     the document unchanged so it can be used inline.  Raises ValueError
     naming the first missing piece."""

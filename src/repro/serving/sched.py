@@ -58,7 +58,7 @@ that claim's serving-side analogue:
   * **metrics**: TTFT / end-to-end latency / p50 / p99 / deadline-miss
     rate / tok/s / exposed-vs-hidden paging stalls / preemption and
     admission-control counters / budget utilization, recorded per tick
-    and per request and emitted as the ``repro.serving.metrics/v7``
+    and per request and emitted as the ``repro.serving.metrics/v8``
     JSON.
 
 The scheduler owns no jit state — it drives the engine's tick primitives
@@ -75,6 +75,7 @@ import math
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.faults import PageFetchTimeout
 from repro.core.memsys import overlap_stall
 from repro.core.paging import pass_counters
 from repro.serving.engine import Request, ServingEngine, SlotCheckpoint
@@ -128,7 +129,8 @@ class Scheduler:
                  seq_counter: Optional[itertools.count] = None,
                  clock=time.perf_counter,
                  tracer: Optional[Tracer] = None,
-                 trace_track: Optional[str] = None):
+                 trace_track: Optional[str] = None,
+                 fetch_timeout_s: Optional[float] = None):
         self.engine = engine
         # overlap the next tick's page stream with this tick's compute;
         # False = the fully synchronous stream-then-step tick
@@ -162,6 +164,11 @@ class Scheduler:
         self.rejected: List[Request] = []
         self.finished: List[Request] = []
         self.ticks = 0
+        # fetch deadline for the tick's I/O fence: on expiry the tick is
+        # DEFERRED (the in-flight pass resumes at the next fence) instead
+        # of stalling the world — graceful degradation under stuck pages
+        self.fetch_timeout_s = fetch_timeout_s
+        self.deferred_ticks = 0
         self._seq = (seq_counter if seq_counter is not None
                      else itertools.count())
         # the budgeted tick's plan ({slot: token alloc}), set between
@@ -186,7 +193,7 @@ class Scheduler:
         # predicted-vs-measured exposed-stall accumulators: the closed
         # form (memsys.overlap_stall over the fenced pass's swap/window)
         # against what the fence actually booked — summarized as the
-        # metrics/v7 ``trace.predicted_vs_measured_stall_ratio``
+        # metrics/v8 ``trace.predicted_vs_measured_stall_ratio``
         self._pred_exposed_s = 0.0
         self._meas_exposed_s = 0.0
 
@@ -458,10 +465,12 @@ class Scheduler:
         self.metrics.start()                     # wall clock spans tick 1
         tr = self.tracer
         if tr is None:
-            params = self.engine.fence_tick_params()
+            params = self.engine.fence_tick_params(
+                timeout_s=self.fetch_timeout_s)
         else:
             with tr.span("fence", track=self.track, tick=self.ticks):
-                params = self.engine.fence_tick_params()
+                params = self.engine.fence_tick_params(
+                    timeout_s=self.fetch_timeout_s)
         return t0, params
 
     def tick_begin(self) -> None:
@@ -501,7 +510,7 @@ class Scheduler:
 
     def _trace_tick(self, measured_exposed_s: float) -> None:
         """Accumulate this tick's predicted-vs-measured exposed-stall
-        drift (the metrics/v7 ``trace`` section) and, when tracing,
+        drift (the metrics/v8 ``trace`` section) and, when tracing,
         render the closed-form prediction on the ``<track> (predicted)``
         overlay next to the measured fence spans."""
         eng = self.engine
@@ -572,13 +581,33 @@ class Scheduler:
         self._tick_budget_used = None
         return finished
 
+    def defer_tick(self, exc: PageFetchTimeout) -> None:
+        """Record a tick deferred on an I/O deadline: the fence timed out,
+        the in-flight pass stays owned by the engine (resumed by the next
+        fence), no compute ran and no tick counters advanced — so the
+        weight-counter identity ``swaps == ticks x pass_counters`` holds
+        on COMPUTED ticks, exactly as the static prediction expects."""
+        self.deferred_ticks += 1
+        if self.tracer is not None:
+            self.tracer.instant("defer", track="io", model=exc.model,
+                                timeout_ms=exc.timeout_s * 1e3,
+                                pending=exc.pending, tick=self.ticks)
+
     def tick(self) -> List[Request]:
         """One scheduler tick: fence the in-flight pages, admit EDF
         (preempting / refusing per policy), re-plan the token budget,
         begin the next stream, then advance the planned prefills and run
         one batched decode while the stream proceeds.  Returns the
-        requests that finished this tick."""
-        t0, params = self.tick_fence()
+        requests that finished this tick.
+
+        With a ``fetch_timeout_s``, a fence that exceeds the deadline
+        defers the whole tick (empty return) instead of blocking: the
+        pass resumes at the next tick's fence."""
+        try:
+            t0, params = self.tick_fence()
+        except PageFetchTimeout as e:
+            self.defer_tick(e)
+            return []
         self._admit()
         self._tick_plan = self._plan_tick()
         self.tick_begin()
@@ -622,9 +651,17 @@ class Scheduler:
         pager itself is owned by the caller / pool)."""
         self.engine.cancel_tick_params()
 
+    def faults_summary(self) -> Dict[str, int]:
+        """The metrics v8 ``faults`` section for this scheduler: the
+        engine's store-level fault counters plus the ticks this scheduler
+        deferred on a fetch deadline."""
+        out = self.engine.faults_summary()
+        out["deferred_ticks"] = self.deferred_ticks
+        return out
+
     # -- trace introspection ---------------------------------------------------
     def trace_summary(self) -> Dict[str, object]:
-        """The metrics/v7 ``trace`` section for this scheduler: tracer
+        """The metrics/v8 ``trace`` section for this scheduler: tracer
         event/track counts (zeros when un-traced) and the run's
         predicted-vs-measured exposed-stall ratio.  The ratio is the
         summed closed-form prediction over the summed fence-measured

@@ -24,7 +24,7 @@ behavior.  This module is that claim's serving-side realization:
     :func:`~repro.core.paging.shared_pass_counters` prediction, because
     tenants stream sequentially per tick);
   * per-model deadline accounting lands in the
-    ``repro.serving.metrics/v7`` multi shape (per-model sections plus the
+    ``repro.serving.metrics/v8`` multi shape (per-model sections plus the
     shared pool's contention stats and the exposed/hidden paging-stall
     split) via :func:`~repro.serving.metrics.multi_summary`;
   * the tick loop is the async paging **software pipeline**: per tick,
@@ -58,6 +58,7 @@ import json
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.faults import FaultsArg, PageFetchTimeout, as_injector
 from repro.core.paging import SharedPagePool
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.metrics import multi_summary
@@ -89,7 +90,9 @@ class MultiScheduler:
                  preemptive: bool = False,
                  admission: Optional[str] = None,
                  clock=time.perf_counter,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 fetch_timeout_s: Optional[float] = None,
+                 faults: FaultsArg = None):
         if pool is not None and shared_budget_bytes is not None:
             raise ValueError("pass either pool= or shared_budget_bytes=, "
                              "not both")
@@ -104,6 +107,12 @@ class MultiScheduler:
         self.preemptive = bool(preemptive)
         self.admission = admission
         self.clock = clock
+        # multi-wide fault defaults: every tenant added without its own
+        # override inherits these (per-model overrides matter because the
+        # pool's single serialized worker makes one tenant's stuck fetch
+        # delay everyone's -- only the stuck tenant should defer)
+        self.fetch_timeout_s = fetch_timeout_s
+        self.faults = as_injector(faults)
         self.models: Dict[str, Scheduler] = {}
         self.ticks = 0
         self._seq = itertools.count()      # one submission order, global
@@ -130,7 +139,9 @@ class MultiScheduler:
                   page_bytes: Optional[int] = None,
                   resident_slots: int = 2,
                   kv_paged: bool = False,
-                  kv_block_rows: int = 16) -> Scheduler:
+                  kv_block_rows: int = 16,
+                  fetch_timeout_s: Optional[float] = None,
+                  faults: FaultsArg = None) -> Scheduler:
         """Register a tenant.  When the MultiScheduler owns a shared pool
         and the engine's plan pages, the engine's paging is attached
         JOINED to that pool (an engine arriving with a private pager is
@@ -138,7 +149,12 @@ class MultiScheduler:
         ``kv_paged``, the tenant's per-slot KV cache pages through the
         SAME pool budget as everyone's weight pages (member
         ``<name>/kv`` — the one-memory-hierarchy reading of §V), in
-        ``kv_block_rows``-row blocks."""
+        ``kv_block_rows``-row blocks.
+
+        ``fetch_timeout_s`` / ``faults`` override the MultiScheduler-wide
+        defaults for THIS tenant only (pass them to give one tenant a
+        fetch deadline, or a private fault plan, without touching the
+        others)."""
         if name in self.models:
             raise ValueError(f"model {name!r} already registered")
         if self.pool is not None and engine.pager is not None:
@@ -154,23 +170,28 @@ class MultiScheduler:
         # failure here must not leave the engine half-joined to the pool
         # (token_budget stays None per tenant — the GLOBAL plan below
         # deals the shared budget out instead)
+        if fetch_timeout_s is None:
+            fetch_timeout_s = self.fetch_timeout_s
+        inj = as_injector(faults) if faults is not None else self.faults
         sched = Scheduler(engine, prefill_chunk=prefill_chunk,
                           async_io=self.async_io, clock=self.clock,
                           preemptive=self.preemptive,
                           admission=self.admission,
                           seq_counter=self._seq,
-                          tracer=self.tracer, trace_track=name)
+                          tracer=self.tracer, trace_track=name,
+                          fetch_timeout_s=fetch_timeout_s)
         if self.pool is not None:
             from repro.core.placement import packed_sizes
             sizes = packed_sizes(engine.params)
             if engine.plan.paged_bytes(sizes) > 0:
                 engine.attach_paging(page_bytes, resident_slots,
-                                     pool=self.pool, name=name)
+                                     pool=self.pool, name=name,
+                                     faults=inj)
         if kv_paged and engine.kv_table is None and "kv" in engine.cache:
             # families without a KV cache (pure SSM trackers) simply have
             # no KV state to page — the flag is a no-op for them
             engine.attach_kv_paging(kv_block_rows, pool=self.pool,
-                                    name=f"{name}/kv")
+                                    name=f"{name}/kv", faults=inj)
         self.models[name] = sched
         return sched
 
@@ -299,7 +320,14 @@ class MultiScheduler:
                   if sched.pending]
         fenced = []
         for name, sched in active:
-            t0, params = sched.tick_fence()
+            try:
+                t0, params = sched.tick_fence()
+            except PageFetchTimeout as e:
+                # only THIS tenant's tick degrades: its pass stays
+                # resumable (futures/accounting intact) and is re-fenced
+                # next tick; everyone else proceeds below
+                sched.defer_tick(e)
+                continue
             fenced.append((name, sched, t0, params))
         for _name, sched, _t0, _params in fenced:
             sched._admit()                 # late engine.submit stragglers
@@ -341,10 +369,11 @@ class MultiScheduler:
 
     # -- metrics / lifecycle --------------------------------------------------
     def summary(self) -> Dict:
-        """The ``repro.serving.metrics/v7`` multi-model document."""
+        """The ``repro.serving.metrics/v8`` multi-model document."""
         models = {name: sched.metrics.summary(
                       paging=sched.engine.paging_summary(),
-                      trace=sched.trace_summary())
+                      trace=sched.trace_summary(),
+                      faults=sched.faults_summary())
                   for name, sched in self.models.items()}
         return multi_summary(
             models,

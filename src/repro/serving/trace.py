@@ -46,7 +46,7 @@ matching ``E``, ``B``/``E``/``i`` timestamps monotonic per track,
 non-negative ``X`` durations) and is what CI runs against the uploaded
 trace artefact; :func:`doc_tracks` / :func:`span_durations` /
 :func:`instant_count` are the small query helpers the reconciliation
-tests use to check trace sums against the metrics/v7 document.
+tests use to check trace sums against the metrics/v8 document.
 """
 
 from __future__ import annotations

@@ -500,11 +500,11 @@ def test_multischeduler_close_cancels_inflight_passes(rng, packed,
     assert not ms.pool._active_fetch
 
 
-def test_metrics_v7_schema_validates_and_rejects_stale():
+def test_metrics_v8_schema_validates_and_rejects_stale():
     from repro.serving import MetricsRecorder
     from repro.serving.metrics import SCHEMA, _empty_paging
 
-    assert SCHEMA == "repro.serving.metrics/v7"
+    assert SCHEMA == "repro.serving.metrics/v8"
     rec = MetricsRecorder(clock=lambda: 0.0)
     rec.record_tick(latency_s=0.002, paging_exposed_s=0.0005,
                     paging_hidden_s=0.002)
@@ -531,6 +531,10 @@ def test_metrics_v7_schema_validates_and_rejects_stale():
                  if not k.startswith("bytes_streamed")}
     with pytest.raises(ValueError, match="bytes_streamed"):
         validate(dict(doc, paging=v6_paging))
+    # a v7-shaped payload (no faults section) likewise
+    v7 = {k: v for k, v in doc.items() if k != "faults"}
+    with pytest.raises(ValueError, match="faults"):
+        validate(v7)
     broken = dict(doc, paging=dict(swap_count=0, miss_count=0,
                                    stall_s=0.0, n_pages=0))
     with pytest.raises(ValueError, match="exposed_s"):

@@ -1,0 +1,500 @@
+"""Fault-tolerant page I/O (core/faults + the paging/serving stack).
+
+The headline guarantee under test: for ANY seeded within-budget
+FaultPlan, decode output is bit-exact vs the fault-free run — faults
+cost retries and latency, never tokens.  Around it: typed errors,
+deterministic replay, CRC-before-install, fence deadlines leaving the
+pass resumable, per-tenant tick deferral, the close(wait=False)
+install-leak regression, and the wire-serve (decode-skipping) path.
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.faults import (FaultInjector, FaultPlan, PageFetchError,
+                               PageFetchTimeout, PagingError,
+                               TransientFetchFault, as_injector,
+                               new_fault_counters)
+from repro.core.paging import HostPagedStore, SharedPagePool, retry_fetch
+from repro.core.placement import (Placement, PlacementPlan, packed_sizes,
+                                  plan_for_budget, wire_served_bits)
+from repro.core.weight_store import freeze, uniform_policy
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import freeze_for_serving
+from repro.serving import MultiScheduler, Request, Scheduler, ServingEngine
+
+# fast backoffs everywhere: the *policy* under test is deterministic
+# retry/recovery, not the wall-clock cost of sleeping
+FAST = dict(backoff_s=1e-5, backoff_cap_s=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# plan + injector units
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="max_attempts"):
+        FaultPlan(max_attempts=0)
+    # the structural guarantee: a within-budget fetch ALWAYS succeeds,
+    # so a plan whose faulty window covers the whole budget is rejected
+    with pytest.raises(ValueError, match="max_faulty_attempts"):
+        FaultPlan(max_faulty_attempts=4, max_attempts=4)
+    with pytest.raises(ValueError, match="rates"):
+        FaultPlan(fail_rate=1.5)
+    with pytest.raises(TypeError, match="FaultPlan or FaultInjector"):
+        as_injector("chaos")
+    inj = FaultInjector(FaultPlan(seed=1))
+    assert as_injector(inj) is inj
+    assert as_injector(None) is None
+    assert as_injector(FaultPlan(seed=1)).plan == inj.plan
+
+
+def test_injector_decisions_are_pure_and_flips_are_single_bit():
+    plan = FaultPlan(seed=5, fail_rate=0.3, bitflip_rate=0.5)
+    a, b = FaultInjector(plan), FaultInjector(plan)
+    buf = bytes(range(64))
+    fired = 0
+    for page in range(8):
+        for attempt in range(plan.max_attempts):
+            assert (a._unit("fail", "m", page, attempt)
+                    == b._unit("fail", "m", page, attempt))
+            ca, cb = (a.corrupt("m", page, attempt, buf),
+                      b.corrupt("m", page, attempt, buf))
+            assert ca == cb                  # replayable corruption
+            if ca is not None:
+                fired += 1
+                assert attempt < plan.max_faulty_attempts
+                assert len(ca) == len(buf)
+                diff = sum(bin(x ^ y).count("1") for x, y in zip(ca, buf))
+                assert diff == 1             # exactly one flipped bit
+    assert fired > 0
+    # corruption is applied to a copy decision-by-decision; the pristine
+    # buffer itself is never mutated
+    assert buf == bytes(range(64))
+    # past the faulty-attempt window nothing transient ever fires
+    assert a.corrupt("m", 0, plan.max_faulty_attempts, buf) is None
+    hot = FaultInjector(FaultPlan(seed=0, fail_rate=0.9))
+    raised = 0
+    for page in range(16):
+        try:
+            hot.pre_fetch("m", page, 0)
+        except TransientFetchFault as e:
+            raised += 1
+            assert (e.model, e.page, e.attempt) == ("m", page, 0)
+    assert raised > 0
+
+
+def test_backoff_is_bounded_and_monotone():
+    plan = FaultPlan(backoff_s=0.001, backoff_cap_s=0.004)
+    waits = [plan.backoff(a) for a in range(1, 8)]
+    assert waits[0] == 0.001
+    assert waits == sorted(waits)
+    assert max(waits) == 0.004               # capped, never unbounded
+
+
+class _StubStore:
+    """Minimal retry_fetch host: name + injector + counters (no device)."""
+
+    def __init__(self, plan):
+        self.name = "stub"
+        self.faults = as_injector(plan)
+        self.fault_counters = new_fault_counters()
+        self.tracer = None
+
+
+def test_retry_exhaustion_raises_typed_error():
+    plan = FaultPlan(max_attempts=3, max_faulty_attempts=2, **FAST)
+    store = _StubStore(plan)
+
+    def attempt(a):
+        raise TransientFetchFault(model="stub", page=7, attempt=a)
+
+    with pytest.raises(PageFetchError) as ei:
+        retry_fetch(store, 7, attempt)
+    err = ei.value
+    assert isinstance(err, PagingError)      # one except clause catches all
+    assert (err.model, err.page, err.attempts) == ("stub", 7, 3)
+    assert isinstance(err.last_error, TransientFetchFault)
+    assert store.fault_counters["injected"] == 3
+    assert store.fault_counters["retries"] == 2   # budget-1 retries
+
+
+# ---------------------------------------------------------------------------
+# store-level: bit-exact streams under any seeded plan (hypothesis)
+# ---------------------------------------------------------------------------
+
+def _flat_store():
+    rng = np.random.default_rng(0)
+    params = {f"p{i:02d}": rng.standard_normal((32, 24)).astype(np.float32)
+              for i in range(6)}
+    return freeze(params, uniform_policy(8, min_size=64))
+
+
+FLAT = _flat_store()
+PLAN = plan_for_budget(FLAT, FLAT.packed_bytes // 2)
+PAGE_BYTES = 1600                            # ~2 params per page
+
+
+def _stream(faults=None, *, plan=PLAN, async_io=False, pool=None, name="m"):
+    store = HostPagedStore(FLAT, PAGE_BYTES, plan=plan, pool=pool,
+                           name=name, faults=faults)
+    try:
+        dev = dict(store.resident)
+        if async_io:
+            with store.begin_pass(resident_slots=2) as apass:
+                dev.update(apass.fence())
+        else:
+            for _page, dp in store.stream(resident_slots=2):
+                dev.update(dp)
+        counters = dict(store.fault_counters)
+    finally:
+        store.close()
+    dev = {n: (np.asarray(p.packed), np.asarray(p.scale))
+           for n, p in dev.items()}
+    return dev, counters
+
+
+def _assert_same(got, want):
+    assert got.keys() == want.keys()
+    for n in got:
+        assert np.array_equal(got[n][0], want[n][0]), n
+        assert np.array_equal(got[n][1], want[n][1]), n
+
+
+def _check_stream_bit_exact(seed, fail, flip, spike, async_io, page_bits):
+    """For ANY within-budget plan, over every page encoding (fp identity,
+    int8 identity, int4 re-encoded) and both schedules: the streamed
+    device bytes equal the fault-free stream's, every CRC-caught
+    corruption was re-fetched, and a replay injects identically."""
+    plan = (PLAN if page_bits is None else PLAN.with_page_bits(page_bits))
+    fp = FaultPlan(seed=seed, fail_rate=fail, bitflip_rate=flip,
+                   spike_rate=spike, spike_s=1e-4, **FAST)
+    clean, zeros = _stream(None, plan=plan, async_io=async_io)
+    assert all(v == 0 for v in zeros.values())
+    dev, c1 = _stream(fp, plan=plan, async_io=async_io)
+    _assert_same(dev, clean)                 # faults never change bytes
+    assert c1["checksum_failures"] == c1["refetches"]  # none installed
+    dev2, c2 = _stream(fp, plan=plan, async_io=async_io)
+    _assert_same(dev2, clean)
+    assert c1 == c2                          # seeded replay, exactly
+
+
+# deterministic smoke cases keep the invariant covered under a bare
+# `pytest -x -q`; the hypothesis sweep below (CI installs the [test]
+# extra) randomizes the same property over the whole plan space
+@pytest.mark.parametrize("seed,fail,flip,async_io,page_bits", [
+    (11, 0.5, 0.5, False, None),             # fp pages, sync schedule
+    (12, 0.5, 0.5, True, 8),                 # int8 identity, async
+    (13, 0.5, 0.5, True, 4),                 # int4 re-encoded, async
+])
+def test_stream_bit_exact_under_faults(seed, fail, flip, async_io,
+                                       page_bits):
+    _check_stream_bit_exact(seed, fail, flip, 0.1, async_io, page_bits)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                          # optional [test] extra
+    pass
+else:
+    @given(seed=st.integers(min_value=0, max_value=2 ** 16),
+           fail=st.floats(min_value=0.0, max_value=0.6),
+           flip=st.floats(min_value=0.0, max_value=0.6),
+           spike=st.floats(min_value=0.0, max_value=0.3),
+           async_io=st.booleans(),
+           page_bits=st.sampled_from([None, 8, 4]))
+    @settings(max_examples=15, deadline=None)
+    def test_stream_bit_exact_under_any_plan(seed, fail, flip, spike,
+                                             async_io, page_bits):
+        _check_stream_bit_exact(seed, fail, flip, spike, async_io, page_bits)
+
+
+def test_pooled_stream_bit_exact_under_faults():
+    """Same guarantee through a SharedPagePool: a pooled member's faulted
+    stream matches its private fault-free stream, and pool-cached pages
+    skip re-fetch (retries are per host fetch, not per lookup)."""
+    clean, _ = _stream(None)
+    fp = FaultPlan(seed=9, fail_rate=0.5, bitflip_rate=0.5, **FAST)
+    pool = SharedPagePool(1 << 30)
+    store = HostPagedStore(FLAT, PAGE_BYTES, plan=PLAN, pool=pool,
+                           name="m", faults=fp)
+    try:
+        for _ in range(3):                   # pass 2+ rides the pool
+            dev = dict(store.resident)
+            for _page, dp in store.stream(resident_slots=2):
+                dev.update(dp)
+        got = {n: (np.asarray(p.packed), np.asarray(p.scale))
+               for n, p in dev.items()}
+        _assert_same(got, clean)
+        c = store.fault_counters
+        assert c["injected"] > 0 and c["retries"] > 0
+        assert c["checksum_failures"] == c["refetches"]
+        # roomy budget: after the first pass every page is a pool hit,
+        # so the fault path ran exactly once per page
+        assert store.swap_count == len(store.pages)
+    finally:
+        store.close()
+
+
+def test_fence_timeout_is_typed_and_resumable():
+    stuck = tuple(("m", i) for i in range(len(
+        HostPagedStore(FLAT, PAGE_BYTES, plan=PLAN).pages)))
+    fp = FaultPlan(seed=0, stuck_pages=stuck, stuck_s=0.05, **FAST)
+    store = HostPagedStore(FLAT, PAGE_BYTES, plan=PLAN, name="m", faults=fp)
+    try:
+        apass = store.begin_pass(resident_slots=2)
+        with pytest.raises(PageFetchTimeout) as ei:
+            apass.fence(timeout_s=0.001)
+        assert ei.value.model == "m" and ei.value.pending >= 1
+        assert store.fault_counters["fetch_timeouts"] == 1
+        clean, _ = _stream(None)
+        dev = dict(store.resident)
+        dev.update(apass.fence())            # resumes, completes, matches
+        got = {n: (np.asarray(p.packed), np.asarray(p.scale))
+               for n, p in dev.items()}
+        _assert_same(got, clean)
+    finally:
+        store.close()
+
+
+def test_close_no_wait_never_installs_inflight_pages():
+    """Regression: close(wait=False) while a fetch is mid-flight must not
+    install the page into the store or the shared pool afterwards (the
+    closed flag is checked again between fetch and install)."""
+    stuck = tuple(("m", i) for i in range(8))
+    fp = FaultPlan(seed=0, stuck_pages=stuck, stuck_s=0.2, **FAST)
+    pool = SharedPagePool(1 << 30)
+    store = HostPagedStore(FLAT, PAGE_BYTES, plan=PLAN, pool=pool,
+                           name="m", faults=fp)
+    apass = store.begin_pass(resident_slots=2)
+    store.close(wait=False)                  # fetch 0 is inside stuck_s
+    time.sleep(0.5)                          # let the worker run its abort
+    assert store.swap_count == 0             # nothing counted as installed
+    assert store._live == {}
+    assert pool.live_bytes == 0
+    assert all(pool.lookup("m", i) is None for i in range(len(store.pages)))
+    apass.close()                            # drains cancelled futures
+
+
+# ---------------------------------------------------------------------------
+# serving: tokens bit-exact under chaos, solo and under tenancy
+# ---------------------------------------------------------------------------
+
+CFG_A = ModelConfig(name="tinyFA", family="dense", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                    head_dim=16, remat=False)
+CFG_B = ModelConfig(name="tinyFB", family="dense", n_layers=2, d_model=48,
+                    n_heads=4, n_kv_heads=2, d_ff=96, vocab_size=256,
+                    head_dim=12, remat=False)
+CHAOS = FaultPlan(seed=0, fail_rate=0.45, bitflip_rate=0.45,
+                  spike_rate=0.1, spike_s=1e-4, **FAST)
+
+
+@pytest.fixture(scope="module")
+def packed_a():
+    return freeze_for_serving(tfm.init_params(CFG_A, jax.random.PRNGKey(0)),
+                              bits=8)
+
+
+@pytest.fixture(scope="module")
+def packed_b():
+    return freeze_for_serving(tfm.init_params(CFG_B, jax.random.PRNGKey(1)),
+                              bits=8)
+
+
+def _half_paged_plan(packed):
+    sizes = packed_sizes(packed)
+    plan = plan_for_budget(sizes, sum(sizes.values()) // 2)
+    assert plan.paged_bytes(sizes) > 0
+    return plan
+
+
+def _paged_bytes(packed):
+    sizes = packed_sizes(packed)
+    plan = _half_paged_plan(packed)
+    return sum(v for k, v in sizes.items() if plan.placement_for(k).paged)
+
+
+def _prompts(n=4):
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, 256, 3 + 4 * i).astype(np.int32)
+            for i in range(n)]
+
+
+def _serve_solo(cfg, packed, *, faults=None, async_io=True, seed=0):
+    eng = ServingEngine(cfg, packed, batch_slots=2, max_len=64,
+                        plan=_half_paged_plan(packed), seed=seed)
+    eng.attach_paging(faults=faults)
+    s = Scheduler(eng, prefill_chunk=8, async_io=async_io)
+    for uid, p in enumerate(_prompts()):
+        s.submit(Request(uid=uid, prompt=p, max_new_tokens=5))
+    done = s.run_until_done()
+    out = {r.uid: r.generated for r in done}
+    fs, swaps, ticks = s.faults_summary(), eng.swap_count, s.ticks
+    eng.pager.close()
+    return out, fs, swaps, ticks
+
+
+@pytest.mark.parametrize("async_io", [True, False])
+@pytest.mark.slow
+def test_solo_serving_bit_exact_under_faults(async_io):
+    clean, zeros, swaps0, _ = _serve_solo(CFG_A, freeze_for_serving(
+        tfm.init_params(CFG_A, jax.random.PRNGKey(0)), bits=8),
+        async_io=async_io)
+    assert all(v == 0 for v in zeros.values())
+    chaos, fs, swaps1, _ = _serve_solo(CFG_A, freeze_for_serving(
+        tfm.init_params(CFG_A, jax.random.PRNGKey(0)), bits=8),
+        faults=CHAOS, async_io=async_io)
+    assert chaos == clean                    # tokens never change
+    assert fs["injected"] > 0 and fs["retries"] > 0
+    assert fs["checksum_failures"] == fs["refetches"]
+    assert fs["deferred_ticks"] == 0         # no deadline configured
+    # retries re-run the host fetch, never the logical swap accounting
+    assert swaps1 == swaps0
+
+
+@pytest.mark.slow
+def test_two_tenant_chaos_acceptance(packed_a, packed_b):
+    """The bench/CI chaos leg's contract as a test: two tenants through
+    one tight SharedPagePool under a seeded plan stay token-for-token
+    bit-exact vs the fault-free run, with at least one retried transient
+    AND one CRC-caught bit-flip actually exercised, every corruption
+    re-fetched, and the swap/weight counters unchanged by the faults."""
+    budget = int((_paged_bytes(packed_a) + _paged_bytes(packed_b)) * 0.6)
+
+    def run(faults):
+        eng_a = ServingEngine(CFG_A, packed_a, batch_slots=2, max_len=64,
+                              plan=_half_paged_plan(packed_a), seed=0)
+        eng_b = ServingEngine(CFG_B, packed_b, batch_slots=2, max_len=64,
+                              plan=_half_paged_plan(packed_b), seed=1)
+        ms = MultiScheduler(pool=SharedPagePool(budget), faults=faults)
+        ms.add_model("a", eng_a, prefill_chunk=8)
+        ms.add_model("b", eng_b, prefill_chunk=8)
+        for uid, p in enumerate(_prompts()):
+            ms.submit("a", Request(uid=uid, prompt=p, max_new_tokens=5))
+            ms.submit("b", Request(uid=uid, prompt=p, max_new_tokens=5))
+        done = ms.run_until_done()
+        toks = {m: {r.uid: r.generated for r in rs}
+                for m, rs in done.items()}
+        doc = ms.summary()
+        swaps = {m: ms.model(m).engine.swap_count for m in ("a", "b")}
+        ms.close()
+        return toks, doc, swaps
+
+    toks0, doc0, swaps0 = run(None)
+    assert all(v == 0 for v in doc0["totals"]["faults"].values())
+    toks1, doc1, swaps1 = run(CHAOS)
+    assert toks1 == toks0                    # bit-exact across the board
+    ft = doc1["totals"]["faults"]
+    assert ft["injected"] > 0 and ft["retries"] > 0
+    assert ft["checksum_failures"] > 0       # CRC path genuinely exercised
+    assert ft["checksum_failures"] == ft["refetches"]
+    assert ft["fetch_timeouts"] == 0 and ft["deferred_ticks"] == 0
+    assert swaps1 == swaps0                  # retries invisible to ledgers
+    for m in ("a", "b"):
+        mf = doc1["models"][m]["faults"]
+        assert mf["injected"] > 0            # both tenants saw chaos
+
+
+@pytest.mark.slow
+def test_stuck_tenant_defers_only_its_own_ticks(packed_a, packed_b):
+    """Graceful degradation is per tenant: a stuck page + fetch deadline
+    on tenant A defers A's ticks (fence times out, pass resumes) while
+    tenant B's ticks, tokens, and deadline-miss rate are untouched — and
+    A still finishes bit-exact once the stuck fetches land."""
+    budget = int((_paged_bytes(packed_a) + _paged_bytes(packed_b)) * 0.6)
+
+    def run(stuck):
+        eng_a = ServingEngine(CFG_A, packed_a, batch_slots=2, max_len=64,
+                              plan=_half_paged_plan(packed_a), seed=0)
+        eng_b = ServingEngine(CFG_B, packed_b, batch_slots=2, max_len=64,
+                              plan=_half_paged_plan(packed_b), seed=1)
+        ms = MultiScheduler(pool=SharedPagePool(budget))
+        if stuck:
+            # page 0 of tenant A hangs 0.1 s on EVERY fetch; the tight
+            # budget forces that fetch on every pass, and A's 5 ms fence
+            # deadline converts each hang into a deferred tick
+            ms.add_model("a", eng_a, prefill_chunk=8, fetch_timeout_s=0.005,
+                         faults=FaultPlan(seed=0, stuck_pages=(("a", 0),),
+                                          stuck_s=0.1, **FAST))
+        else:
+            ms.add_model("a", eng_a, prefill_chunk=8)
+        ms.add_model("b", eng_b, prefill_chunk=8)
+        for uid, p in enumerate(_prompts()):
+            ms.submit("a", Request(uid=uid, prompt=p, max_new_tokens=4))
+            ms.submit("b", Request(uid=uid, prompt=p, max_new_tokens=4,
+                                   deadline_ms=1e6))
+        done = ms.run_until_done()
+        toks = {m: {r.uid: r.generated for r in rs}
+                for m, rs in done.items()}
+        fs = {m: ms.model(m).faults_summary() for m in ("a", "b")}
+        doc = ms.summary()
+        ms.close()
+        return toks, fs, doc
+
+    toks0, _, doc0 = run(stuck=False)
+    toks1, fs, doc1 = run(stuck=True)
+    assert toks1 == toks0                    # degradation never costs tokens
+    assert fs["a"]["fetch_timeouts"] > 0
+    assert fs["a"]["deferred_ticks"] > 0     # A paid the stuck lane...
+    assert fs["b"]["fetch_timeouts"] == 0
+    assert fs["b"]["deferred_ticks"] == 0    # ...B never noticed
+    for doc in (doc0, doc1):                 # B's miss rate unchanged
+        assert doc["models"]["b"]["deadlines"]["miss_rate"] == 0.0
+        assert doc["models"]["b"]["deadlines"]["with_deadline"] > 0
+
+
+# ---------------------------------------------------------------------------
+# wire-serve: cold int8 pages skip the host decode, faults still invisible
+# ---------------------------------------------------------------------------
+
+CFG_W = ModelConfig(name="tinyFW", family="dense", n_layers=2, d_model=48,
+                    n_heads=4, n_kv_heads=2, d_ff=96, vocab_size=256,
+                    head_dim=12, remat=False)
+
+
+@pytest.mark.slow
+def test_wire_serve_skips_decode_and_survives_faults():
+    packed = freeze_for_serving(tfm.init_params(CFG_W, jax.random.PRNGKey(0)),
+                                bits=4)
+    sizes = packed_sizes(packed)
+    plan = plan_for_budget(sizes, sum(sizes.values()) // 2, sizes_bits=4,
+                           hot=Placement("l1mram", 4, "resident"),
+                           cold=Placement("l1mram", 4, "paged", 8))
+    prompts = _prompts()
+
+    def serve(wire_serve, faults=None):
+        eng = ServingEngine(CFG_W, packed, batch_slots=2, max_len=64,
+                            plan=plan)
+        eng.attach_paging(wire_serve=wire_serve, faults=faults)
+        if wire_serve:
+            # the store's wire-served set IS the placement predicate the
+            # model's `linear` dispatches on — one source of truth
+            wired = {n for n in eng.pager._host
+                     if wire_served_bits(eng.plan, n) is not None}
+            assert wired and wired == eng.pager.wire_served
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=p, max_new_tokens=5))
+        toks = {r.uid: r.generated for r in eng.run_until_done()}
+        pg, fs = eng.paging_summary(), eng.faults_summary()
+        decode_s = eng.pager.decode_s
+        eng.pager.close()
+        return toks, pg, fs, decode_s
+
+    base, pg0, _, _ = serve(False)
+    assert pg0["decode_skipped_bytes"] == 0 and pg0["swap_count"] > 0
+    w1, pg1, _, dec1 = serve(True)
+    w2, pg2, _, _ = serve(True)
+    assert w1 == w2                          # deterministic
+    assert pg1["decode_skipped_bytes"] > 0
+    assert dec1 == 0.0                       # no fetch decode ran at all
+    wf, _, fs, decf = serve(True, faults=FaultPlan(seed=3, fail_rate=0.2,
+                                                   bitflip_rate=0.2, **FAST))
+    assert wf == w1                          # chaos invisible on this path too
+    assert fs["injected"] > 0
+    assert fs["checksum_failures"] == fs["refetches"]
+    assert decf == 0.0                       # CRC runs, decode still skipped

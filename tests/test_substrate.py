@@ -7,7 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager, save_pytree, restore_pytree
+from repro.checkpoint import (CheckpointManager, CheckpointRestoreError,
+                              save_pytree, restore_pytree)
 from repro.data import SyntheticLMDataset, prefetch
 from repro.optim import adamw, adafactor, clip_by_global_norm
 from repro.runtime import FailureInjector, StragglerMonitor, Trainer, TrainerConfig
@@ -64,6 +65,63 @@ def test_restore_shape_mismatch_raises(tmp_path, rng):
     save_pytree(dict(a=jnp.zeros((4,))), tmp_path / "ck")
     with pytest.raises(ValueError):
         restore_pytree(dict(a=jnp.zeros((5,))), tmp_path / "ck")
+
+
+def test_failing_async_save_surfaces_on_next_call(tmp_path, rng,
+                                                  monkeypatch):
+    """A background save that dies must not vanish: the error is raised
+    on the NEXT save()/wait(), and a later clean save still works."""
+    mgr = CheckpointManager(tmp_path, keep_n=3, async_save=True)
+    tree = _tree(rng)
+
+    import repro.checkpoint.manager as mgr_mod
+    boom = RuntimeError("disk on fire")
+
+    def failing_save(tree, directory):
+        raise boom
+    monkeypatch.setattr(mgr_mod, "save_pytree", failing_save)
+    mgr.save(1, tree)
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        mgr.wait()
+    # the error is consumed once, not resurfaced forever
+    mgr.wait()
+    monkeypatch.undo()
+    mgr.save(2, tree)
+    mgr.wait()
+    assert mgr.all_steps() == [2]
+
+
+def test_partial_tmp_checkpoint_is_invisible(tmp_path, rng):
+    """A crashed writer's ``step_XXXX.tmp`` is not a checkpoint: it never
+    appears in all_steps()/latest_step(), and restore() skips it."""
+    mgr = CheckpointManager(tmp_path, keep_n=3, async_save=False)
+    tree = _tree(rng)
+    mgr.save(1, tree)
+    # simulate a crash mid-write of step 2: .tmp exists, rename never ran
+    (tmp_path / "step_00000002.tmp").mkdir()
+    (tmp_path / "step_00000002.tmp" / "leaf_0.npy").write_bytes(b"junk")
+    assert mgr.all_steps() == [1]
+    assert mgr.latest_step() == 1
+    step, _out = mgr.restore(tree)
+    assert step == 1
+
+
+def test_restore_errors_are_typed_and_name_the_step(tmp_path, rng):
+    mgr = CheckpointManager(tmp_path, keep_n=3, async_save=False)
+    tree = _tree(rng)
+    # nothing saved yet
+    with pytest.raises(CheckpointRestoreError, match="no checkpoints"):
+        mgr.restore(tree)
+    # a renamed-but-damaged checkpoint names the step it failed for
+    mgr.save(7, tree)
+    os.remove(tmp_path / "step_00000007" / "manifest.json")
+    with pytest.raises(CheckpointRestoreError, match="step 7") as ei:
+        mgr.restore(tree)
+    assert ei.value.step == 7
+    # an explicitly requested missing step likewise
+    with pytest.raises(CheckpointRestoreError) as ei:
+        mgr.restore(tree, step=99)
+    assert ei.value.step == 99
 
 
 # ---------------------------------------------------------------------------
