@@ -927,6 +927,27 @@ class HostPagedStore:
                 bits=hp.bits, orig_shape=hp.orig_shape)
         return out
 
+    def template_view(self) -> Dict[str, PackedParam]:
+        """Device-format template leaves for every PAGED param — what the
+        engine threads into its params tree so the jitted step traces the
+        exact shapes/dtypes a streamed page will later fill.  Wire-served
+        params present their WIRE buffers (leading dims restored to the
+        device carrier's, as the fetch path does); everything else decodes
+        the host image back to the device layout once, host-side."""
+        view: Dict[str, PackedParam] = {}
+        for name, hp in self._host.items():
+            if name in self.wire_served:
+                lead = hp.packed_shape[:-1]
+                view[name] = PackedParam(
+                    packed=hp.payload.reshape(*lead, -1),
+                    scale=hp.scales.reshape(*lead, -1),
+                    bits=hp.page_bits, orig_shape=hp.orig_shape)
+                continue
+            packed, scale = hp.decode()
+            view[name] = PackedParam(packed=packed, scale=scale,
+                                     bits=hp.bits, orig_shape=hp.orig_shape)
+        return view
+
     def stream(self, resident_slots: int = 2) -> "PageStream":
         """(page, device params) in access order with proactive prefetch.
 
@@ -1232,6 +1253,440 @@ def pass_counters(n_pages: int, resident_slots: int = 2) -> Dict[str, int]:
         if e.evicts is not None:
             live.discard(e.evicts)
     return dict(swaps=swaps, misses=misses)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded paging: one engine, N parallel memory links (ROADMAP 1(a))
+# ---------------------------------------------------------------------------
+
+def shard_packed_param(p: PackedParam, axis: int, n: int, i: int
+                       ) -> PackedParam:
+    """Shard ``i`` of ``n`` of a packed param, sliced along dense ``axis``.
+
+    ``axis`` must be a NON-LAST dim of ``orig_shape``
+    (:func:`repro.parallel.sharding.shard_axis` guarantees this): the
+    packed carrier shares every leading dim with the dense shape and the
+    per-channel scales span ``orig_shape[:-1]``, so one slice expression
+    covers payload and scales alike — and because the page wire codec
+    operates per row (blocks along the last axis, channel scales on the
+    ``(rows, k)`` view), encode->decode of a shard equals the shard of
+    encode->decode: concatenating the per-device fetches reconstructs the
+    single-device bytes exactly."""
+    size = int(p.orig_shape[axis])
+    if axis >= len(p.orig_shape) - 1:
+        raise ValueError(f"cannot shard the packed last axis {axis} of "
+                         f"shape {tuple(p.orig_shape)}")
+    if size % n != 0:
+        raise ValueError(f"axis {axis} of {tuple(p.orig_shape)} does not "
+                         f"split into {n} shards")
+    step = size // n
+    sl = [slice(None)] * len(p.orig_shape)
+    sl[axis] = slice(step * i, step * (i + 1))
+    orig = list(p.orig_shape)
+    orig[axis] = step
+    return PackedParam(packed=np.asarray(p.packed)[tuple(sl)],
+                       scale=np.asarray(p.scale)[tuple(sl[:-1])],
+                       bits=p.bits, orig_shape=tuple(orig))
+
+
+def store_shard_axes(store: WeightStore, plan: Optional[PlacementPlan],
+                     mesh: Any) -> Dict[str, Tuple[int, int]]:
+    """{param name: (axis, n_shards)} for every param the mesh's "model"
+    axis tensor-shards under the :func:`~repro.parallel.sharding
+    ._param_pspec` rules.  With a ``plan``, restricted to its PAGED params
+    (the resident hot set stays whole on the compute device); without
+    one, covers the full store — the form ``plan_for_budget``'s
+    ``shard_factors`` wants *before* a plan exists."""
+    from repro.parallel.sharding import shard_axis
+    out: Dict[str, Tuple[int, int]] = {}
+    for name, p in store.params.items():
+        if plan is not None and not plan.placement_for(name).paged:
+            continue
+        ax = shard_axis(tuple(name.split("/")), tuple(p.orig_shape), mesh)
+        if ax is not None:
+            out[name] = ax
+    return out
+
+
+class ShardedPoolLedger:
+    """N per-device page pools under ONE global device-bytes budget.
+
+    The Siracusa reading: the cluster and N-EUREKA each stream their own
+    At-MRAM slice over their own memory port, but the chip still has ONE
+    byte budget — so each device link gets ``budget // n`` of it (a
+    private :class:`SharedPagePool`), and this ledger re-aggregates the
+    per-device ``(device, wire, raw)`` counters into the global view.
+    ``budget_bytes=None`` models the pool-less default (every pass
+    re-swaps every page on every link — the single-device
+    :class:`HostPagedStore` discipline, N links wide).
+
+    :meth:`predict` composes the per-device
+    :func:`kv_pass_counters` replays into one global prediction: each
+    device's pages and events replay independently (the links are
+    independent), and the sums must match the runtime counters member
+    for member — the same determinism contract the single-device pool
+    keeps."""
+
+    def __init__(self, budget_bytes: Optional[int], n_devices: int,
+                 name: str = "default"):
+        if n_devices < 1:
+            raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+        self.name = name
+        self.n_devices = int(n_devices)
+        self.budget_bytes = (None if budget_bytes is None
+                             else int(budget_bytes))
+        self.pools: Optional[List[SharedPagePool]] = None
+        if budget_bytes is not None:
+            per = max(1, int(budget_bytes) // n_devices)
+            self.pools = [SharedPagePool(per) for _ in range(n_devices)]
+        self.stores: List["HostPagedStore"] = []
+        self.pass_count = 0              # pool-less passes begun (predict)
+        self._lock = threading.Lock()
+        self.counters: Dict[str, Dict[str, float]] = {}
+        self._tracer = None
+
+    def register(self, store: "HostPagedStore") -> None:
+        with self._lock:
+            self.stores.append(store)
+
+    def pool_for(self, device_index: int) -> Optional[SharedPagePool]:
+        return None if self.pools is None else self.pools[device_index]
+
+    def add_stall(self, name: str, exposed_s: float,
+                  hidden_s: float = 0.0) -> None:
+        """Ledger-level stall view of a joined pass (the engine fences
+        ONE joined stream, so the split arrives already aggregated)."""
+        with self._lock:
+            c = self.counters.setdefault(name, dict(exposed_s=0.0,
+                                                    hidden_s=0.0))
+            c["exposed_s"] += float(exposed_s)
+            c["hidden_s"] += float(hidden_s)
+
+    @property
+    def tracer(self):
+        return self._tracer
+
+    @tracer.setter
+    def tracer(self, tracer) -> None:
+        self._tracer = tracer
+        if self.pools is not None:
+            for pool in self.pools:
+                pool.tracer = tracer
+
+    def predict(self, resident_slots: int = 2) -> Dict[str, int]:
+        """Global counter prediction: per-device replays, summed."""
+        total = dict(swaps=0, misses=0, pool_hits=0, evicted=0, dropped=0,
+                     bytes_wire=0, bytes_raw=0)
+        for i, store in enumerate(self.stores):
+            pool = self.pool_for(i)
+            if pool is not None:
+                sizes = {m: page_sizes(s.pages)
+                         for m, s in pool.members.items()}
+                events, budget = pool.events, pool.budget_bytes
+            else:
+                sizes = {store.name: page_sizes(store.pages)}
+                events = [("pass", store.name)] * self.pass_count
+                budget = None
+            pred = kv_pass_counters(sizes, budget, events,
+                                    resident_slots=resident_slots)
+            for c in pred.values():
+                for k in total:
+                    total[k] += int(c.get(k, 0))
+        return total
+
+    def summary(self) -> Dict[str, Any]:
+        """The global byte ledger + the per-device split it aggregates."""
+        per_device = []
+        for i, store in enumerate(self.stores):
+            d = dict(device=str(store.device), n_pages=len(store.pages),
+                     swap_count=store.swap_count,
+                     miss_count=store.miss_count,
+                     bytes_streamed_wire=store.bytes_streamed_wire,
+                     bytes_streamed_raw=store.bytes_streamed_raw)
+            pool = self.pool_for(i)
+            if pool is not None:
+                d.update(budget_bytes=pool.budget_bytes,
+                         live_bytes=pool.live_bytes,
+                         cached_pages=len(pool._cache))
+            per_device.append(d)
+        with self._lock:
+            stalls = {m: dict(c) for m, c in self.counters.items()}
+        return dict(
+            budget_bytes=self.budget_bytes,
+            n_devices=self.n_devices,
+            swap_count=sum(d["swap_count"] for d in per_device),
+            miss_count=sum(d["miss_count"] for d in per_device),
+            bytes_streamed_wire=sum(d["bytes_streamed_wire"]
+                                    for d in per_device),
+            bytes_streamed_raw=sum(d["bytes_streamed_raw"]
+                                   for d in per_device),
+            per_device=per_device, stalls=stalls)
+
+    def close(self, wait: bool = True) -> None:
+        if self.pools is not None:
+            for pool in self.pools:
+                pool.close(wait=wait)     # closes the member stores too
+        else:
+            for store in self.stores:
+                store.close(wait=wait)
+
+
+class ShardedPagedStore:
+    """One paged store fanned out over the mesh's "model" devices — each
+    device link streams ONLY its shard (duck-types
+    :class:`HostPagedStore` for the engine's begin/fence pipeline).
+
+    Parameter routing, per the :func:`store_shard_axes` rules:
+
+      * tensor-shardable paged params are split with
+        :func:`shard_packed_param`; device ``i`` holds shard ``i`` and its
+        own page cache — per-link wire traffic drops ~1/N for them;
+      * replicated paged params (and the plan's whole resident set, and
+        the passthrough leaves) live on device 0 only — they are paged
+        ONCE and broadcast at the join, so the global byte ledger for
+        them equals the single-device ledger exactly.
+
+    :meth:`begin_pass` starts one :class:`AsyncPageStream` per device
+    store; the returned :class:`JoinedPageStream` fences all of them and
+    concatenates the shard fetches back into full-shape device params on
+    the compute device — the per-row page wire codec commutes with
+    leading-axis slicing, so the joined bytes are bit-identical to a
+    single-device fetch and decode stays bit-exact by construction."""
+
+    def __init__(self, store: WeightStore, page_bytes: int, mesh: Any,
+                 plan: Optional[PlacementPlan] = None,
+                 budget_bytes: Optional[int] = None,
+                 name: str = "default", faults: FaultsArg = None):
+        axis_names = tuple(getattr(mesh, "axis_names", ()))
+        if "model" not in axis_names:
+            raise ValueError(f"mesh axes {axis_names} have no 'model' "
+                             f"axis to shard the paged store on")
+        n = int(mesh.shape["model"])
+        if n < 2:
+            raise ValueError("model axis of size 1 shards nothing — use "
+                             "HostPagedStore directly")
+        devs = np.asarray(mesh.devices).reshape(-1, n)[0]
+        self.mesh = mesh
+        self.devices: Tuple = tuple(devs.tolist())
+        self.n_shards = n
+        self.name = name
+        self.plan = plan
+        self.store = store
+        self.shard_axes = store_shard_axes(store, plan, mesh)
+        self.ledger = ShardedPoolLedger(budget_bytes, n, name=name)
+        self.stores: List[HostPagedStore] = []
+        self._tracer = None
+        for i, dev in enumerate(self.devices):
+            params: Dict[str, PackedParam] = {}
+            passthrough: Dict[str, Any] = {}
+            for pname, p in store.params.items():
+                ax = self.shard_axes.get(pname)
+                if ax is not None:
+                    params[pname] = shard_packed_param(p, ax[0], n, i)
+                elif i == 0:
+                    params[pname] = p     # replicated/resident: dev 0 only
+            if i == 0:
+                passthrough = dict(store.passthrough)
+            sub = HostPagedStore(
+                WeightStore(params=params, passthrough=passthrough),
+                page_bytes, device=dev, plan=plan,
+                pool=self.ledger.pool_for(i),
+                name=f"{name}@dev{i}", faults=faults)
+            self.stores.append(sub)
+            self.ledger.register(sub)
+
+    # -- aggregate counters (the HostPagedStore surface) ---------------------
+    @property
+    def resident(self) -> Dict[str, PackedParam]:
+        return self.stores[0].resident
+
+    @property
+    def pages(self) -> List[Page]:
+        return [p for s in self.stores for p in s.pages]
+
+    @property
+    def swap_count(self) -> int:
+        return sum(s.swap_count for s in self.stores)
+
+    @property
+    def miss_count(self) -> int:
+        return sum(s.miss_count for s in self.stores)
+
+    @property
+    def bytes_streamed_wire(self) -> int:
+        return sum(s.bytes_streamed_wire for s in self.stores)
+
+    @property
+    def bytes_streamed_raw(self) -> int:
+        return sum(s.bytes_streamed_raw for s in self.stores)
+
+    @property
+    def decode_s(self) -> float:
+        return sum(s.decode_s for s in self.stores)
+
+    @property
+    def decode_skipped_bytes(self) -> int:
+        return sum(s.decode_skipped_bytes for s in self.stores)
+
+    @property
+    def wire_served(self) -> set:
+        return set().union(*(s.wire_served for s in self.stores))
+
+    @property
+    def fault_counters(self) -> Dict[str, int]:
+        from repro.core.faults import merge_fault_counters
+        return merge_fault_counters([s.fault_counters
+                                     for s in self.stores])
+
+    @property
+    def pool(self) -> Optional[ShardedPoolLedger]:
+        """The engine's ``pager.pool`` hook: the ledger when a global
+        budget was given (it answers ``add_stall``), None otherwise —
+        mirroring the single-device pool-less default."""
+        return self.ledger if self.ledger.pools is not None else None
+
+    @property
+    def tracer(self):
+        return self._tracer
+
+    @tracer.setter
+    def tracer(self, tracer) -> None:
+        self._tracer = tracer
+        for s in self.stores:
+            s.tracer = tracer
+        self.ledger.tracer = tracer
+
+    def device_summaries(self) -> List[Dict[str, Any]]:
+        """Per-device counter rows for the metrics v9 ``paging.devices``
+        section (summary shape owned by the ledger)."""
+        return self.ledger.summary()["per_device"]
+
+    def template_view(self) -> Dict[str, PackedParam]:
+        """Full-shape template leaves: device-0's view, with sharded
+        params re-concatenated host-side along their shard axis."""
+        per_dev = [s.template_view() for s in self.stores]
+        view = dict(per_dev[0])
+        for pname, (ax, _n) in self.shard_axes.items():
+            parts = [pv[pname] for pv in per_dev]
+            orig = list(parts[0].orig_shape)
+            orig[ax] = sum(int(p.orig_shape[ax]) for p in parts)
+            view[pname] = PackedParam(
+                packed=np.concatenate([np.asarray(p.packed)
+                                       for p in parts], axis=ax),
+                scale=np.concatenate([np.asarray(p.scale)
+                                      for p in parts], axis=ax),
+                bits=parts[0].bits, orig_shape=tuple(orig))
+        return view
+
+    def begin_pass(self, resident_slots: int = 2) -> "JoinedPageStream":
+        self.ledger.pass_count += 1
+        return JoinedPageStream(self, resident_slots)
+
+    def predict(self, resident_slots: int = 2) -> Dict[str, int]:
+        return self.ledger.predict(resident_slots)
+
+    def close(self, wait: bool = True) -> None:
+        self.ledger.close(wait=wait)
+
+    def __enter__(self) -> "ShardedPagedStore":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+class JoinedPageStream:
+    """One overlapped pass over EVERY device link of a
+    :class:`ShardedPagedStore` — duck-types :class:`AsyncPageStream` for
+    the engine's fence.
+
+    Construction begins one :class:`AsyncPageStream` per device store
+    (all N links stream concurrently — each store owns its own fetch
+    worker/pool, so the per-device orders stay deterministic
+    independently).  :meth:`fence` joins ALL of them, re-concatenates the
+    shard fetches into full-shape params on the join device (device 0 —
+    the compute device, so tokens stay bit-exact vs the single-device
+    run), and records ONE aggregate exposed/hidden split with
+    :class:`AsyncPageStream`'s exact algebra: the stream-ready time is
+    the LAST link's, because the tick cannot start until the slowest
+    port delivers.
+
+    A ``timeout_s`` expiry propagates the child's
+    :class:`~repro.core.faults.PageFetchTimeout` and leaves EVERY link
+    resumable — already-fenced children cache their result, the raising
+    child keeps its futures — so a deferred tick re-fences the same
+    joined pass.  :meth:`close` closes every child (each releases its own
+    pool guard), so an early exit orphans no per-device pass."""
+
+    def __init__(self, sharded: ShardedPagedStore,
+                 resident_slots: int = 2):
+        self._sharded = sharded
+        self._result: Optional[Dict[str, PackedParam]] = None
+        self._closed = False
+        self.swap_s = 0.0
+        self.window_s = 0.0
+        self.exposed_s = 0.0
+        self.hidden_s = 0.0
+        self._t_begin = time.perf_counter()
+        self._streams = [s.begin_pass(resident_slots)
+                         for s in sharded.stores]
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None or self._closed
+
+    def fence(self, timeout_s: Optional[float] = None
+              ) -> Dict[str, PackedParam]:
+        if self._closed:
+            raise RuntimeError("fence() after close(): the pass was "
+                               "cancelled")
+        if self._result is not None:
+            return self._result
+        import jax.numpy as jnp
+        t_fence = time.perf_counter()
+        per_dev = []
+        for ps in self._streams:
+            remaining = (None if timeout_s is None else
+                         max(0.0, timeout_s - (time.perf_counter()
+                                               - t_fence)))
+            per_dev.append(ps.fence(timeout_s=remaining))
+        target = self._sharded.devices[0]
+        dev: Dict[str, PackedParam] = dict(per_dev[0])
+        for name, (ax, _n) in self._sharded.shard_axes.items():
+            parts = [pd[name] for pd in per_dev]
+            orig = list(parts[0].orig_shape)
+            orig[ax] = sum(int(p.orig_shape[ax]) for p in parts)
+            dev[name] = PackedParam(
+                packed=jnp.concatenate([jax.device_put(p.packed, target)
+                                        for p in parts], axis=ax),
+                scale=jnp.concatenate([jax.device_put(p.scale, target)
+                                       for p in parts], axis=ax),
+                bits=parts[0].bits, orig_shape=tuple(orig))
+        jax.block_until_ready([p.packed for p in dev.values()])
+        t_join = time.perf_counter()
+        readys = [ps._t_ready for ps in self._streams
+                  if ps._t_ready is not None]
+        t_ready = max(readys) if readys else t_join
+        self.window_s = t_fence - self._t_begin
+        self.exposed_s = t_join - t_fence
+        self.hidden_s = min(t_ready - self._t_begin, self.window_s)
+        self.swap_s = self.hidden_s + self.exposed_s
+        self._result = dev
+        return dev
+
+    def close(self) -> None:
+        for ps in self._streams:
+            ps.close()
+        if self._result is None:
+            self._closed = True
+
+    def __enter__(self) -> "JoinedPageStream":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
 
 # ---------------------------------------------------------------------------

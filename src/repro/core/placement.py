@@ -336,10 +336,17 @@ def path_key(path: Sequence[Any]) -> str:
                     for p in path)
 
 
-def packed_sizes(tree: Any) -> Dict[str, int]:
+def packed_sizes(tree: Any,
+                 shard_factors: Optional[Mapping[str, int]] = None
+                 ) -> Dict[str, int]:
     """{param path: packed bytes} for every packed leaf of a serving tree
     (the {"packed", "scale"} dicts produced by freeze_for_serving) — the
-    exact dispatch surface to feed :func:`plan_for_budget`."""
+    exact dispatch surface to feed :func:`plan_for_budget`.
+
+    ``shard_factors`` ({name: n_shards}, e.g. from
+    :func:`repro.core.paging.store_shard_axes`) divides a tensor-sharded
+    param's bytes by its shard count, yielding the PER-DEVICE footprint
+    a mesh-sharded pager actually pays per link."""
     import jax
 
     sizes: Dict[str, int] = {}
@@ -347,6 +354,10 @@ def packed_sizes(tree: Any) -> Dict[str, int]:
         key = path_key(path)
         if key.endswith("/packed"):
             sizes[key[:-len("/packed")]] = int(leaf.size)
+    if shard_factors:
+        for name, factor in shard_factors.items():
+            if name in sizes and factor > 1:
+                sizes[name] = max(1, -(-sizes[name] // factor))
     return sizes
 
 
@@ -358,7 +369,9 @@ def plan_for_budget(store: StoreSizes,
                     budget_bytes: int = SIRACUSA_MRAM_BYTES, *,
                     uses: Optional[Mapping[str, float]] = None,
                     hot: Placement = HOT, cold: Placement = COLD,
-                    mode: str = "xla", sizes_bits: int = 8) -> PlacementPlan:
+                    mode: str = "xla", sizes_bits: int = 8,
+                    shard_factors: Optional[Mapping[str, int]] = None
+                    ) -> PlacementPlan:
     """Pin the highest bytes-used-per-inference parameters resident.
 
     ``store`` is a WeightStore (sizes = packed bytes) or a plain
@@ -377,11 +390,20 @@ def plan_for_budget(store: StoreSizes,
     deterministically by (larger size first, then name), so equal-score
     plans are stable across dict orderings.
 
+    ``shard_factors`` ({name: n_shards}) marks params a device mesh
+    tensor-shards: each device holds (and pins) only ``1/n`` of the
+    param, so its RESIDENT charge against the per-device budget is
+    divided by the shard count.  Replicated params (absent, or factor 1)
+    charge full bytes on every device, exactly as before.  Without this
+    a tight per-device budget over-evicts on meshes — sharded params
+    were billed N-fold.
+
     Returns a plan whose rules pin the chosen hot set (exact-path rules,
     ``hot`` placement) and whose default is ``cold`` for everything else.
     """
     sizes = _sizes_of(store)
     uses = uses or {}
+    shard_factors = shard_factors or {}
     bits_of = {n: p.bits for n, p in store.params.items()} \
         if isinstance(store, WeightStore) else {}
 
@@ -389,6 +411,12 @@ def plan_for_budget(store: StoreSizes,
         """``sizes[name]`` rescaled from its measured bits to ``bits``."""
         have = bits_of.get(name, sizes_bits)
         return max(1, -(-sizes[name] * bits // have))
+
+    def _resident(name: str) -> int:
+        """Per-device resident charge: sharded params pin 1/n per link."""
+        factor = int(shard_factors.get(name, 1))
+        nb = _at_bits(name, hot.weight_bits)
+        return max(1, -(-nb // factor)) if factor > 1 else nb
 
     wire_bits = cold.page_bits or cold.weight_bits
 
@@ -399,7 +427,7 @@ def plan_for_budget(store: StoreSizes,
     rules: List[Tuple[str, Placement]] = []
     used = 0
     for name in order:
-        resident_nb = _at_bits(name, hot.weight_bits)
+        resident_nb = _resident(name)
         if used + resident_nb <= budget_bytes:
             rules.append((name, hot))
             used += resident_nb

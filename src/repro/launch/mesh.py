@@ -36,5 +36,25 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
-    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count).
+
+    Degrades instead of raising when the host exposes fewer devices than
+    ``shape`` wants: each axis is clamped (left to right) to what remains
+    of ``jax.device_count()``, keeping the axis NAMES intact so sharding
+    rules still resolve — a 1-device host simply gets a (1, 1) mesh."""
+    import math
+    have = jax.device_count()
+    if math.prod(shape) > have:
+        import warnings
+        clamped = []
+        remaining = have
+        for s in shape:
+            use = min(s, remaining)
+            clamped.append(use)
+            remaining = max(1, remaining // use)
+        warnings.warn(
+            f"make_test_mesh: shape {tuple(shape)} wants "
+            f"{math.prod(shape)} devices but only {have} present; "
+            f"clamping to {tuple(clamped)}", stacklevel=2)
+        shape = tuple(clamped)
     return _make_mesh(shape, axes)

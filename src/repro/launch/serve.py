@@ -30,8 +30,24 @@ the tick (``--sync-io`` restores the blocking stream-then-step tick).
 When a plan pages, single-model runs are verified bit-exact against the
 fully resident uniform plan AND — in async mode — against the
 synchronous streaming path (disable with ``--no-verify``).  Metrics are
-emitted as the ``repro.serving.metrics/v8`` JSON (stdout, and
+emitted as the ``repro.serving.metrics/v9`` JSON (stdout, and
 ``--metrics-json PATH`` to persist).
+
+Mesh-sharded paging (ROADMAP 1(a); Siracusa's parallel memory-port
+concurrency): ``--mesh N`` (or ``NxM``) builds an in-process
+("data", "model") device mesh — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=K`` to get K host
+devices — and shards the paged store across the model axis: each device
+streams ONLY its shard's pages over its own link
+(:class:`repro.core.paging.ShardedPagedStore`), the tick's fence joins
+all the per-device streams, and the ``ShardedPoolLedger`` aggregates the
+per-device byte counters into one global ledger.  The greedy plan then
+charges sharded params at 1/N per device (``shard_factors``).  The
+verify leg re-serves single-device and asserts tokens BIT-EXACT plus the
+ledger identities: global counters equal the static per-device
+``kv_pass_counters`` prediction, global wire bytes equal the
+single-device wire bytes, and every per-device link moves strictly
+fewer.
 
 Encoded (compressed) cold pages: ``--page-bits {8,4,2}`` stamps the
 plan's paged placements with a page wire encoding, so every cold page
@@ -99,13 +115,51 @@ def _fetch_timeout_s(args):
             else args.fetch_timeout_ms / 1e3)
 
 
+def _build_serve_mesh(spec):
+    """--mesh's ("data", "model") mesh: "N" puts all N devices on the
+    model axis ((1, N)); "DxM" is an explicit (data, model) grid.  Built
+    through make_test_mesh, so a host with fewer devices clamps (with a
+    warning) instead of crashing."""
+    if spec is None:
+        return None
+    from repro.launch.mesh import make_test_mesh
+    parts = spec.lower().split("x")
+    try:
+        dims = [int(p) for p in parts]
+    except ValueError:
+        raise SystemExit(f"--mesh wants N or DxM, got {spec!r}")
+    if len(dims) == 1:
+        shape = (1, dims[0])
+    elif len(dims) == 2:
+        shape = tuple(dims)
+    else:
+        raise SystemExit(f"--mesh wants N or DxM, got {spec!r}")
+    if any(d < 1 for d in shape):
+        raise SystemExit(f"--mesh dims must be >= 1, got {spec!r}")
+    return make_test_mesh(shape, ("data", "model"))
+
+
+def _mesh_shard_factors(packed, mesh):
+    """{param name: n_shards} under the mesh's sharding rules — what
+    plan_for_budget charges per device (computed pre-plan, so it covers
+    every packable group; bits-independent, the shard axis is never the
+    packed last dim)."""
+    from repro.core.paging import store_shard_axes
+    if mesh is None or "model" not in tuple(mesh.axis_names) \
+            or int(mesh.shape["model"]) < 2:
+        return None
+    store = packed_tree_store(packed, None)
+    return {name: n
+            for name, (_ax, n) in store_shard_axes(store, None, mesh).items()}
+
+
 def _serve(cfg, packed, plan, args, paged: bool,
            async_io: bool = None, kv_paged: bool = False, tracer=None,
-           faults=None):
+           faults=None, mesh=None):
     eng = ServingEngine(cfg, packed, batch_slots=args.slots,
                         max_len=args.max_len, plan=plan, seed=args.seed)
     if paged:
-        eng.attach_paging(faults=faults)
+        eng.attach_paging(faults=faults, mesh=mesh)
     if kv_paged:
         eng.attach_kv_paging(args.kv_block, faults=faults)
     sched = Scheduler(eng, prefill_chunk=args.prefill_chunk,
@@ -372,6 +426,18 @@ def main(argv=None):
     ap.add_argument("--kv-block", type=int, default=16,
                     help="KV page size in cache rows (vLLM-style fixed "
                          "blocks)")
+    ap.add_argument("--mesh", default=None, metavar="N|DxM",
+                    help="shard the paged store across an in-process "
+                         "('data', 'model') device mesh: N devices on "
+                         "the model axis (or an explicit DxM grid), each "
+                         "streaming only its shard's pages over its own "
+                         "link, joined at the tick fence under one "
+                         "global byte ledger.  Run with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=K; "
+                         "shapes clamp (with a warning) to the devices "
+                         "present.  The verify leg re-serves single-"
+                         "device and asserts tokens bit-exact plus the "
+                         "ledger/prediction identities")
     io = ap.add_mutually_exclusive_group()
     io.add_argument("--async-io", dest="async_io", action="store_true",
                     default=True,
@@ -433,6 +499,11 @@ def main(argv=None):
 
     params = tfm.init_params(cfg, jax.random.PRNGKey(0))
     packed = freeze_for_serving(params, bits=args.bits)
+    mesh = _build_serve_mesh(args.mesh)
+    shard_factors = _mesh_shard_factors(packed, mesh)
+    mesh_active = shard_factors is not None
+    if args.mesh is not None and not mesh_active:
+        print("--mesh: model axis clamped to 1 device; serving unsharded")
     if args.budget_mb is not None:
         # greedy hot-set plan over exactly the packed leaves the serving
         # dispatch reads (PACKABLE matmul weights; embed/norms never page)
@@ -441,17 +512,21 @@ def main(argv=None):
             sizes, int(args.budget_mb * 1024 * 1024),
             hot=Placement("l1mram", args.bits, "resident"),
             cold=Placement("l3flash", args.bits, "paged", args.page_bits),
-            sizes_bits=args.bits)
+            sizes_bits=args.bits, shard_factors=shard_factors)
         print(plan.summary(sizes))
         paged = plan.paged_bytes(sizes) > 0
     else:
         plan = PlacementPlan.uniform(args.scenario, bits=args.bits)
         paged = False
+    if mesh_active and not paged:
+        print("--mesh: nothing paged under this plan; serving unsharded")
+        mesh_active = False
 
     tracer = Tracer() if args.trace_json else None
     done, sched, eng = _serve(cfg, packed, plan, args, paged,
                               kv_paged=args.kv_paged, tracer=tracer,
-                              faults=_fault_plan(args))
+                              faults=_fault_plan(args),
+                              mesh=mesh if mesh_active else None)
     total_tokens = sum(len(r.generated) for r in done)
     place = ("mixed:" + "+".join(plan.scenarios_used())
              if not plan.is_uniform else plan.default.scenario)
@@ -474,6 +549,26 @@ def main(argv=None):
         if wire:
             print(f"page wire ({enc}): {wire} B streamed for {raw} B raw "
                   f"(x{raw / wire:.2f} compression vs fp32 dense)")
+    mesh_doc = None
+    if paged and mesh_active:
+        # the ledger's determinism contract: runtime per-device counters,
+        # summed, equal the static per-device kv_pass_counters replay
+        pred = eng.pager.predict(eng.page_resident_slots)
+        led = eng.pager.ledger.summary()
+        pred_ok = (led["swap_count"] == pred["swaps"]
+                   and led["miss_count"] == pred["misses"]
+                   and led["bytes_streamed_wire"] == pred["bytes_wire"]
+                   and led["bytes_streamed_raw"] == pred["bytes_raw"])
+        shape_s = "x".join(str(int(mesh.shape[a])) for a in mesh.axis_names)
+        link_wire = [d["bytes_streamed_wire"] for d in led["per_device"]]
+        print(f"mesh {shape_s}: {eng.pager.n_shards} device links, "
+              f"{len(eng.pager.shard_axes)} params sharded; per-link wire "
+              f"{link_wire} B; global ledger "
+              + ("MATCHES" if pred_ok else "DIVERGES FROM")
+              + " the static kv_pass_counters prediction")
+        mesh_doc = dict(shape=shape_s, n_devices=eng.pager.n_shards,
+                        sharded_params=len(eng.pager.shard_axes),
+                        ledger=led, predicted=pred, predicted_ok=pred_ok)
     if args.kv_paged:
         pg = summary["paging"]
         print(f"kv paging: {pg['kv_block_rows']}-row blocks, "
@@ -502,7 +597,7 @@ def main(argv=None):
                  f"/{sc['budget_tokens_per_tick']} tok/tick"
                  if args.token_budget else ""))
 
-    ok = True
+    ok = mesh_doc is None or mesh_doc["predicted_ok"]
     if (paged or args.kv_paged) and not args.no_verify:
         # the resident reference serves with fully resident weights AND a
         # fully resident KV cache — the pre-paging engine the paged runs
@@ -524,10 +619,13 @@ def main(argv=None):
         if args.async_io:
             # the overlapped pipeline must change WHEN pages move, never
             # what the step computes: re-serve on the blocking sync path
+            # (on a mesh, the sync leg is ALSO meshed — same N links,
+            # demand-fenced)
             sref, ssched, seng = _serve(cfg, packed, plan, args,
                                         paged=paged, async_io=False,
                                         kv_paged=args.kv_paged,
-                                        faults=_fault_plan(args))
+                                        faults=_fault_plan(args),
+                                        mesh=mesh if mesh_active else None)
             sync_tokens = {r.uid: r.generated for r in sref}
             sync_ok = got == sync_tokens
             ctr_ok = (seng.swap_count == eng.swap_count
@@ -545,6 +643,49 @@ def main(argv=None):
                 seng.pager.close()
             if seng.kv_table is not None:
                 seng.kv_table.close()
+        if paged and mesh_active:
+            # the headline guarantee: the mesh changes WHERE pages live
+            # and WHICH link moves them, never what the step computes —
+            # the single-device paged run (same plan) must match token
+            # for token, tick for tick, and the byte ledgers must obey
+            # the sharding algebra: global wire/raw EQUAL (every shard's
+            # rows cross exactly one link, replicated params page once on
+            # device 0), per-link wire STRICTLY SMALLER when anything
+            # shards.
+            uref, usched, ueng = _serve(cfg, packed, plan, args,
+                                        paged=True,
+                                        kv_paged=args.kv_paged,
+                                        faults=_fault_plan(args))
+            uni_tokens = {r.uid: r.generated for r in uref}
+            mesh_exact = (got == uni_tokens
+                          and usched.ticks == sched.ticks)
+            single_wire = ueng.pager.bytes_streamed_wire
+            single_raw = ueng.pager.bytes_streamed_raw
+            link_max = max(d["bytes_streamed_wire"]
+                           for d in mesh_doc["ledger"]["per_device"])
+            ledger_ok = (eng.pager.bytes_streamed_wire == single_wire
+                         and eng.pager.bytes_streamed_raw == single_raw
+                         and (not eng.pager.shard_axes
+                              or link_max < single_wire))
+            ok = ok and mesh_exact and ledger_ok
+            print("verify: mesh tokens "
+                  + ("BIT-EXACT vs single-device paged run" if mesh_exact
+                     else "MISMATCH vs single-device paged run")
+                  + (", byte ledger obeys the sharding algebra"
+                     if ledger_ok else
+                     f", ledger VIOLATION (global {eng.pager.bytes_streamed_wire}"
+                     f"/{eng.pager.bytes_streamed_raw} B vs single "
+                     f"{single_wire}/{single_raw} B, link max {link_max} B)"))
+            mesh_doc.update(
+                bit_exact=mesh_exact, ledger_ok=ledger_ok,
+                per_link_max_wire=int(link_max),
+                single_device=dict(bytes_streamed_wire=int(single_wire),
+                                   bytes_streamed_raw=int(single_raw),
+                                   swaps=int(ueng.pager.swap_count),
+                                   ticks=int(usched.ticks)))
+            ueng.pager.close()
+            if ueng.kv_table is not None:
+                ueng.kv_table.close()
 
     print(sched.metrics.to_json(paging=eng.paging_summary(),
                                 trace=sched.trace_summary(),
@@ -553,7 +694,8 @@ def main(argv=None):
         sched.metrics.write(args.metrics_json,
                             paging=eng.paging_summary(),
                             trace=sched.trace_summary(),
-                            faults=sched.faults_summary())
+                            faults=sched.faults_summary(),
+                            **({"mesh": mesh_doc} if mesh_doc else {}))
         print(f"metrics written to {args.metrics_json}")
     if tracer is not None:
         validate_trace(tracer.to_dict())

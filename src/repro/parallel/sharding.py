@@ -117,31 +117,75 @@ def param_shardings(params_tree: Any, mesh: Mesh) -> Any:
         jax.tree_util.tree_structure(params_tree), out)
 
 
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
 def opt_state_shardings(opt_state: Any, mesh: Mesh, params_tree: Any) -> Any:
     """Optimizer-state shardings: moments mirror their parameter; factored
-    Adafactor vectors / scalars fall back to shape rules."""
-    param_shards = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(params_tree)[0]:
-        keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
-                     for p in path)
-        param_shards[tuple(leaf.shape)] = _param_pspec(keys, tuple(leaf.shape),
-                                                       mesh)
+    Adafactor vectors / scalars fall back to shape rules.
 
-    def per_leaf(leaf):
+    Moments are matched by TREE PATH, not bare shape: optimizer states
+    embed the parameter path as a suffix (AdamW's ``mu``/``nu`` wrap the
+    whole param tree), and two same-shape params can carry different
+    partition specs — a shape-keyed lookup would silently collide
+    (last-one-wins).  Shape lookup survives only as a fallback for
+    pathless leaves, and only when every param of that shape agrees."""
+    by_path: Dict[Tuple[str, ...], Tuple[Tuple[int, ...], P]] = {}
+    by_shape: Dict[Tuple[int, ...], list] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_tree)[0]:
+        keys = _path_keys(path)
         shape = tuple(leaf.shape)
-        if shape in param_shards:
-            return NamedSharding(mesh, param_shards[shape])
+        spec = _param_pspec(keys, shape, mesh)
+        by_path[keys] = (shape, spec)
+        by_shape.setdefault(shape, []).append(spec)
+
+    def resolve(keys: Tuple[str, ...], shape: Tuple[int, ...]) -> P:
+        # longest matching path suffix wins (the opt-state path prefixes
+        # the param path with e.g. (0, 'mu'))
+        for start in range(len(keys)):
+            hit = by_path.get(keys[start:])
+            if hit is not None and hit[0] == shape:
+                return hit[1]
+        specs = by_shape.get(shape)
+        if specs is not None and all(s == specs[0] for s in specs):
+            return specs[0]                        # unambiguous shape
         if len(shape) == 0:
-            return NamedSharding(mesh, P())
+            return P()
         # factored vectors: shard the largest shardable dim on model
         spec = [None] * len(shape)
         for i in sorted(range(len(shape)), key=lambda i: -shape[i]):
             if _div(shape[i], mesh, "model"):
                 spec[i] = "model"
                 break
-        return NamedSharding(mesh, P(*spec))
+        return P(*spec)
 
-    return jax.tree_util.tree_map(per_leaf, opt_state)
+    def per_leaf(path, leaf):
+        return NamedSharding(mesh, resolve(_path_keys(path),
+                                           tuple(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, opt_state)
+
+
+def shard_axis(path_keys: Sequence[str], shape: Tuple[int, ...],
+               mesh: Mesh) -> Optional[Tuple[int, int]]:
+    """(axis, n_shards) the plan tensor-shards this param on, or None.
+
+    Mirrors :func:`_param_pspec`: the first NON-LAST dim the spec pins to
+    the "model" axis, provided it divides evenly.  The last (in-features /
+    packed) dim is excluded on purpose — the packed payload's per-row
+    scales span whole rows, so only leading-dim slices keep the page wire
+    codec's shard-then-decode == decode-then-shard identity."""
+    n = _axis_size(mesh, "model")
+    if n <= 1:
+        return None
+    spec = _param_pspec(tuple(path_keys), tuple(shape), mesh)
+    for ax, entry in enumerate(spec):
+        if ax >= len(shape) - 1:
+            break
+        if entry == "model" and shape[ax] % n == 0 and shape[ax] >= n:
+            return (ax, n)
+    return None
 
 
 # ---------------------------------------------------------------------------

@@ -301,7 +301,10 @@ class ServingEngine:
                       pool: Optional[Any] = None,
                       name: Optional[str] = None,
                       faults: Optional[Any] = None,
-                      wire_serve: bool = False) -> "ServingEngine":
+                      wire_serve: bool = False,
+                      mesh: Optional[Any] = None,
+                      shard_budget_bytes: Optional[int] = None
+                      ) -> "ServingEngine":
         """Put the plan's paged parameters behind a
         :class:`~repro.core.paging.HostPagedStore`.
 
@@ -328,10 +331,20 @@ class ServingEngine:
         ``linear`` dispatches those params to the blockscale matmul
         (:func:`repro.core.placement.wire_served_bits`).  Params the
         predicate excludes (fp/identity pages, non-int8 encodings, other
-        scenarios) keep the host-decode path unchanged."""
-        from repro.core.paging import HostPagedStore, packed_tree_store, \
-            thread_packed
-        from repro.core.weight_store import PackedParam
+        scenarios) keep the host-decode path unchanged.
+
+        ``mesh`` (a jax Mesh with a "model" axis of size > 1) shards the
+        paged store across the mesh's model devices instead: each device
+        streams only its shard's pages through its own per-device link
+        (:class:`~repro.core.paging.ShardedPagedStore`), the tick's fence
+        joins all the per-device streams, and ``shard_budget_bytes`` — if
+        given — splits one global byte budget into per-device page pools
+        under a :class:`~repro.core.paging.ShardedPoolLedger`.  A mesh
+        whose model axis has size 1 falls back to the single-device path
+        unchanged.  Mutually exclusive with ``pool`` (the ledger owns the
+        per-device pools)."""
+        from repro.core.paging import HostPagedStore, ShardedPagedStore, \
+            packed_tree_store, thread_packed
 
         if resident_slots < 1:
             raise ValueError(f"resident_slots must be >= 1, got "
@@ -350,36 +363,32 @@ class ServingEngine:
                              "stream — use the engine without paging")
         if page_bytes is None:
             page_bytes = max(store.params[n].nbytes_packed for n in paged)
-        self.pager = HostPagedStore(store, page_bytes, plan=self.plan,
-                                    pool=pool,
-                                    name=name if name is not None
-                                    else "default",
-                                    faults=faults)
+        mesh_wide = (mesh is not None
+                     and "model" in tuple(getattr(mesh, "axis_names", ()))
+                     and int(mesh.shape["model"]) > 1)
+        if mesh_wide:
+            if pool is not None:
+                raise ValueError("mesh= and pool= are mutually exclusive: "
+                                 "the sharded ledger owns its per-device "
+                                 "pools")
+            self.pager = ShardedPagedStore(
+                store, page_bytes, mesh, plan=self.plan,
+                budget_bytes=shard_budget_bytes,
+                name=name if name is not None else "default",
+                faults=faults)
+        else:
+            self.pager = HostPagedStore(store, page_bytes, plan=self.plan,
+                                        pool=pool,
+                                        name=name if name is not None
+                                        else "default",
+                                        faults=faults)
         self.page_resident_slots = resident_slots
         # repoint the template tree: resident groups at the pager's pinned
         # device copies, cold groups at the HOST image — nothing stays
-        # device-resident behind the pager's back.
-        # the template only fixes shapes/dtypes — decode each host wire
-        # image back to the device layout so re-encoded (compressed) cold
-        # groups present the same leaves a streamed page will fill
-        host_view = {}
-        for pname, hp in self.pager._host.items():
-            if pname in self.pager.wire_served:
-                # wire-served leaves keep the {"packed","scale"} dict keys
-                # but hold the WIRE buffers — the treedef stays stable and
-                # the jit traces once with wire shapes (leading dims
-                # restored to the device carrier's, as the fetch path does)
-                lead = hp.packed_shape[:-1]
-                host_view[pname] = PackedParam(
-                    packed=hp.payload.reshape(*lead, -1),
-                    scale=hp.scales.reshape(*lead, -1),
-                    bits=hp.page_bits,
-                    orig_shape=hp.orig_shape)
-                continue
-            packed, scale = hp.decode()
-            host_view[pname] = PackedParam(packed=packed, scale=scale,
-                                           bits=hp.bits,
-                                           orig_shape=hp.orig_shape)
+        # device-resident behind the pager's back.  The template only
+        # fixes shapes/dtypes; template_view() presents exactly the
+        # leaves a streamed (and, on a mesh, joined) page will fill.
+        host_view = self.pager.template_view()
         self.params = thread_packed(self.params,
                                     {**self.pager.resident, **host_view})
         self._build_thread_template(set(host_view))
@@ -779,7 +788,11 @@ class ServingEngine:
             kv_preempt_drops=0 if kv is None else kv.preempt_drops,
             kv_exposed_s=self.kv_stall_s,
             kv_hidden_s=self.kv_hidden_s,
-            kv_block_rows=0 if kv is None else kv.block_rows)
+            kv_block_rows=0 if kv is None else kv.block_rows,
+            # metrics/v9: per-device counter rows when the pager is a
+            # mesh-sharded store ([] on single-device runs)
+            devices=(getattr(self.pager, "device_summaries", lambda: [])()
+                     if self.pager is not None else []))
 
     def faults_summary(self) -> Dict[str, int]:
         """Fault-path counters summed over the engine's paging components

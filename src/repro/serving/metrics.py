@@ -11,12 +11,12 @@ behind compute by the async paging pipeline), deadline-miss rate per
 stream, and aggregate token throughput.
 
 Everything is emitted as one JSON document (schema
-``repro.serving.metrics/v8``) so the bench trajectory
+``repro.serving.metrics/v9``) so the bench trajectory
 (``benchmarks/serving_load.py`` -> ``BENCH_serving.json``) and the
 launcher (``repro.launch.serve --metrics-json``) share a format:
 
     {
-      "schema": "repro.serving.metrics/v8",
+      "schema": "repro.serving.metrics/v9",
       "ticks":      {"count", "latency_ms": {mean,p50,p99,max},
                      "paging_exposed_ms": {mean,p50,p99,max},
                      "paging_hidden_ms":  {mean,p50,p99,max}},
@@ -33,7 +33,10 @@ launcher (``repro.launch.serve --metrics-json``) share a format:
                      "bytes_streamed_raw", "bytes_streamed_wire",
                      "kv_swaps", "kv_pool_hits", "kv_writebacks",
                      "kv_dropped", "kv_preempt_drops", "kv_exposed_s",
-                     "kv_hidden_s", "kv_block_rows"},
+                     "kv_hidden_s", "kv_block_rows",
+                     "devices": [{"device", "n_pages", "swap_count",
+                                  "miss_count", "bytes_streamed_wire",
+                                  "bytes_streamed_raw"}]},
       "trace":      {"events", "tracks",
                      "predicted_vs_measured_stall_ratio"},
       "faults":     {"injected", "retries", "checksum_failures",
@@ -49,6 +52,17 @@ Requests without a deadline never count toward the miss rate, and
 service) are excluded from it and reported under their own counter.
 Requests the admission controller REJECTED never became requests at all
 (no service, no tokens): they appear only in ``scheduler.rejected``.
+
+v9 vs v8: the ``paging`` section grew ``devices`` — the per-device
+counter rows of a mesh-sharded paged run (``--mesh NxM``): one entry per
+device link carrying ``device``, ``n_pages``, ``swap_count``,
+``miss_count`` and the wire/raw byte ledger for that link alone, so the
+global ``paging`` counters are auditable as the SUM of their per-device
+split (the :class:`~repro.core.paging.ShardedPoolLedger` aggregation).
+An unsharded run reports ``devices: []`` — the list's *presence* is what
+marks a v9 payload; an empty list just means one device.
+:func:`validate` rejects v8 payloads — wrong schema string, or a
+``paging`` section without ``devices``.
 
 v8 vs v7: the ``faults`` section is new — fault-tolerant page I/O
 (``repro.core.faults``): counts of injected faults, fetch ``retries``,
@@ -97,12 +111,12 @@ per-tick ``paging_stall_ms`` became the ``paging_exposed_ms`` /
 ``exposed_s``.)
 
 Multi-model tenancy (``repro.serving.tenancy.MultiScheduler``) emits the
-v8 *multi* shape instead: per-model sections of the document above plus
+v9 *multi* shape instead: per-model sections of the document above plus
 the shared page pool's contention stats (KV page tables appear as their
 own ``<model>/kv`` members)::
 
     {
-      "schema": "repro.serving.metrics/v8",
+      "schema": "repro.serving.metrics/v9",
       "ticks":       {"count"},                     # MultiScheduler ticks
       "models":      {name: <single-model document, sans schema>},
       "shared_pool": {"budget_bytes", "live_bytes", "live_wire_bytes",
@@ -140,7 +154,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-SCHEMA = "repro.serving.metrics/v8"
+SCHEMA = "repro.serving.metrics/v9"
 
 
 def quantiles(xs: List[float]) -> Dict[str, float]:
@@ -158,7 +172,8 @@ def _empty_paging() -> Dict[str, Any]:
                 bytes_streamed_raw=0, bytes_streamed_wire=0,
                 kv_swaps=0, kv_pool_hits=0, kv_writebacks=0, kv_dropped=0,
                 kv_preempt_drops=0,
-                kv_exposed_s=0.0, kv_hidden_s=0.0, kv_block_rows=0)
+                kv_exposed_s=0.0, kv_hidden_s=0.0, kv_block_rows=0,
+                devices=[])
 
 
 def _empty_faults() -> Dict[str, int]:
@@ -487,7 +502,11 @@ _SINGLE_KEYS = {
                "kv_swaps", "kv_pool_hits", "kv_writebacks", "kv_dropped",
                # v5: preemption's share of the dropped blocks
                "kv_preempt_drops",
-               "kv_exposed_s", "kv_hidden_s", "kv_block_rows"),
+               "kv_exposed_s", "kv_hidden_s", "kv_block_rows",
+               # v9: per-device split of a mesh-sharded run — its
+               # presence (even as []) is exactly what marks a stale v8
+               # payload
+               "devices"),
     # v6: chrome-trace observability — its absence is exactly what marks
     # a stale v5 payload
     "trace": ("events", "tracks", "predicted_vs_measured_stall_ratio"),
@@ -522,7 +541,7 @@ def _validate_single(doc: Dict[str, Any], where: str) -> None:
 
 
 def validate(doc: Dict[str, Any]) -> Dict[str, Any]:
-    """Assert ``doc`` is a well-formed ``repro.serving.metrics/v8``
+    """Assert ``doc`` is a well-formed ``repro.serving.metrics/v9``
     document (either the single-model or the multi-model shape); returns
     the document unchanged so it can be used inline.  Raises ValueError
     naming the first missing piece."""

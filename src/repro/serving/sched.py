@@ -460,7 +460,14 @@ class Scheduler:
     def tick_fence(self) -> tuple:
         """Phase 1: fence the page pass begun last tick (demand-begins a
         blocking one on the cold first tick / in sync mode) and stamp the
-        tick start.  Returns ``(t0, params)`` for :meth:`tick_compute`."""
+        tick start.  Returns ``(t0, params)`` for :meth:`tick_compute`.
+
+        On a mesh-sharded engine the fence joins one stream PER DEVICE
+        LINK (:class:`~repro.core.paging.JoinedPageStream`): the tick
+        waits for the slowest link, and a fetch-deadline expiry on any
+        link defers the tick with EVERY per-device pass left resumable —
+        the :class:`~repro.core.faults.PageFetchTimeout`'s ``model``
+        names the offending link's store (``<name>@dev<i>``)."""
         t0 = self.clock()
         self.metrics.start()                     # wall clock spans tick 1
         tr = self.tracer

@@ -24,7 +24,7 @@ behavior.  This module is that claim's serving-side realization:
     :func:`~repro.core.paging.shared_pass_counters` prediction, because
     tenants stream sequentially per tick);
   * per-model deadline accounting lands in the
-    ``repro.serving.metrics/v8`` multi shape (per-model sections plus the
+    ``repro.serving.metrics/v9`` multi shape (per-model sections plus the
     shared pool's contention stats and the exposed/hidden paging-stall
     split) via :func:`~repro.serving.metrics.multi_summary`;
   * the tick loop is the async paging **software pipeline**: per tick,
@@ -369,7 +369,7 @@ class MultiScheduler:
 
     # -- metrics / lifecycle --------------------------------------------------
     def summary(self) -> Dict:
-        """The ``repro.serving.metrics/v8`` multi-model document."""
+        """The ``repro.serving.metrics/v9`` multi-model document."""
         models = {name: sched.metrics.summary(
                       paging=sched.engine.paging_summary(),
                       trace=sched.trace_summary(),

@@ -500,11 +500,11 @@ def test_multischeduler_close_cancels_inflight_passes(rng, packed,
     assert not ms.pool._active_fetch
 
 
-def test_metrics_v8_schema_validates_and_rejects_stale():
+def test_metrics_v9_schema_validates_and_rejects_stale():
     from repro.serving import MetricsRecorder
     from repro.serving.metrics import SCHEMA, _empty_paging
 
-    assert SCHEMA == "repro.serving.metrics/v8"
+    assert SCHEMA == "repro.serving.metrics/v9"
     rec = MetricsRecorder(clock=lambda: 0.0)
     rec.record_tick(latency_s=0.002, paging_exposed_s=0.0005,
                     paging_hidden_s=0.002)
@@ -535,6 +535,11 @@ def test_metrics_v8_schema_validates_and_rejects_stale():
     v7 = {k: v for k, v in doc.items() if k != "faults"}
     with pytest.raises(ValueError, match="faults"):
         validate(v7)
+    # a v8-shaped payload (no per-device split) likewise
+    v8_paging = {k: v for k, v in _empty_paging().items()
+                 if k != "devices"}
+    with pytest.raises(ValueError, match="devices"):
+        validate(dict(doc, paging=v8_paging))
     broken = dict(doc, paging=dict(swap_count=0, miss_count=0,
                                    stall_s=0.0, n_pages=0))
     with pytest.raises(ValueError, match="exposed_s"):

@@ -220,6 +220,191 @@ def test_pipeline_parallel_equivalence():
     """)
 
 
+def test_opt_state_shardings_keyed_by_path_not_shape():
+    """Two same-shape params with DIFFERENT partition specs must keep
+    their own specs through the optimizer-state mirror — the shape-keyed
+    lookup this replaces silently collided (last-one-wins)."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_test_mesh
+    from repro.parallel import sharding as shd
+
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    # conv_w's rule is P(model, None); a generic 2-D (out, in) matmul
+    # weight gets P(model, data) — same (8, 8) shape, different specs
+    params = dict(conv_w=jnp.zeros((8, 8)), wq=jnp.zeros((8, 8)))
+    assert (shd._param_pspec(("conv_w",), (8, 8), mesh)
+            != shd._param_pspec(("wq",), (8, 8), mesh))
+    opt_state = dict(mu=params, nu=params)
+    out = shd.opt_state_shardings(opt_state, mesh, params)
+    for moment in ("mu", "nu"):
+        assert out[moment]["conv_w"].spec == P("model", None)
+        assert out[moment]["wq"].spec == P("model", "data")
+
+
+def test_make_test_mesh_clamps_to_available_devices():
+    """A shape wanting more devices than the host exposes degrades (with
+    a warning) instead of raising, keeping the axis NAMES intact."""
+    import jax
+    from repro.launch.mesh import make_test_mesh
+
+    want = (jax.device_count() + 1, 2)
+    with pytest.warns(UserWarning, match="clamping"):
+        mesh = make_test_mesh(want, ("data", "model"))
+    assert tuple(mesh.axis_names) == ("data", "model")
+    assert mesh.devices.size <= jax.device_count()
+
+
+def test_plan_for_budget_charges_sharded_params_per_device():
+    """shard_factors: a param sharded n ways pins only 1/n of its bytes
+    per device, so a tight per-device budget admits it resident where
+    the unsharded charge would have paged it."""
+    from repro.core.placement import Placement, plan_for_budget
+
+    sizes = {"a": 1000, "b": 1000}
+    hot = Placement("l1mram", 8, "resident")
+    cold = Placement("l3flash", 8, "paged")
+    flat = plan_for_budget(sizes, 500, hot=hot, cold=cold)
+    assert flat.placement_for("a").residency == "paged"
+    assert flat.placement_for("b").residency == "paged"
+    plan = plan_for_budget(sizes, 500, hot=hot, cold=cold,
+                           shard_factors={"a": 4})
+    assert plan.placement_for("a").residency == "resident"  # 250 B/device
+    assert plan.placement_for("b").residency == "paged"     # 1000 > 250 left
+    # per-device budget respected: resident charge is the sharded one
+    assert -(-sizes["a"] // 4) <= 500
+
+
+def test_packed_sizes_shard_factors_divide():
+    import numpy as np
+    from repro.core.placement import packed_sizes
+
+    tree = {"wq": {"packed": np.zeros((8, 16), np.uint8),
+                   "scale": np.zeros((8, 1), np.float32)}}
+    whole = packed_sizes(tree)
+    per_dev = packed_sizes(tree, shard_factors={"wq": 4})
+    assert whole["wq"] == 128
+    assert per_dev["wq"] == -(-whole["wq"] // 4)
+
+
+_SHARDED_SERVE = """
+    import json, os, sys, tempfile
+    from repro.launch import serve
+
+    path = os.path.join(tempfile.mkdtemp(), "BENCH_mesh_test.json")
+    argv = ["--smoke", "--budget-mb", "0.05", "--requests", "3",
+            "--max-new", "4", "--mesh", "4", "--metrics-json", path]
+    {extra}
+    serve.main(argv)
+    doc = json.load(open(path))
+    mesh = doc["mesh"]
+    assert mesh["n_devices"] == 4, mesh
+    assert mesh["sharded_params"] > 0, mesh
+    assert mesh["bit_exact"] is True, mesh
+    assert mesh["predicted_ok"] is True, mesh
+    assert mesh["ledger_ok"] is True, mesh
+    led = mesh["ledger"]
+    assert len(led["per_device"]) == 4
+    for key in ("swap_count", "miss_count", "bytes_streamed_wire",
+                "bytes_streamed_raw"):
+        assert led[key] == sum(d[key] for d in led["per_device"]), key
+    # the global ledger equals the single-device one; every link moves
+    # strictly less than the single link did
+    single = mesh["single_device"]
+    assert led["bytes_streamed_wire"] == single["bytes_streamed_wire"]
+    assert mesh["per_link_max_wire"] < single["bytes_streamed_wire"]
+    assert doc["paging"]["devices"] == led["per_device"]
+    print("OK")
+"""
+
+
+@pytest.mark.slow
+@needs_mesh
+def test_sharded_serving_bit_exact_fp_pages():
+    """Mesh-sharded paged serving (fp pages) on a 1x4 mesh: serve.main's
+    verify legs gate tokens bit-exact vs the single-device paged run
+    (async AND sync — the sync leg is meshed too) and the per-device
+    ledger summing to the global kv_pass_counters prediction."""
+    run_devices(_SHARDED_SERVE.format(extra=""), n=4)
+
+
+@pytest.mark.slow
+@needs_mesh
+def test_sharded_serving_bit_exact_int8_pages():
+    """Same gates with int8-encoded page wire (--page-bits 8, the
+    run-quantized identity): per-row scales slice along the shard axis
+    with their rows, so shard-then-encode == encode-then-shard."""
+    run_devices(
+        _SHARDED_SERVE.format(extra='argv += ["--page-bits", "8"]'), n=4)
+
+
+@pytest.mark.slow
+@needs_mesh
+def test_sharded_store_join_and_no_orphaned_pass():
+    """ShardedPagedStore mechanics, below the engine: the joined fence
+    reconstructs every sharded param's device bytes exactly, and an
+    early close releases EVERY per-device pool's pass guard (no orphaned
+    pass blocks the next one)."""
+    run_devices("""
+        import numpy as np
+        import jax
+        from repro.configs import ARCHS
+        from repro.core.paging import ShardedPagedStore, packed_tree_store
+        from repro.launch.mesh import make_test_mesh
+        from repro.models import transformer as tfm
+        from repro.parallel.sharding import freeze_for_serving
+
+        cfg = ARCHS["qwen3-0.6b"].smoke().replace(
+            d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            vocab_size=256)
+        packed = freeze_for_serving(
+            tfm.init_params(cfg, jax.random.PRNGKey(0)), bits=8)
+        store = packed_tree_store(packed, None)   # plan-less: all paged
+        mesh = make_test_mesh((1, 4), ("data", "model"))
+        page_bytes = max(p.nbytes_packed for p in store.params.values())
+        sps = ShardedPagedStore(store, page_bytes, mesh, plan=None,
+                                budget_bytes=1 << 22)
+        assert sps.shard_axes, "smoke net must shard something"
+
+        # a fenced pass joins the per-device fetches byte-exactly
+        with sps.begin_pass() as ps1:
+            dev = ps1.fence()
+        for name, (ax, n) in sps.shard_axes.items():
+            np.testing.assert_array_equal(
+                np.asarray(dev[name].packed),
+                np.asarray(store.params[name].packed))
+            np.testing.assert_array_equal(
+                np.asarray(dev[name].scale),
+                np.asarray(store.params[name].scale))
+            assert dev[name].orig_shape == store.params[name].orig_shape
+
+        # runtime counters match the ledger's static prediction (every
+        # begun pass fenced so far — the determinism precondition)
+        pred = sps.predict()
+        assert sps.swap_count == pred["swaps"], (sps.swap_count, pred)
+        assert sps.bytes_streamed_wire == pred["bytes_wire"]
+
+        # early close: the joined stream was never fenced, yet every
+        # per-device pool guard is released — no orphaned pass
+        ps = sps.begin_pass()
+        ps.close()
+        for pool in sps.ledger.pools:
+            assert not pool._active_fetch, pool._active_fetch
+        try:
+            ps.fence()
+            raise AssertionError("fence after close must raise")
+        except RuntimeError:
+            pass
+
+        # and the store still serves: the next pass begins and fences
+        with sps.begin_pass() as ps3:
+            dev3 = ps3.fence()
+        assert set(dev3) == set(dev)
+        sps.close()
+        print("OK")
+    """, n=4)
+
+
 @pytest.mark.slow
 @needs_mesh
 def test_elastic_checkpoint_restore_across_meshes(tmp_path):

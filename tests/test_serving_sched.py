@@ -455,9 +455,9 @@ def test_metrics_schema_and_deadlines():
                                   kv_writebacks=3, kv_dropped=0,
                                   kv_preempt_drops=0,
                                   kv_exposed_s=0.0002, kv_hidden_s=0.001,
-                                  kv_block_rows=16))
+                                  kv_block_rows=16, devices=[]))
     validate(doc)
-    assert doc["schema"] == "repro.serving.metrics/v8"
+    assert doc["schema"] == "repro.serving.metrics/v9"
     assert doc["deadlines"] == dict(with_deadline=2, missed=1,
                                     miss_rate=0.5, truncated=0)
     assert doc["requests"]["count"] == 3
